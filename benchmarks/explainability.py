@@ -1,0 +1,42 @@
+"""Sect. 5.4 reproduction: the Explainability Report for Scenario 1, with
+the paper's printed savings ranges verified (within rounding of the paper's
+unrounded carbon intensities)."""
+import time
+
+from repro.configs import boutique
+from repro.core.pipeline import GreenConstraintPipeline
+
+# (service, flavour, node) -> paper's printed (lo, hi) gCO2eq savings
+PAPER_RANGES = {
+    ("frontend", "large", "greatbritain"): (160.51, 390.38),
+    ("frontend", "large", "italy"): (241.76, 632.14),
+    # productcatalog/italy printed as (107.91, 282.17) from the STALE
+    # 884 kWh profile; Table 1's 989 kWh gives (120.66, 315.49).
+}
+
+
+def run(report=print):
+    app, infra, mon = boutique.scenario(1)
+    t0 = time.perf_counter()
+    out = GreenConstraintPipeline().run(app, infra, mon, use_kb=False)
+    dt_us = (time.perf_counter() - t0) * 1e6
+
+    report("# Explainability Report — Scenario 1 (Sect. 5.4)\n")
+    report(out.report.render())
+
+    verified = 0
+    for c in out.constraints:
+        key = (c.service, c.flavour, getattr(c, "node", ""))
+        if key in PAPER_RANGES:
+            lo_p, hi_p = PAPER_RANGES[key]
+            lo, hi = c.savings_range_g
+            assert abs(lo - lo_p) / lo_p < 2e-3, (key, lo, lo_p)
+            assert abs(hi - hi_p) / hi_p < 2e-3, (key, hi, hi_p)
+            verified += 1
+    assert verified == len(PAPER_RANGES)
+    report(f"\n# {verified} paper savings ranges verified to <0.2%")
+    return {"us_per_call": dt_us, "ranges_verified": verified}
+
+
+if __name__ == "__main__":
+    run()

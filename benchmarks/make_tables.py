@@ -1,0 +1,88 @@
+"""Regenerate the EXPERIMENTS.md data tables from the dry-run artifacts
+(single source of truth: dryrun_results.jsonl / opt_results.jsonl).
+
+  PYTHONPATH=src python -m benchmarks.make_tables          # print all
+"""
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.jsonl")
+OPT = os.path.join(os.path.dirname(__file__), "..", "opt_results.jsonl")
+
+
+def load(path, multi_pod=None):
+    out = {}
+    for line in open(path):
+        r = json.loads(line)
+        if r["status"] != "ok":
+            continue
+        if multi_pod is not None and r["multi_pod"] != multi_pod:
+            continue
+        out[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return out
+
+
+def roofline_block(report=print):
+    recs = load(BASE, multi_pod=False)
+    report("```")
+    report(f"{'arch':<24}{'shape':<13}{'compute_s':>10}{'memory_s':>10}"
+           f"{'coll_s':>10} {'bottleneck':<11}{'useful':>7}{'roof%':>7}")
+    for key in sorted(recs):
+        r = recs[key]
+        f = r["roofline"]
+        report(f"{r['arch']:<24}{r['shape']:<13}"
+               f"{f['compute_s']:>10.4f}{f['memory_s']:>10.4f}"
+               f"{f['collective_s']:>10.4f} {f['bottleneck']:<11}"
+               f"{f['useful_flops_ratio']:>7.3f}"
+               f"{100 * f['roofline_fraction']:>6.1f}%")
+    report("(+ 8 long_500k cells skipped: sub-quadratic attention required)")
+    report("```")
+
+
+def multipod_block(report=print):
+    m0 = load(BASE, multi_pod=False)
+    m1 = load(BASE, multi_pod=True)
+    report("| arch (train_4k) | 16x16 c/m/x | 2x16x16 c/m/x "
+           "| frac 1-pod | frac 2-pod |")
+    report("|---|---|---|---|---|")
+    for key in sorted(m0):
+        arch, shape, _ = key
+        if shape != "train_4k":
+            continue
+        f0 = m0[key]["roofline"]
+        f1 = m1[(arch, shape, True)]["roofline"]
+        report(f"| {arch} | {f0['compute_s']:.2f}/{f0['memory_s']:.2f}/"
+               f"{f0['collective_s']:.2f} | {f1['compute_s']:.2f}/"
+               f"{f1['memory_s']:.2f}/{f1['collective_s']:.2f} | "
+               f"{f0['roofline_fraction']*100:.2f}% | "
+               f"{f1['roofline_fraction']*100:.2f}% |")
+
+
+def optimized_block(report=print, threshold=0.03):
+    base = load(BASE, multi_pod=False)
+    opt = load(OPT, multi_pod=False)
+    report("| arch | shape | base frac | opt frac | gain "
+           "| opt bottleneck (c/m/x s) |")
+    report("|---|---|---|---|---|---|")
+    for key in sorted(base):
+        b = base[key]["roofline"]
+        o = opt.get(key, {}).get("roofline")
+        if o is None or not b["roofline_fraction"]:
+            continue
+        g = o["roofline_fraction"] / b["roofline_fraction"]
+        if abs(g - 1) < threshold:
+            continue
+        report(f"| {key[0]} | {key[1]} | "
+               f"{100*b['roofline_fraction']:.2f}% | "
+               f"{100*o['roofline_fraction']:.2f}% | {g:.1f}x | "
+               f"{o['bottleneck']} ({o['compute_s']:.2f}/"
+               f"{o['memory_s']:.2f}/{o['collective_s']:.2f}) |")
+
+
+if __name__ == "__main__":
+    print("== §Roofline baseline (single pod) ==")
+    roofline_block()
+    print("\n== §Dry-run multi-pod scaling (train cells) ==")
+    multipod_block()
+    print("\n== §Perf optimized vs baseline ==")
+    optimized_block()

@@ -1,0 +1,66 @@
+"""§Roofline: the per-(arch x shape) roofline table, read from the dry-run
+artifact (benchmarks never re-lower; the dry-run is the single source of
+truth).
+
+  compute_s    = HLO_FLOPs / (chips x 197 TFLOP/s)
+  memory_s     = HLO_bytes / (chips x 819 GB/s)
+  collective_s = collective_bytes / (chips x 50 GB/s/link)
+
+Run ``PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+--out dryrun_results.jsonl`` first (or let benchmarks.run do a reduced
+sweep)."""
+import json
+import os
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.jsonl")
+
+
+def load(path=DEFAULT_PATH):
+    if not os.path.exists(path):
+        return []
+    recs = [json.loads(line) for line in open(path)]
+    # keep the latest record per cell
+    out = {}
+    for r in recs:
+        out[(r["arch"], r["shape"], r["multi_pod"])] = r
+    return list(out.values())
+
+
+def run(report=print, path=DEFAULT_PATH, multi_pod=False):
+    recs = [r for r in load(path) if r["multi_pod"] == multi_pod]
+    if not recs:
+        report(f"# no dry-run records at {path}; run repro.launch.dryrun first")
+        return {"cells": 0}
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    failed = [r for r in recs if r["status"] == "error"]
+
+    mesh = "2x16x16 (512 chips)" if multi_pod else "16x16 (256 chips)"
+    report(f"# Roofline table — mesh {mesh}: {len(ok)} cells ok, "
+           f"{len(skipped)} skipped (assignment-mandated), "
+           f"{len(failed)} FAILED")
+    hdr = (f"{'arch':<24}{'shape':<13}{'compute_s':>10}{'memory_s':>10}"
+           f"{'coll_s':>10} {'bottleneck':<11}{'useful':>7}{'roof%':>7}")
+    report(hdr)
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        f = r["roofline"]
+        report(
+            f"{r['arch']:<24}{r['shape']:<13}"
+            f"{f['compute_s']:>10.4f}{f['memory_s']:>10.4f}"
+            f"{f['collective_s']:>10.4f} {f['bottleneck']:<11}"
+            f"{f['useful_flops_ratio']:>7.3f}"
+            f"{100 * f['roofline_fraction']:>6.1f}%"
+        )
+    for r in skipped:
+        report(f"{r['arch']:<24}{r['shape']:<13}  [skipped: sub-quadratic "
+               "attention required]")
+    for r in failed:
+        report(f"{r['arch']:<24}{r['shape']:<13}  [FAILED: {r['error']}]")
+    assert not failed, f"{len(failed)} dry-run cells failed"
+    return {"cells": len(ok), "skipped": len(skipped), "failed": len(failed)}
+
+
+if __name__ == "__main__":
+    import sys
+    run(multi_pod="--multi-pod" in sys.argv)

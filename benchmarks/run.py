@@ -1,0 +1,51 @@
+"""Benchmark orchestrator: one entry per paper table/figure + the roofline
+table derived from the dry-run artifact.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    from benchmarks import (
+        explainability,
+        fig2_scalability,
+        roofline,
+        scenarios,
+        scheduler_savings,
+        table1_energy_profiles,
+        table4_threshold,
+    )
+
+    suite = [
+        ("table1_energy_profiles (Table 1)", table1_energy_profiles.run, {}),
+        ("scenarios (Sect. 5.3)", scenarios.run, {}),
+        ("explainability (Sect. 5.4)", explainability.run, {}),
+        ("fig2_scalability (Fig. 2)", fig2_scalability.run,
+         {"sweep": (100, 200, 400) if quick else (100, 200, 400, 700, 1000)}),
+        ("table4_threshold (Table 4 / Fig. 3)", table4_threshold.run, {}),
+        ("scheduler_savings (end-to-end)", scheduler_savings.run, {}),
+        ("roofline single-pod (§Roofline)", roofline.run, {}),
+        ("roofline multi-pod (§Dry-run)", roofline.run, {"multi_pod": True}),
+    ]
+    failures = []
+    for name, fn, kw in suite:
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}", flush=True)
+        t0 = time.perf_counter()
+        try:
+            fn(**kw)
+            print(f"[bench OK] {name} ({time.perf_counter() - t0:.1f}s)",
+                  flush=True)
+        except Exception as e:  # keep going; report at the end
+            failures.append((name, repr(e)))
+            print(f"[bench FAIL] {name}: {e!r}", flush=True)
+    print(f"\n{'=' * 72}")
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark(s) failed: {failures}")
+    print(f"all {len(suite)} benchmarks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Table 4 / Fig. 3 reproduction: number of generated constraints vs the
+quantile threshold tau = q_alpha, on a simulated 100 services x 100 nodes
+scenario with randomised-but-realistic profiles (Sect. 5.6)."""
+import time
+
+from repro.core.generator import ConstraintGenerator
+from benchmarks.fig2_scalability import synth
+
+QUANTILES = (0.90, 0.85, 0.80, 0.75, 0.70, 0.65, 0.60, 0.55, 0.50)
+# Table 4 (paper): 85 137 227 371 636 804 1056 1164 1316 for its instance.
+
+
+def run(report=print):
+    app, infra, mon = synth(100, 100, seed=42)
+    t0 = time.perf_counter()
+    counts = []
+    counts_prof = []
+    impacts = {}
+    for alpha in QUANTILES:
+        gen = ConstraintGenerator(alpha=alpha, flavour_scope="current")
+        cs = gen.generate(app, infra, mon)
+        counts.append(len(cs))
+        counts_prof.append(len(ConstraintGenerator(
+            alpha=alpha, flavour_scope="current", tau_scope="profiles",
+        ).generate(app, infra, mon)))
+        impacts[alpha] = {
+            kind: sorted((c.impact_g for c in cs if c.kind == kind),
+                         reverse=True)
+            for kind in ("avoidNode", "affinity")
+        }
+    dt_us = (time.perf_counter() - t0) * 1e6 / len(QUANTILES)
+
+    report("# Table 4 — constraints vs quantile threshold "
+           "(100 services x 100 nodes)")
+    report("quantile            " + "  ".join(f"{q:.2f}" for q in QUANTILES))
+    report("count (candidates)  " + "  ".join(f"{c}" for c in counts))
+    report("count (profiles)    " + "  ".join(f"{c}" for c in counts_prof))
+
+    # paper's structural claims:
+    assert counts == sorted(counts), "lowering alpha must add constraints"
+    assert counts_prof == sorted(counts_prof)
+    # Eq. 5 over candidate impacts gives mechanically ~(1-alpha)N counts
+    # (linear); the paper's Table 4 accelerates super-linearly, which the
+    # per-profile tau reading reproduces:
+    d_first = counts_prof[1] - counts_prof[0]
+    d_last = counts_prof[-1] - counts_prof[-2]
+    report(f"# profile-tau growth accelerates: first step +{d_first}, "
+           f"last step +{d_last} (paper Table 4: +52 ... +152)")
+    assert d_last > d_first, "profile-tau reading must accelerate"
+    # Fig. 3: impact mass concentrates at high quantiles — within each
+    # constraint type, the top-decile set holds the largest impacts (each
+    # type has its own tau, so concentration is a per-type property).
+    for kind in ("avoidNode", "affinity"):
+        top = impacts[0.90][kind]
+        rest = [x for x in impacts[0.50][kind] if x not in top]
+        if top and rest:
+            assert min(top) >= max(rest), (kind, min(top), max(rest))
+            report(f"# Fig. 3 [{kind}]: top-decile dominates (min top "
+                   f"{min(top):.0f} g >= max rest {max(rest):.0f} g)")
+    return {"counts": dict(zip(QUANTILES, counts)), "us_per_call": dt_us}
+
+
+if __name__ == "__main__":
+    run()

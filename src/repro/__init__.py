@@ -1,0 +1,3 @@
+"""repro: Green-by-Design constraint-based adaptive deployment, built as a
+multi-pod JAX training/inference framework."""
+__version__ = "0.1.0"

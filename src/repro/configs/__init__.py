@@ -1,0 +1,1 @@
+"""Configs: assigned architectures + the paper's Online Boutique case study."""

@@ -1,0 +1,15 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 16 experts, top-2.
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]"""
+from repro.models.config import ArchConfig, Family, MoEConfig
+
+ARCH = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family=Family.MOE,
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,
+    vocab=32064,
+    moe=MoEConfig(n_experts=16, top_k=2),
+)

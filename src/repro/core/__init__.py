@@ -1,0 +1,40 @@
+"""Paper core: Green-aware Constraint Generator (public API re-exports)."""
+from .adapter import to_dicts, to_json, to_prolog
+from .energy import (
+    EnergyEstimator,
+    EnergyMixGatherer,
+    K_TRANSMISSION_KWH_PER_GB_2025,
+    static_signal,
+)
+from .explain import ExplainabilityReport, generate_report
+from .generator import ConstraintGenerator, quantile_inf
+from .kb import KBEnricher, KnowledgeBase, Stats, StoredConstraint
+from .library import (
+    AffinityModule,
+    AvoidNodeModule,
+    ConstraintLibrary,
+    ConstraintModule,
+)
+from .pipeline import GeneratorOutput, GreenConstraintPipeline
+from .ranker import ConstraintRanker
+from .scheduler import GreenScheduler, SchedulerConfig
+from .types import (
+    Affinity,
+    Application,
+    AvoidNode,
+    CommunicationLink,
+    Constraint,
+    DeploymentPlan,
+    EnergySample,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    MonitoringData,
+    Node,
+    NodeCapabilities,
+    Placement,
+    Service,
+    ServiceRequirements,
+    Subnet,
+    TrafficSample,
+)

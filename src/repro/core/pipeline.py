@@ -1,0 +1,88 @@
+"""End-to-end Green-aware Constraint Generator (Fig. 1).
+
+Wires together: Energy Mix Gatherer -> Energy Estimator -> Constraint
+Generator -> KB Enricher -> Constraints Ranker -> Explainability Generator
+-> Constraint Adapter.  One call = one iteration of the adaptive loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+from . import adapter
+from .energy import EnergyEstimator, EnergyMixGatherer
+from .explain import ExplainabilityReport, generate_report
+from .generator import ConstraintGenerator
+from .kb import KBEnricher, KnowledgeBase
+from .library import ConstraintLibrary
+from .ranker import ConstraintRanker
+from .types import (
+    Application,
+    Constraint,
+    Infrastructure,
+    MonitoringData,
+)
+
+
+@dataclass
+class GeneratorOutput:
+    constraints: List[Constraint]          # ranked, weighted, filtered
+    report: ExplainabilityReport
+    prolog: str
+    dicts: list
+
+    def render(self) -> str:
+        return self.prolog
+
+
+@dataclass
+class GreenConstraintPipeline:
+    library: ConstraintLibrary = field(default_factory=ConstraintLibrary.default)
+    estimator: EnergyEstimator = field(default_factory=EnergyEstimator)
+    gatherer: EnergyMixGatherer = field(default_factory=EnergyMixGatherer)
+    ranker: ConstraintRanker = field(default_factory=ConstraintRanker)
+    enricher: KBEnricher = field(default_factory=KBEnricher)
+    kb: KnowledgeBase = field(default_factory=KnowledgeBase)
+    alpha: float = 0.8
+    flavour_scope: str = "current"
+    tau_scope: str = "candidates"
+    iteration: int = 0
+
+    def run(
+        self,
+        app: Application,
+        infra: Infrastructure,
+        monitoring: MonitoringData,
+        use_kb: bool = True,
+    ) -> GeneratorOutput:
+        self.iteration += 1
+        infra = self.gatherer.enrich(infra)
+        app = self.estimator.enrich(app, monitoring)
+
+        generator = ConstraintGenerator(
+            library=self.library,
+            estimator=self.estimator,
+            alpha=self.alpha,
+            flavour_scope=self.flavour_scope,
+            tau_scope=self.tau_scope,
+        )
+        fresh = generator.generate(app, infra, monitoring, self.iteration)
+
+        if use_kb:
+            computation = self.estimator.computation_profiles(monitoring)
+            communication = self.estimator.communication_profiles(monitoring)
+            merged = self.enricher.update(
+                self.kb, fresh, computation, communication, infra,
+                self.iteration,
+            )
+        else:
+            merged = fresh
+
+        ranked = self.ranker.rank(merged)
+        report = generate_report(ranked)
+        return GeneratorOutput(
+            constraints=ranked,
+            report=report,
+            prolog=adapter.to_prolog(ranked),
+            dicts=adapter.to_dicts(ranked),
+        )

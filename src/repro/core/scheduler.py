@@ -1,0 +1,265 @@
+"""Constraint-aware deployment scheduler.
+
+The paper delegates plan generation to an external constraint-based scheduler
+([36]); we implement one as the required baseline so the whole pipeline is
+runnable end-to-end.  The scheduler minimises a weighted objective
+
+  J(assign) = money_weight   * monetary cost
+            + pref_weight    * flavour-preference penalty (flavoursOrder)
+            + emission_weight* emissions(assign)            [oracle only]
+            + green_penalty  * sum over violated green constraints of
+                               w_i * mu_i                   (soft constraints)
+
+subject to hard requirements: subnet compatibility, node capacities
+(CPU/RAM), availability.  Optional services may be dropped when no feasible
+placement exists.  Solved with greedy construction + first-improvement local
+search.
+
+Three standard profiles:
+  * ``baseline``  — QoS/cost-driven, environment-blind (what today's
+    schedulers do; the paper's motivation);
+  * ``green``     — baseline + the generated green constraints;
+  * ``oracle``    — directly minimises emissions (upper bound on savings).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .library import subnet_compatible
+from .types import (
+    Affinity,
+    Application,
+    AvoidNode,
+    Constraint,
+    DeploymentPlan,
+    Infrastructure,
+    Placement,
+    Service,
+)
+
+
+@dataclass
+class SchedulerConfig:
+    money_weight: float = 1.0
+    pref_weight: float = 1.0
+    emission_weight: float = 0.0
+    green_penalty: float = 5.0
+    use_green_constraints: bool = True
+    local_search_rounds: int = 50
+
+    @classmethod
+    def baseline(cls) -> "SchedulerConfig":
+        return cls(use_green_constraints=False)
+
+    @classmethod
+    def green(cls) -> "SchedulerConfig":
+        return cls(use_green_constraints=True)
+
+    @classmethod
+    def oracle(cls) -> "SchedulerConfig":
+        return cls(money_weight=0.0, pref_weight=0.0, emission_weight=1.0,
+                   use_green_constraints=False)
+
+
+@dataclass
+class GreenScheduler:
+    config: SchedulerConfig = field(default_factory=SchedulerConfig)
+
+    def plan(
+        self,
+        app: Application,
+        infra: Infrastructure,
+        computation: Mapping[Tuple[str, str], float],
+        communication: Mapping[Tuple[str, str, str], float],
+        constraints: Sequence[Constraint] = (),
+    ) -> DeploymentPlan:
+        cfg = self.config
+        if not cfg.use_green_constraints:
+            constraints = ()
+        avoid: Dict[Tuple[str, str, str], float] = {}
+        affinity: Dict[Tuple[str, str], float] = {}
+        for c in constraints:
+            if isinstance(c, AvoidNode):
+                avoid[(c.service, c.flavour, c.node)] = c.weight * c.memory_weight
+            elif isinstance(c, Affinity):
+                affinity[(c.service, c.other)] = c.weight * c.memory_weight
+
+        mean_ci = _mean_ci(infra)
+        nodes = list(infra.nodes)
+
+        def flavour_energy(svc: Service, fname: str) -> float:
+            v = computation.get((svc.component_id, fname))
+            if v is not None:
+                return v
+            e = svc.flavour(fname).energy_kwh
+            return e if e is not None else 0.0
+
+        def objective(assign: Dict[str, Tuple[str, str]]) -> float:
+            money = 0.0
+            pref = 0.0
+            emissions = 0.0
+            green = 0.0
+            for sid, (fname, nid) in assign.items():
+                svc = app.service(sid)
+                node = infra.node(nid)
+                req = svc.flavour(fname).requirements
+                money += node.cost_per_cpu_hour * req.cpu
+                pref += svc.flavours_order.index(fname)
+                if cfg.emission_weight:
+                    ci = node.carbon if node.carbon is not None else mean_ci
+                    emissions += flavour_energy(svc, fname) * ci
+                g = avoid.get((sid, fname, nid))
+                if g:
+                    green += g
+            for (s, f, z), e in communication.items():
+                if s in assign and z in assign and assign[s][0] == f:
+                    if assign[s][1] != assign[z][1]:
+                        if cfg.emission_weight:
+                            emissions += e * mean_ci
+                        g = affinity.get((s, z))
+                        if g:
+                            green += g
+            return (cfg.money_weight * money
+                    + cfg.pref_weight * pref
+                    + cfg.emission_weight * emissions
+                    + cfg.green_penalty * green)
+
+        def feasible(svc: Service, fname: str, nid: str,
+                     load: Dict[str, Tuple[float, float]]) -> bool:
+            node = infra.node(nid)
+            if not subnet_compatible(svc, node):
+                return False
+            req = svc.flavour(fname).requirements
+            used_cpu, used_ram = load.get(nid, (0.0, 0.0))
+            if used_cpu + req.cpu > node.capabilities.cpu:
+                return False
+            if used_ram + req.ram_gb > node.capabilities.ram_gb:
+                return False
+            if node.capabilities.availability < req.availability:
+                return False
+            return True
+
+        # --- greedy construction: heaviest services first, best (flavour,
+        # node) by the objective; flavoursOrder breaks ties.
+        order = sorted(
+            app.services,
+            key=lambda s: -max(
+                (flavour_energy(s, f.name) for f in s.flavours), default=0.0
+            ),
+        )
+        assign: Dict[str, Tuple[str, str]] = {}
+        load: Dict[str, Tuple[float, float]] = {}
+        skipped: List[str] = []
+        for svc in order:
+            best: Optional[Tuple[float, int, int, str, str]] = None
+            for pref_rank, fname in enumerate(svc.flavours_order):
+                for k, node in enumerate(nodes):
+                    if not feasible(svc, fname, node.node_id, load):
+                        continue
+                    trial = dict(assign)
+                    trial[svc.component_id] = (fname, node.node_id)
+                    cand = (objective(trial), pref_rank, k, fname, node.node_id)
+                    if best is None or cand < best:
+                        best = cand
+            if best is None:
+                if svc.must_deploy:
+                    return DeploymentPlan(
+                        placements=(),
+                        feasible=False,
+                        notes=(f"no feasible node for {svc.component_id}",),
+                    )
+                skipped.append(svc.component_id)
+                continue
+            _, _, _, fname, nid = best
+            assign[svc.component_id] = (fname, nid)
+            req = svc.flavour(fname).requirements
+            cpu, ram = load.get(nid, (0.0, 0.0))
+            load[nid] = (cpu + req.cpu, ram + req.ram_gb)
+
+        # --- first-improvement local search over single relocations.
+        for _ in range(cfg.local_search_rounds):
+            improved = False
+            base = objective(assign)
+            for sid in list(assign):
+                svc = app.service(sid)
+                cur = assign[sid]
+                for fname in svc.flavours_order:
+                    for node in nodes:
+                        if (fname, node.node_id) == cur:
+                            continue
+                        load2 = _load_without(app, assign, sid)
+                        if not feasible(svc, fname, node.node_id, load2):
+                            continue
+                        trial = dict(assign)
+                        trial[sid] = (fname, node.node_id)
+                        c = objective(trial)
+                        if c + 1e-12 < base:
+                            assign, base, improved = trial, c, True
+            if not improved:
+                break
+
+        placements = tuple(
+            Placement(sid, f, n) for sid, (f, n) in sorted(assign.items())
+        )
+        return DeploymentPlan(
+            placements=placements,
+            skipped_services=tuple(skipped),
+            total_emissions_g=plan_emissions(
+                app, infra, assign, computation, communication
+            ),
+            feasible=True,
+        )
+
+
+def _mean_ci(infra: Infrastructure) -> float:
+    cis = [n.carbon for n in infra.nodes if n.carbon is not None]
+    return sum(cis) / len(cis) if cis else 0.0
+
+
+def _load_without(
+    app: Application, assign: Dict[str, Tuple[str, str]], skip: str
+) -> Dict[str, Tuple[float, float]]:
+    load: Dict[str, Tuple[float, float]] = {}
+    for sid, (fname, nid) in assign.items():
+        if sid == skip:
+            continue
+        req = app.service(sid).flavour(fname).requirements
+        cpu, ram = load.get(nid, (0.0, 0.0))
+        load[nid] = (cpu + req.cpu, ram + req.ram_gb)
+    return load
+
+
+def plan_emissions(
+    app: Application,
+    infra: Infrastructure,
+    assign: Dict[str, Tuple[str, str]],
+    computation: Mapping[Tuple[str, str], float],
+    communication: Mapping[Tuple[str, str, str], float],
+) -> float:
+    """True emissions (g) of a plan: computation + inter-node transmission."""
+    mean_ci = _mean_ci(infra)
+    total = 0.0
+    for sid, (fname, nid) in assign.items():
+        node = infra.node(nid)
+        ci = node.carbon if node.carbon is not None else mean_ci
+        e = computation.get((sid, fname))
+        if e is None:
+            fe = app.service(sid).flavour(fname).energy_kwh
+            e = fe if fe is not None else 0.0
+        total += e * ci
+    for (s, f, z), e in communication.items():
+        if s in assign and z in assign and assign[s][0] == f:
+            if assign[s][1] != assign[z][1]:
+                total += e * mean_ci
+    return total
+
+
+def plan_cost(app: Application, infra: Infrastructure,
+              assign: Dict[str, Tuple[str, str]]) -> float:
+    return sum(
+        infra.node(nid).cost_per_cpu_hour
+        * app.service(sid).flavour(fname).requirements.cpu
+        for sid, (fname, nid) in assign.items()
+    )

@@ -1,0 +1,2 @@
+"""Fault tolerance."""
+from . import manager

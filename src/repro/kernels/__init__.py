@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+  flash_attention — GQA causal attention, online softmax, VMEM tiling
+  ssd_scan        — mamba2 SSD chunked scan with VMEM-resident state
+
+``ops`` holds the jit'd model-layout wrappers; ``ref`` the pure-jnp
+oracles the tests sweep against (interpret=True on CPU).
+"""
+from .ops import flash_attention, ssd_scan  # noqa: F401

@@ -1,0 +1,153 @@
+"""Pallas TPU flash attention (GQA, causal) with online softmax.
+
+TPU adaptation notes (vs the CUDA flash-attention blueprint):
+  * the grid's innermost dimension iterates SEQUENTIALLY on TPU, so the
+    running (m, l, acc) online-softmax statistics live in VMEM scratch and
+    persist across the key-block dimension — no atomics / shared-memory
+    reductions as on GPU;
+  * BlockSpec tiling keeps one (block_q, hd) query tile and one
+    (block_k, hd) key/value tile resident in VMEM; block sizes default to
+    multiples of 128 to align the MXU contraction dims;
+  * GQA is expressed through the k/v index_map (query head h reads kv head
+    h // group) — no repeat/materialisation of kv heads in HBM;
+  * causal masking skips fully-masked key blocks via pl.when on block
+    indices (structural, not data-dependent).
+
+VMEM budget per program at defaults (block_q = block_k = 512, hd = 128,
+bf16 in / f32 scratch): q 128KiB + k/v 256KiB + acc 256KiB + o 128KiB
+< 1MiB — comfortably inside the ~16MiB/core VMEM of a v5e.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,      # inputs
+    o_ref,                    # output
+    m_scr, l_scr, acc_scr,    # VMEM scratch (persist across the k grid dim)
+    *,
+    scale: float,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # A key block is live unless it is entirely in the causal future of the
+    # whole query block: first q position >= last k position required.
+    live = (iq + 1) * block_q - 1 >= jk * block_k if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                     # (bq, bk)
+        if causal:
+            qpos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = jk * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # (bq,)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_cur
+
+    @pl.when(jk == num_k_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention_bhsd(
+    q: jax.Array,     # (B, H, Sq, hd)
+    k: jax.Array,     # (B, KV, Sk, hd)
+    v: jax.Array,     # (B, KV, Sk, hd)
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention over head-major layout.  Requires Sq == Sk when
+    causal (self-attention train/prefill — the kernel's target use)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    group = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    if causal:
+        assert Sq == Sk, "causal flash kernel assumes self-attention"
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=1.0 / (hd ** 0.5),
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        num_k_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, hd),
+                lambda b, h, i, j, g=group: (b, h // g, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, hd),
+                lambda b, h, i, j, g=group: (b, h // g, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, hd), lambda b, h, i, j: (b, h, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m: running max
+            pltpu.VMEM((block_q,), jnp.float32),      # l: running denom
+            pltpu.VMEM((block_q, hd), jnp.float32),   # acc: running numerator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,88 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+These accept the model-native layouts ((B, S, H, hd) attention /
+(B, S, nh, hp) SSD), transpose to the kernels' head-major layouts, and
+select ``interpret=True`` automatically off-TPU so the same call sites run
+on CPU (tests) and TPU (production) unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+from .ssd_scan import ssd_scan_bhsp
+
+
+def _default_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def _fit_block(size: int, target: int) -> int:
+    """Largest divisor of ``size`` that is <= target (tests use odd sizes)."""
+    b = min(target, size)
+    while size % b:
+        b -= 1
+    return b
+
+
+def flash_attention(
+    q: jax.Array,      # (B, Sq, H, hd)
+    k: jax.Array,      # (B, Sk, KV, hd)
+    v: jax.Array,      # (B, Sk, KV, hd)
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention in the model layout; returns (B, Sq, H, hd)."""
+    qt = q.swapaxes(1, 2)   # (B, H, Sq, hd)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    bq = _fit_block(q.shape[1], block_q)
+    bk = _fit_block(k.shape[1], block_k)
+    if causal and q.shape[1] == k.shape[1]:
+        bq = bk = min(bq, bk)
+    out = flash_attention_bhsd(
+        qt, kt, vt,
+        causal=causal, block_q=bq, block_k=bk,
+        interpret=_default_interpret(interpret),
+    )
+    return out.swapaxes(1, 2)
+
+
+def ssd_scan(
+    x: jax.Array,      # (B, S, nh, hp)
+    dt: jax.Array,     # (B, S, nh)
+    A: jax.Array,      # (nh,)
+    Bc: jax.Array,     # (B, S, n)
+    Cc: jax.Array,     # (B, S, n)
+    *,
+    chunk: int = 256,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan in the model layout.  Pads S to a chunk multiple with
+    dt = 0 steps (exact state no-ops).  Returns (y (B, S, nh, hp) f32,
+    h_final (B, nh, hp, n) f32)."""
+    B, S, nh, hp = x.shape
+    S0 = S
+    chunk = min(chunk, S) if S % chunk == 0 or S < chunk else chunk
+    if S % chunk:
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    y, hfin = ssd_scan_bhsp(
+        x.transpose(0, 2, 1, 3),      # (B, nh, S, hp)
+        dt.transpose(0, 2, 1),        # (B, nh, S)
+        A, Bc, Cc,
+        chunk=chunk, interpret=_default_interpret(interpret),
+    )
+    return y.transpose(0, 2, 1, 3)[:, :S0], hfin

@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are deliberately the *naive* formulations (materialised scores /
+sequential state recurrence), independent from both the kernels and the
+XLA-portable chunked paths in ``repro.models`` — so a kernel bug and a
+model-path bug cannot cancel out in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """Naive softmax attention with GQA.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd), H a multiple of KV.
+    Returns (B, Sq, H, hd) in q.dtype; math in f32.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=2).astype(jnp.float32)   # (B, Sk, H, hd)
+    vf = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if causal:
+        mask = jnp.arange(Sq)[:, None] + (Sk - Sq) >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    return out.astype(q.dtype)
+
+
+def ssd_ref(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    Bc: jax.Array,
+    Cc: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential (step-by-step) mamba2/SSD recurrence — the slow oracle.
+
+    x: (B, S, nh, hp); dt: (B, S, nh); A: (nh,) (negative);
+    Bc, Cc: (B, S, n) shared across heads.
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+    Returns (y (B, S, nh, hp), h_final (B, nh, hp, n)); math in f32.
+    """
+    B_, S, nh, hp = x.shape
+    n = Bc.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp          # (B,nh,hp), (B,nh), (B,n), (B,n)
+        decay = jnp.exp(dt_t * Af[None])   # (B, nh)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+        h = h * decay[..., None, None] + upd
+        y_t = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y_t
+
+    h0 = jnp.zeros((B_, nh, hp, n), jnp.float32)
+    h_fin, ys = jax.lax.scan(
+        step, h0,
+        (xf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+         Bf.swapaxes(0, 1), Cf.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1), h_fin

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel for the mamba2 SSD chunked scan.
+
+The SSD decomposition (Dao & Gu, 2024) splits the selective-state-space
+recurrence into an intra-chunk quadratic part (an attention-like (Q x Q)
+contraction that maps onto the MXU) and an inter-chunk state recurrence.
+On TPU the natural mapping is:
+
+  * grid (B, nh, n_chunks) with the CHUNK dimension innermost — TPU grids
+    iterate the last dimension sequentially, so the running state h
+    (hp x n) lives in VMEM scratch and flows chunk-to-chunk without any
+    HBM round-trip (the GPU formulation materialises per-chunk states to
+    HBM and runs a separate state-passing kernel; on TPU the sequential
+    grid makes that second kernel and its HBM traffic unnecessary);
+  * per-chunk tiles: x (Q, hp), dt (Q,), B/C (Q, n) are staged into VMEM
+    by BlockSpecs; Q defaults to 256 and hp, n are 64-128 for the
+    assigned archs, so all tiles are MXU-aligned (multiples of (8, 128)
+    after padding) and the working set is < 1 MiB;
+  * the decay matrix L = exp(segsum(dt*A)) is built in-register from a
+    cumulative sum — no HBM materialisation of the (Q, Q) mask.
+
+The final state is emitted so prefill can hand the cache to decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref,    # inputs
+    y_ref, hfin_ref,                        # outputs
+    h_scr,                                  # (hp, n) carried state
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, hp)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    A = a_ref[0].astype(jnp.float32)             # scalar (this head)
+    Bm = b_ref[0].astype(jnp.float32)            # (Q, n)
+    Cm = c_ref[0].astype(jnp.float32)            # (Q, n)
+
+    dtA = dt * A                                  # (Q,)
+    cum = jnp.cumsum(dtA)                         # (Q,)
+
+    # intra-chunk: y[q] += sum_{k<=q} exp(cum[q]-cum[k]) (C_q.B_k) dt_k x_k
+    seg = cum[:, None] - cum[None, :]             # (Q, Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(qi >= ki, jnp.exp(seg), 0.0)    # lower-tri decay
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (Q, Q) = C_q . B_k
+    w = L * scores * dt[None, :]
+    y = jax.lax.dot_general(
+        w, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (Q, hp)
+
+    # inter-chunk: y[q] += exp(cum[q]) C_q . h_prev      (h_prev: (hp, n))
+    h_prev = h_scr[...]
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, h_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # state update: h = exp(cum[-1]) h_prev
+    #                  + sum_k exp(cum[-1]-cum[k]) dt_k x_k B_k^T
+    decay_to_end = jnp.exp(cum[-1] - cum) * dt    # (Q,)
+    upd = jax.lax.dot_general(
+        x * decay_to_end[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                             # (hp, n)
+    h_scr[...] = jnp.exp(cum[-1]) * h_prev + upd
+
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _emit_state():
+        hfin_ref[0, 0, :, :] = h_scr[...].astype(hfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_bhsp(
+    x: jax.Array,      # (B, nh, S, hp)
+    dt: jax.Array,     # (B, nh, S)
+    A: jax.Array,      # (nh,)  negative
+    Bc: jax.Array,     # (B, S, n)   shared across heads
+    Cc: jax.Array,     # (B, S, n)
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Head-major SSD scan.  S must be a multiple of ``chunk`` (callers pad
+    with dt = 0 steps, which are exact no-ops on the state).
+
+    Returns (y (B, nh, S, hp) f32, h_final (B, nh, hp, n) f32).
+    """
+    B, nh, S, hp = x.shape
+    n = Bc.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+
+    grid = (B, nh, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, num_chunks=nc)
+    y, hfin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hp), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, n), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hp), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, hp, n), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nh, S, hp), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh, hp, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hp, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bc, Cc)
+    return y, hfin

@@ -1,0 +1,144 @@
+"""HLO text analysis: collective bytes + roofline terms.
+
+``cost_analysis`` does not report collective traffic, so we parse the
+compiled SPMD module: every instruction definition records its (per-device)
+result size; collective instructions then sum their operands' sizes.
+
+Hardware constants (TPU v5e class, per chip):
+  197 TFLOP/s bf16   |   819 GB/s HBM   |   ~50 GB/s/link ICI
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_DEF_RE = re.compile(
+    r"%?([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]"
+)
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_COLL_RE = re.compile(
+    r"=\s*.*?\b(" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\("
+)
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum per-device operand bytes of every collective in an SPMD module."""
+    sizes: Dict[str, int] = {}
+    # pass 1: record every instruction's result size
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.search(line)
+        if m:
+            name, dtype, dims = m.groups()
+            if dtype in _DTYPE_BYTES:
+                sizes[name] = _shape_bytes(dtype, dims)
+
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:
+            continue  # the async pair's -start carries the operands
+        ops = _OPERAND_RE.search(line[m.start():])
+        total = 0
+        if ops:
+            for op in ops.group(1).split(","):
+                op = op.strip().lstrip("%")
+                total += sizes.get(op, 0)
+        stats.counts[kind] = stats.counts.get(kind, 0) + 1
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + total
+    return stats
+
+
+@dataclass
+class Roofline:
+    """Per-device roofline terms, in seconds."""
+
+    flops: float                  # per-device HLO FLOPs
+    hbm_bytes: float              # per-device bytes accessed
+    coll_bytes: float             # per-device collective operand bytes
+    model_flops: float            # 6*N*D useful FLOPs (global)
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-term-bound step time that is useful
+        compute: (model_flops / chips / peak) / max(term)."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        worst = max(self.compute_s, self.memory_s, self.collective_s)
+        return ideal / worst if worst else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "model_flops": self.model_flops,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }

@@ -1,0 +1,479 @@
+"""Loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+undercounts scanned (layer-stacked, microbatched) models by orders of
+magnitude.  This module re-derives per-device FLOPs, bytes, and collective
+traffic from the compiled SPMD module text, multiplying loop bodies by their
+``known_trip_count`` (static for lax.scan).
+
+Method:
+  * parse computations + instructions (name -> dtype/dims, op, operands);
+  * flops: dot instructions (2 * batch * M * N * K from the dims config),
+    recursing into fusions/calls/whiles (x trip count);
+  * bytes: operands + results at fusion/op granularity (models post-fusion
+    HBM traffic);
+  * collectives: operand bytes by kind, x trip count.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from functools import lru_cache
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INST_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->")
+_TRIP_RE = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
+
+COLLECTIVE_OPS = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "copy", "copy-start", "copy-done",
+}
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(sig: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(sig)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims.strip() else []
+
+
+@dataclass
+class Instruction:
+    name: str
+    sig: str                  # result signature text
+    op: str
+    operands: List[str]
+    tail: str                 # everything after the operand list
+
+
+@dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction] = field(default_factory=list)
+
+
+@dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll_bytes_by_kind.values())
+
+    def add(self, other: "CostTotals", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes_by_kind.items():
+            self.coll_bytes_by_kind[k] = (
+                self.coll_bytes_by_kind.get(k, 0.0) + v * mult
+            )
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.result_sig: Dict[str, str] = {}
+        # per-computation signatures: instruction names (esp. parameters)
+        # repeat across fused computations, so sizes must be scoped.
+        self.scoped_sig: Dict[Tuple[str, str], str] = {}
+        self._parse(hlo_text)
+        self._cache: Dict[str, CostTotals] = {}
+        self.entry: Optional[str] = self._entry_name(hlo_text)
+
+    # -- parsing -------------------------------------------------------------
+
+    def _parse(self, text: str) -> None:
+        current: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            hdr = _COMP_HDR_RE.match(line)
+            if hdr and ("{" in line or line.endswith("->")) and "=" not in line.split("(")[0]:
+                current = Computation(hdr.group(1))
+                self.computations[current.name] = current
+                continue
+            m = _INST_RE.match(line)
+            if m and current is not None:
+                name, sig, op, operands, tail = m.groups()
+                ops = [
+                    o.strip().lstrip("%").split(" ")[-1].lstrip("%")
+                    for o in _split_operands(operands)
+                ]
+                inst = Instruction(name, sig, op, ops, tail)
+                current.instructions.append(inst)
+                self.result_sig[name] = sig
+                self.scoped_sig[(current.name, name)] = sig
+
+    @staticmethod
+    def _entry_name(text: str) -> Optional[str]:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR_RE.match(line)
+                if m:
+                    return m.group(1)
+        return None
+
+    # -- costing -------------------------------------------------------------
+
+    def cost(self, comp_name: Optional[str] = None) -> CostTotals:
+        name = comp_name or self.entry
+        if name is None or name not in self.computations:
+            return CostTotals()
+        if name in self._cache:
+            return self._cache[name]
+        total = CostTotals()
+        self._cache[name] = total  # break cycles defensively
+        for inst in self.computations[name].instructions:
+            self._cost_inst(inst, total)
+        return total
+
+    def _operand_bytes(self, inst: Instruction) -> int:
+        return sum(
+            _shape_bytes(self.result_sig.get(o, "")) for o in inst.operands
+        )
+
+    def _cost_inst(self, inst: Instruction, total: CostTotals) -> None:
+        op = inst.op
+        base_kind = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            return
+        if base_kind in COLLECTIVE_OPS:
+            b = self._operand_bytes(inst)
+            total.coll_bytes_by_kind[base_kind] = (
+                total.coll_bytes_by_kind.get(base_kind, 0.0) + b
+            )
+            total.coll_counts[base_kind] = (
+                total.coll_counts.get(base_kind, 0.0) + 1
+            )
+            total.bytes += b  # the local read counts against HBM too
+            # reductions inside all-reduce are negligible flops; skip
+            return
+        if op == "while":
+            body = _BODY_RE.search(inst.tail)
+            trip_m = _TRIP_RE.search(inst.tail)
+            trip = int(trip_m.group(1)) if trip_m else 1
+            if body:
+                total.add(self.cost(body.group(1)), mult=trip)
+            return
+        if op in ("fusion", "call", "async-start"):
+            called = _CALLS_RE.search(inst.tail) or _TO_APPLY_RE.search(inst.tail)
+            if called:
+                inner = self.cost(called.group(1))
+                # flops recurse; bytes counted at THIS boundary (fused)
+                total.flops += inner.flops
+                for k, v in inner.coll_bytes_by_kind.items():
+                    total.coll_bytes_by_kind[k] = (
+                        total.coll_bytes_by_kind.get(k, 0.0) + v
+                    )
+                for k, v in inner.coll_counts.items():
+                    total.coll_counts[k] = total.coll_counts.get(k, 0.0) + v
+            if op == "fusion" and called:
+                total.bytes += self._fusion_bytes(inst, called.group(1))
+            else:
+                total.bytes += self._operand_bytes(inst) + _shape_bytes(inst.sig)
+            return
+        if op == "dynamic-update-slice":
+            # in-place update: read the update + write the region; the full
+            # buffer is aliased (XLA aliases loop-carried DUS), not streamed.
+            upd = _shape_bytes(self.result_sig.get(inst.operands[1], "")) \
+                if len(inst.operands) > 1 else 0
+            total.bytes += 2 * upd
+            return
+        if op == "dynamic-slice":
+            total.bytes += 2 * _shape_bytes(inst.sig)  # read + write the slice
+            return
+        if op == "conditional":
+            # worst case: the most expensive branch
+            branches = re.findall(r"branch_computations=\{([^}]*)\}", inst.tail)
+            names = []
+            if branches:
+                names = [b.strip().lstrip("%") for b in branches[0].split(",")]
+            else:
+                names = [m for m in re.findall(r"(?:true|false)_computation=%([\w\.\-]+)", inst.tail)]
+            if names:
+                costs = [self.cost(n) for n in names]
+                worst = max(costs, key=lambda c: c.flops + c.bytes)
+                total.add(worst)
+            total.bytes += self._operand_bytes(inst) + _shape_bytes(inst.sig)
+            return
+        if op == "dot":
+            total.flops += self._dot_flops(inst)
+            total.bytes += self._operand_bytes(inst) + _shape_bytes(inst.sig)
+            return
+        if op == "convolution":
+            total.flops += self._conv_flops(inst)
+            total.bytes += self._operand_bytes(inst) + _shape_bytes(inst.sig)
+            return
+        if op in _SKIP_BYTES_OPS:
+            return
+        # generic elementwise / data-movement op
+        total.bytes += self._operand_bytes(inst) + _shape_bytes(inst.sig)
+
+    def _fusion_bytes(self, inst: Instruction, called: str) -> float:
+        """Post-fusion HBM traffic of one fusion, modelling what the TPU
+        memory system actually moves:
+
+          * a parameter consumed ONLY through dynamic-slice reads only the
+            slice (stacked scan operands are gathered per-iteration, not
+            streamed whole);
+          * a root dynamic-update-slice writes only the update region, and
+            its pass-through buffer operand is aliased in place (read 0) —
+            XLA input/output-aliases loop-carried accumulators;
+          * everything else reads full operands and writes full results.
+        """
+        comp = self.computations.get(called)
+        if comp is None:
+            return self._operand_bytes(inst) + _shape_bytes(inst.sig)
+
+        sig_of = lambda n: self.scoped_sig.get((called, n),
+                                               self.result_sig.get(n, ""))
+        params: Dict[int, Instruction] = {}
+        consumers: Dict[str, List[Instruction]] = {}
+        by_name: Dict[str, Instruction] = {}
+        for i2 in comp.instructions:
+            by_name[i2.name] = i2
+            if i2.op == "parameter":
+                try:
+                    idx = int(i2.operands[0]) if i2.operands else 0
+                except ValueError:
+                    idx = len(params)
+                params[idx] = i2
+            for o in i2.operands:
+                consumers.setdefault(o, []).append(i2)
+
+        _PASS = ("bitcast", "copy", "reshape", "convert", "transpose")
+
+        def trace_param(name: str) -> Optional[str]:
+            """Follow pass-through chains back to a parameter.  ``convert``
+            is treated as pass-through: the TPU pipeline fuses dtype
+            converts into producers/consumers and still aliases the DUS in
+            place (the CPU backend materialises a widened copy instead —
+            an artifact of the proxy backend, not of the program)."""
+            seen = 0
+            while name in by_name and seen < 12:
+                i3 = by_name[name]
+                if i3.op == "parameter":
+                    return i3.name
+                if i3.op in _PASS and i3.operands:
+                    name = i3.operands[0]
+                    seen += 1
+                    continue
+                return None
+            return None
+
+        def through(e: Instruction, depth=0) -> Instruction:
+            """Descend through pass-through ops to the effective producer."""
+            while e.op in _PASS and e.operands and depth < 12 \
+                    and e.operands[0] in by_name:
+                e = by_name[e.operands[0]]
+                depth += 1
+            return e
+
+        root = comp.instructions[-1]
+        root_elems: List[Instruction] = []
+        if root.op == "tuple":
+            for o in root.operands:
+                if o in by_name:
+                    root_elems.append(by_name[o])
+        else:
+            root_elems = [root]
+
+        write_b = 0.0
+        aliased: set = set()
+        for e in root_elems:
+            eff = through(e)
+            if eff.op == "dynamic-update-slice" and len(eff.operands) > 1:
+                # charge the update at the ROOT'S (storage) dtype width
+                upd_elems = _shape_bytes(sig_of(eff.operands[1]))
+                upd_dt = _SHAPE_RE.search(sig_of(eff.operands[1]))
+                root_dt = _SHAPE_RE.search(e.sig)
+                if upd_dt and root_dt and \
+                        upd_dt.group(1) in _DTYPE_BYTES and \
+                        root_dt.group(1) in _DTYPE_BYTES:
+                    upd_elems = upd_elems \
+                        * _DTYPE_BYTES[root_dt.group(1)] \
+                        / _DTYPE_BYTES[upd_dt.group(1)]
+                write_b += upd_elems
+                base = trace_param(eff.operands[0])
+                if base is not None:
+                    aliased.add(base)
+            else:
+                write_b += _shape_bytes(e.sig)
+
+        def slice_only(name: str, depth=0) -> Optional[float]:
+            """Bytes read if every (transitive) consumer of ``name`` is a
+            dynamic-slice reading it as the DATA operand (through
+            pass-through ops); None otherwise.  Index operands don't make
+            their producer slice-read."""
+            total = 0.0
+            for c in consumers.get(name, []):
+                if c.op == "dynamic-slice":
+                    if c.operands and c.operands[0] == name:
+                        total += _shape_bytes(c.sig)
+                    else:
+                        return None  # index operand: not a sliced read
+                elif c.op in _PASS and depth < 6:
+                    sub = slice_only(c.name, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                else:
+                    return None
+            return total if total > 0 else None
+
+        read_b = 0.0
+        for idx, p in params.items():
+            if p.name in aliased:
+                continue
+            sliced = slice_only(p.name)
+            if sliced is not None:
+                read_b += sliced
+            elif idx < len(inst.operands):
+                read_b += _shape_bytes(
+                    self.result_sig.get(inst.operands[idx], ""))
+            else:
+                read_b += _shape_bytes(p.sig)
+        return read_b + write_b
+
+    def _dot_flops(self, inst: Instruction) -> float:
+        lhs = _shape_dims(self.result_sig.get(inst.operands[0], ""))
+        rhs = _shape_dims(self.result_sig.get(inst.operands[1], ""))
+        if lhs is None or rhs is None:
+            return 0.0
+        def dims_of(attr):
+            m = re.search(attr + r"=\{([\d,]*)\}", inst.tail)
+            if not m or not m.group(1).strip():
+                return []
+            return [int(x) for x in m.group(1).split(",")]
+        rb = dims_of("rhs_batch_dims")
+        rc = dims_of("rhs_contracting_dims")
+        lhs_prod = 1
+        for d in lhs:
+            lhs_prod *= d
+        rhs_free = 1
+        for i, d in enumerate(rhs):
+            if i not in rb and i not in rc:
+                rhs_free *= d
+        return 2.0 * lhs_prod * rhs_free
+
+    def _conv_flops(self, inst: Instruction) -> float:
+        out = _shape_dims(inst.sig) or []
+        ker = _shape_dims(self.result_sig.get(inst.operands[1], "")) or []
+        n_out = 1
+        for d in out:
+            n_out *= d
+        n_ker = 1
+        for d in ker:
+            n_ker *= d
+        # approx: 2 * output elements * kernel elements / output channels
+        ochan = out[-1] if out else 1
+        return 2.0 * n_out * (n_ker / max(ochan, 1))
+
+
+def _split_operands(s: str) -> List[str]:
+    """Split a top-level operand list (no nested parens in operand names)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [o for o in (x.strip() for x in out) if o.startswith("%") or o]
+
+
+def analyze(hlo_text: str) -> CostTotals:
+    return HloCostModel(hlo_text).cost()
+
+
+def breakdown(hlo_text: str, top: int = 25):
+    """Perf-debugging view: (bytes by op kind, top single instructions),
+    loop-trip-count weighted.  Drives the §Perf hypothesis loop."""
+    model = HloCostModel(hlo_text)
+
+    by_op: Dict[str, float] = {}
+    top_insts: List[Tuple[float, str, str, str]] = []
+
+    def visit(comp_name: str, mult: float, seen: set):
+        if comp_name in seen or comp_name not in model.computations:
+            return
+        seen = seen | {comp_name}
+        for inst in model.computations[comp_name].instructions:
+            op = inst.op
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done") or op in _SKIP_BYTES_OPS:
+                continue
+            if op == "while":
+                body = _BODY_RE.search(inst.tail)
+                trip_m = _TRIP_RE.search(inst.tail)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                if body:
+                    visit(body.group(1), mult * trip, seen)
+                continue
+            if base in COLLECTIVE_OPS:
+                b = model._operand_bytes(inst) * mult
+            elif op == "fusion":
+                called = _CALLS_RE.search(inst.tail)
+                b = model._fusion_bytes(
+                    inst, called.group(1) if called else "") * mult
+            elif op == "dynamic-update-slice":
+                upd = _shape_bytes(model.result_sig.get(inst.operands[1], "")) \
+                    if len(inst.operands) > 1 else 0
+                b = 2 * upd * mult
+            elif op == "dynamic-slice":
+                b = 2 * _shape_bytes(inst.sig) * mult
+            else:
+                b = (model._operand_bytes(inst) + _shape_bytes(inst.sig)) * mult
+            by_op[base] = by_op.get(base, 0.0) + b
+            top_insts.append((b, base, comp_name, inst.name))
+            if op in ("fusion", "call", "async-start"):
+                # bytes counted at this boundary; don't also descend for
+                # bytes (flops-only recursion is handled by cost()).
+                continue
+
+    visit(model.entry, 1.0, set())
+    top_insts.sort(reverse=True)
+    return by_op, top_insts[:top]

@@ -1,0 +1,490 @@
+"""Model forwards for all assigned architecture families.
+
+Three modes share one code path per family:
+  * train    — full-sequence forward, no cache;
+  * prefill  — full-sequence forward EMITTING a KV/state cache;
+  * decode   — one-token step consuming/updating the cache (serve_step).
+
+Layers are stacked along a leading L axis and executed with ``jax.lax.scan``
+so HLO size and compile time are O(1) in depth (mandatory at 96 layers /
+18432 width).  Caches are pytrees whose leaves carry the same leading L axis
+and travel through the scan as xs/ys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, Family, MLPKind
+from .moe import moe_mlp
+from .ops import (
+    NOSHARD,
+    ShardCtx,
+    attention_chunked,
+    attention_reference,
+    rms_norm,
+    rotary,
+)
+from .sharding import ParamSchema as PS
+from .ssm import mamba1_block, mamba2_block
+
+Cache = Dict[str, Any]
+
+TRAIN, PREFILL, DECODE = "train", "prefill", "decode"
+
+
+# ---------------------------------------------------------------------------
+# attention / mlp blocks
+# ---------------------------------------------------------------------------
+
+
+def attention_block(
+    p: Dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    ctx: ShardCtx,
+    *,
+    mode: str,
+    causal: bool = True,
+    use_rope: bool = True,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array, jax.Array]] = None,
+    cross_states: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Residual attention block.
+
+    decode: ``kv_cache`` = (k, v, pos), k/v (B, S_max, KV, hd).
+    cross-attention: k/v from ``cross_states`` (train/prefill) or from the
+    cache (decode).
+    Returns (residual output, (k, v) for the cache or None).
+    """
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+
+    if mode == DECODE and cross_states is None and kv_cache is not None \
+            and causal:
+        # self-attention decode step; ``pos`` is a scalar (lockstep batch)
+        # or a (B,) vector (continuous batching: each slot at its own
+        # sequence position)
+        kc, vc, pos = kv_cache
+        per_slot = jnp.ndim(pos) == 1
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+        if cfg.qkv_bias:
+            k = k + p["bk"][None, None]
+            v = v + p["bv"][None, None]
+        if use_rope:
+            rope_pos = (pos[:, None] if per_slot else pos) \
+                + jnp.arange(q.shape[1])
+            q = rotary(q, rope_pos, cfg.rope_theta)
+            k = rotary(k, rope_pos, cfg.rope_theta)
+        if per_slot:
+            b_idx = jnp.arange(kc.shape[0])
+            kc = kc.at[b_idx, pos].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[b_idx, pos].set(v[:, 0].astype(vc.dtype))
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(kc.dtype), pos, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(vc.dtype), pos, 1)
+        kc = ctx.act(kc, ctx.dp, None, None, ctx.tp)  # head-dim sharded
+        vc = ctx.act(vc, ctx.dp, None, None, ctx.tp)
+        out = attention_reference(
+            q, kc, vc, causal=False, kv_len=pos + q.shape[1]
+        )
+        new_kv = (kc, vc)
+    elif mode == DECODE and kv_cache is not None:
+        # cross-attention decode: K/V precomputed at prefill
+        kc, vc, _ = kv_cache
+        out = attention_reference(q, kc, vc, causal=False)
+        new_kv = (kc, vc)
+    else:
+        src = cross_states if cross_states is not None else h
+        k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+        if cfg.qkv_bias:
+            k = k + p["bk"][None, None]
+            v = v + p["bv"][None, None]
+        if use_rope:
+            pos = jnp.arange(q.shape[1])
+            q = rotary(q, pos, cfg.rope_theta)
+            k = rotary(k, jnp.arange(k.shape[1]), cfg.rope_theta)
+        seq_par = ctx.seq_parallel_attn and ctx.heads is None \
+            and ctx.tp is not None
+        if seq_par:
+            # heads don't divide the model axis: shard the SEQUENCE dim of
+            # q over it (k/v stay replicated — small under GQA), so the
+            # attention compute and its S^2 score buffers split instead of
+            # replicating across the model axis.
+            q = ctx.act(q, ctx.dp, ctx.tp, None, None)
+            k = ctx.act(k, ctx.dp, None, None, None)
+            v = ctx.act(v, ctx.dp, None, None, None)
+        else:
+            q = ctx.act(q, ctx.dp, None, ctx.heads, None)
+        if ctx.attention_impl == "pallas":
+            from repro.kernels.ops import flash_attention
+
+            out = flash_attention(q, k, v, causal=causal).astype(q.dtype)
+        elif seq_par:
+            # No q-chunk scan: the per-device score slab is already 1/16
+            # of S^2 (seq-sharded rows), and a chunked reshape could not
+            # express that sharding (512-chunks vs 256-row shards).
+            out = attention_reference(q, k, v, causal=causal)
+        else:
+            out = attention_chunked(q, k, v, causal=causal,
+                                    remat_body=ctx.remat_chunk_attn)
+        if seq_par:
+            out = ctx.act(out, ctx.dp, ctx.tp, None, None)
+        new_kv = (k, v)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return x + proj, new_kv
+
+
+def mlp_block(p: Dict, x: jax.Array, cfg: ArchConfig, ctx: ShardCtx) -> jax.Array:
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    if cfg.mlp == MLPKind.GATED_SILU:
+        u = jax.nn.silu(h @ p["w_gate"]) * (h @ p["w_up"])
+    elif cfg.mlp == MLPKind.GELU:
+        u = h @ p["w_up"]
+        if "b_up" in p:
+            u = u + p["b_up"][None, None]
+        u = jax.nn.gelu(u)
+    else:  # RELU2 (nemotron)
+        u = jnp.square(jax.nn.relu(h @ p["w_up"]))
+    u = ctx.act(u, ctx.dp, None, ctx.tp if ctx.ff_sharded else None)
+    out = u @ p["w_down"]
+    if "b_down" in p:
+        out = out + p["b_down"][None, None]
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# decoder stacks (scan over layers)
+# ---------------------------------------------------------------------------
+
+
+def _dense_stack(params, h, cfg, ctx, cache, *, mode, remat):
+    """DENSE / VLM / MOE decoder."""
+    is_moe = cfg.family == Family.MOE
+    pos0 = cache["pos"] if cache is not None else jnp.int32(0)
+
+    def layer(h, xs):
+        lp, kc, vc = xs
+        kv = (kc, vc, pos0) if kc is not None else None
+        h, new_kv = attention_block(
+            lp["attn"], h, cfg, ctx, mode=mode, kv_cache=kv, causal=True
+        )
+        aux = {}
+        if is_moe:
+            y, aux = moe_mlp(lp["moe"], h, cfg, ctx)
+            h = h + y
+        else:
+            h = mlp_block(lp["mlp"], h, cfg, ctx)
+        return ctx.res(h), (new_kv, aux)
+
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    xs = (params["layers"],
+          cache["k"] if cache else None,
+          cache["v"] if cache else None)
+
+    emit_kv = mode in (PREFILL, DECODE)
+
+    def body(carry, xs):
+        h, (new_kv, aux) = layer(carry, xs)
+        return h, ((new_kv if emit_kv else None), aux)
+
+    h, (kvs, auxes) = jax.lax.scan(body, h, xs)
+    new_cache = None
+    if emit_kv:
+        k_s, v_s = kvs
+        new_cache = {"k": k_s, "v": v_s,
+                     "pos": pos0 + (1 if mode == DECODE else h.shape[1])}
+    aux = {k: jnp.mean(v) for k, v in auxes.items()} if auxes else {}
+    return h, new_cache, aux
+
+
+def _ssm_stack(params, h, cfg, ctx, cache, *, mode, remat):
+    emit = mode in (PREFILL, DECODE)
+
+    def layer(h, xs):
+        lp, cc = xs
+        h, new_c = mamba1_block(
+            lp, h, cfg, ctx, cache=cc, return_state=emit
+        )
+        return ctx.res(h), new_c
+
+    if remat:
+        layer = jax.checkpoint(layer)
+
+    cc = None
+    if cache is not None:
+        cc = {"conv": cache["conv"], "ssm": cache["ssm"]}
+    h, new_cs = jax.lax.scan(layer, h, (params["layers"], cc))
+    new_cache = None
+    if emit:
+        pos0 = cache["pos"] if cache is not None else jnp.int32(0)
+        new_cache = {
+            "conv": new_cs["conv"], "ssm": new_cs["ssm"],
+            "pos": pos0 + (1 if mode == DECODE else h.shape[1]),
+        }
+    return h, new_cache, {}
+
+
+def _hybrid_stack(params, h, cfg, ctx, cache, *, mode, remat):
+    """zamba2: mamba2 backbone; a single SHARED attention+MLP block applied
+    after every ``shared_attn_period`` layers (own KV cache per
+    application point)."""
+    L, period = cfg.n_layers, cfg.shared_attn_period
+    G = L // period
+    emit = mode in (PREFILL, DECODE)
+    pos0 = cache["pos"] if cache is not None else jnp.int32(0)
+
+    grouped = jax.tree.map(
+        lambda a: a[: G * period].reshape(G, period, *a.shape[1:]),
+        params["layers"],
+    )
+    tail = jax.tree.map(lambda a: a[G * period:], params["layers"])
+
+    def m2_layer(h, xs):
+        lp, cc = xs
+        h, new_c = mamba2_block(
+            lp, h, cfg, ctx, cache=cc, return_state=emit
+        )
+        return ctx.res(h), new_c
+
+    if remat:
+        m2_layer = jax.checkpoint(m2_layer)
+
+    def mamba_slice(sel):
+        if cache is None:
+            return None
+        return {k: sel(cache[k]) for k in ("conv_x", "conv_B", "conv_C", "ssm")}
+
+    def group_body(h, xs):
+        gp, gc, kc, vc = xs
+        h, new_gc = jax.lax.scan(m2_layer, h, (gp, gc))
+        kv = (kc, vc, pos0) if kc is not None else None
+        h, new_kv = attention_block(
+            params["shared"]["attn"], h, cfg, ctx, mode=mode,
+            kv_cache=kv, causal=True,
+        )
+        h = mlp_block(params["shared"]["mlp"], h, cfg, ctx)
+        return ctx.res(h), (new_gc, new_kv if emit else None)
+
+    gxs = (
+        grouped,
+        mamba_slice(lambda a: a[: G * period].reshape(G, period, *a.shape[1:])),
+        cache["shared_k"] if cache else None,
+        cache["shared_v"] if cache else None,
+    )
+    h, (new_gc, new_kvs) = jax.lax.scan(group_body, h, gxs)
+    h, new_tc = jax.lax.scan(
+        m2_layer, h, (tail, mamba_slice(lambda a: a[G * period:]))
+    )
+
+    new_cache = None
+    if emit:
+        new_cache = {}
+        for key in ("conv_x", "conv_B", "conv_C", "ssm"):
+            head = new_gc[key].reshape(G * period, *new_gc[key].shape[2:])
+            new_cache[key] = jnp.concatenate([head, new_tc[key]], axis=0)
+        new_cache["shared_k"], new_cache["shared_v"] = new_kvs
+        new_cache["pos"] = pos0 + (1 if mode == DECODE else h.shape[1])
+    return h, new_cache, {}
+
+
+def _encdec_stack(params, h, cfg, ctx, cache, enc_embeds, *, mode, remat):
+    """whisper: encoder over stub frame embeddings + causal decoder with
+    cross-attention.  decode mode never re-runs the encoder: cross K/V come
+    from the cache (filled at prefill)."""
+    emit = mode in (PREFILL, DECODE)
+    pos0 = cache["pos"] if cache is not None else jnp.int32(0)
+
+    enc_out = None
+    if mode in (TRAIN, PREFILL):
+        assert enc_embeds is not None, "enc-dec train/prefill needs enc_embeds"
+        e = enc_embeds
+
+        def enc_layer(e, lp):
+            e, _ = attention_block(
+                lp["attn"], e, cfg, ctx, mode=TRAIN, causal=False,
+                use_rope=True,
+            )
+            e = mlp_block(lp["mlp"], e, cfg, ctx)
+            return ctx.res(e), None
+
+        if remat:
+            enc_layer = jax.checkpoint(enc_layer)
+        e, _ = jax.lax.scan(enc_layer, e, params["enc_layers"])
+        enc_out = rms_norm(e, params["enc_final_norm"], cfg.norm_eps)
+
+    def dec_layer(h, xs):
+        lp, kc, vc, ck, cv = xs
+        kv = (kc, vc, pos0) if kc is not None else None
+        h, new_kv = attention_block(
+            lp["attn"], h, cfg, ctx, mode=mode, kv_cache=kv, causal=True
+        )
+        if mode == DECODE:
+            h, cross_kv = _cross_from_cache(lp["cross"], h, cfg, ctx, ck, cv)
+        else:
+            h, cross_kv = attention_block(
+                lp["cross"], h, cfg, ctx, mode=mode,
+                cross_states=enc_out, causal=False, use_rope=False,
+            )
+        h = mlp_block(lp["mlp"], h, cfg, ctx)
+        ys = ((new_kv, cross_kv) if emit else None, {})
+        return ctx.res(h), ys
+
+    if remat:
+        dec_layer = jax.checkpoint(dec_layer)
+
+    xs = (params["layers"],
+          cache["k"] if cache else None, cache["v"] if cache else None,
+          cache["cross_k"] if cache else None,
+          cache["cross_v"] if cache else None)
+    h, (kvs, _) = jax.lax.scan(dec_layer, h, xs)
+    new_cache = None
+    if emit:
+        (k_s, v_s), (ck_s, cv_s) = kvs
+        new_cache = {
+            "k": k_s, "v": v_s, "cross_k": ck_s, "cross_v": cv_s,
+            "pos": pos0 + (1 if mode == DECODE else h.shape[1]),
+        }
+    return h, new_cache, {}
+
+
+def _cross_from_cache(p, x, cfg, ctx, ck, cv):
+    """Cross-attention against cached encoder K/V (decode path)."""
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"][None, None]
+    out = attention_reference(q, ck, cv, causal=False)
+    return x + jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# top-level forward
+# ---------------------------------------------------------------------------
+
+
+def forward(
+    params: Dict,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    *,
+    ctx: ShardCtx = NOSHARD,
+    mode: str = TRAIN,
+    cache: Optional[Cache] = None,
+    remat: bool = False,
+    compute_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Optional[Cache], Dict]:
+    """Returns (logits (B, S, Vp), cache (prefill/decode) or None, aux)."""
+    assert (cache is not None) == (mode == DECODE), (mode, cache is not None)
+    tokens = batch["tokens"]
+    p = jax.tree.map(
+        lambda a: a.astype(compute_dtype)
+        if hasattr(a, "dtype") and a.dtype == jnp.float32 else a,
+        params,
+    )
+    h = jnp.take(p["embed"], tokens, axis=0)
+    h = ctx.res(h)
+
+    if cfg.family in (Family.DENSE, Family.VLM, Family.MOE):
+        h, new_cache, aux = _dense_stack(
+            p, h, cfg, ctx, cache, mode=mode, remat=remat)
+    elif cfg.family == Family.SSM:
+        h, new_cache, aux = _ssm_stack(
+            p, h, cfg, ctx, cache, mode=mode, remat=remat)
+    elif cfg.family == Family.HYBRID:
+        h, new_cache, aux = _hybrid_stack(
+            p, h, cfg, ctx, cache, mode=mode, remat=remat)
+    elif cfg.family in (Family.ENC_DEC, Family.AUDIO):
+        enc = batch.get("enc_embeds")
+        if enc is not None:
+            enc = enc.astype(compute_dtype)
+        h, new_cache, aux = _encdec_stack(
+            p, h, cfg, ctx, cache, enc, mode=mode, remat=remat)
+    else:
+        raise ValueError(cfg.family)
+
+    h = rms_norm(h, p["final_norm"], cfg.norm_eps)
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = h @ head
+    logits = ctx.act(logits, ctx.dp, None, ctx.tp)
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# cache schema (shapes + sharding for decode dry-runs / serving)
+# ---------------------------------------------------------------------------
+
+
+def cache_schema(
+    cfg: ArchConfig, batch: int, max_len: int, enc_len: int = 0
+) -> Dict:
+    """Decode-cache schema; leading L axis matches the scan layout.
+
+    KV caches are head-dim sharded over the model axis (hd is a multiple of
+    16 for no assigned arch < 64), which keeps dynamic_update_slice local
+    (no resharding on the sequence axis) while splitting cache bytes.
+    """
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    kv = lambda s: PS((L, batch, s, KV, hd),
+                      ("layers", "batch", "seq", "heads_kv", "hd_cache"),
+                      init="zeros")
+    pos = PS((), (), init="zeros", dtype=jnp.int32)
+    if cfg.family in (Family.DENSE, Family.VLM, Family.MOE):
+        return {"k": kv(max_len), "v": kv(max_len), "pos": pos}
+    if cfg.family == Family.SSM:
+        di, n, K = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+        return {
+            "conv": PS((L, batch, K - 1, di),
+                       ("layers", "batch", "conv", "d_inner"), init="zeros"),
+            "ssm": PS((L, batch, di, n),
+                      ("layers", "batch", "d_inner", "state"),
+                      init="zeros", dtype=jnp.float32),
+            "pos": pos,
+        }
+    if cfg.family == Family.HYBRID:
+        di, n, K = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+        nh = di // cfg.ssm.head_dim
+        G = L // cfg.shared_attn_period
+        return {
+            "conv_x": PS((L, batch, K - 1, di),
+                         ("layers", "batch", "conv", "d_inner"), init="zeros"),
+            "conv_B": PS((L, batch, K - 1, n),
+                         ("layers", "batch", "conv", "state"), init="zeros"),
+            "conv_C": PS((L, batch, K - 1, n),
+                         ("layers", "batch", "conv", "state"), init="zeros"),
+            "ssm": PS((L, batch, nh, cfg.ssm.head_dim, n),
+                      ("layers", "batch", "ssm_heads", "hd", "state"),
+                      init="zeros", dtype=jnp.float32),
+            "shared_k": PS((G, batch, max_len, KV, hd),
+                           ("groups", "batch", "seq", "heads_kv", "hd_cache"),
+                           init="zeros"),
+            "shared_v": PS((G, batch, max_len, KV, hd),
+                           ("groups", "batch", "seq", "heads_kv", "hd_cache"),
+                           init="zeros"),
+            "pos": pos,
+        }
+    if cfg.family in (Family.ENC_DEC, Family.AUDIO):
+        return {
+            "k": kv(max_len), "v": kv(max_len),
+            "cross_k": PS((L, batch, enc_len, KV, hd),
+                          ("layers", "batch", "seq", "heads_kv", "hd_cache"),
+                          init="zeros"),
+            "cross_v": PS((L, batch, enc_len, KV, hd),
+                          ("layers", "batch", "seq", "heads_kv", "hd_cache"),
+                          init="zeros"),
+            "pos": pos,
+        }
+    raise ValueError(cfg.family)

@@ -1,0 +1,188 @@
+"""Mixture-of-Experts MLP with sort-based (MegaBlocks-style) dispatch.
+
+Design notes (TPU adaptation):
+  * dispatch/combine are gather/scatter ops (bytes, not FLOPs) — the naive
+    one-hot-einsum dispatch would dominate the compiled FLOP count and wreck
+    the useful-FLOPs ratio in the roofline analysis;
+  * experts live in a fixed-capacity buffer (E, C, d) so all shapes are
+    static; tokens beyond capacity are dropped (standard capacity-factor
+    semantics) and their residual passes through;
+  * the expert axis shards over the ``model`` mesh axis (expert parallelism);
+    GSPMD inserts the token all-to-all at the data<->expert resharding point;
+  * experts may be padded (granite: 40 -> 48) so E divides the model axis;
+    padded experts are masked out of the router softmax.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig, MLPKind
+from .ops import ShardCtx, rms_norm
+
+
+def moe_mlp(
+    p: Dict, x: jax.Array, cfg: ArchConfig, ctx: ShardCtx
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (B, S, d), aux-loss dict.  Pre-norm block: the
+    residual stream is rms-normed before the router and experts see it.
+
+    Two dispatch layouts:
+      * global sort (baseline): one token pool of T = B*S slots.  Simple,
+        but the combine scatter over the flattened pool cannot be sharded
+        by GSPMD — it replicates a (T, d) f32 buffer on every model-axis
+        device and all-reduces it per layer (the dominant collective cost
+        of MoE training cells).
+      * row dispatch (ctx.moe_row_dispatch, §Perf): vmap the sort
+        dispatch/combine over the BATCH dim.  Scatters/gathers then have
+        a data-sharded batch dim, so they stay local to the data shard;
+        only the compact (B, E, C_row, d) expert buffers cross the model
+        axis.  Same routing semantics per token (capacity is per row).
+    """
+    if ctx.moe_row_dispatch:
+        return _moe_mlp_rows(p, x, cfg, ctx)
+    moe = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, Ep, k = moe.n_experts, moe.n_experts_padded, moe.top_k
+    C = int(-(-T * k // Ep) * moe.capacity_factor)  # ceil(T*k/Ep)*cf
+    C = max(8, C)
+
+    xf = rms_norm(x, p["ln"], cfg.norm_eps).reshape(T, d)
+    logits = (xf @ p["router"]).astype(jnp.float32)          # (T, Ep)
+    if Ep > E:
+        pad_mask = jnp.arange(Ep) >= E
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                     # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort-based dispatch ------------------------------------------------
+    e_flat = idx.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(e_flat)                              # stable
+    e_sorted = e_flat[order]
+    tok_sorted = order // k
+    counts = jnp.sum(
+        jax.nn.one_hot(e_flat, Ep, dtype=jnp.int32), axis=0
+    )                                                        # (Ep,)
+    offsets = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k, dtype=jnp.int32) - offsets[e_sorted]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, 0)
+
+    buf = jnp.zeros((Ep, C, d), x.dtype)
+    buf = buf.at[e_sorted, pos_c].add(
+        jnp.where(keep[:, None], xf[tok_sorted], 0.0)
+    )
+    buf = ctx.act(buf, ctx.tp, None, None)                   # EP shard
+
+    # --- expert computation (batched over experts) --------------------------
+    if cfg.mlp == MLPKind.GATED_SILU:
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    out_buf = ctx.act(out_buf, ctx.tp, None, None)
+
+    # --- combine ------------------------------------------------------------
+    gathered = out_buf[e_sorted, pos_c]                      # (T*k, d)
+    g_sorted = gates.reshape(-1)[order]
+    contrib = jnp.where(keep[:, None], gathered * g_sorted[:, None], 0.0)
+    yf = jnp.zeros((T, d), x.dtype).at[tok_sorted].add(contrib)
+
+    # --- aux losses (load balance + router z-loss) ---------------------------
+    # fraction of tokens routed to each expert (top-1 assignment share)
+    me = jnp.mean(jax.nn.one_hot(idx[:, 0], Ep, dtype=jnp.float32), axis=0)
+    pe = jnp.mean(probs, axis=0)
+    load_balance = Ep * jnp.sum(me * pe)
+    z = jax.nn.logsumexp(logits, axis=-1)
+    router_z = jnp.mean(jnp.square(z))
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return yf.reshape(B, S, d), {
+        "load_balance": load_balance,
+        "router_z": router_z,
+        "drop_fraction": drop_frac,
+    }
+
+
+def _moe_mlp_rows(
+    p: Dict, x: jax.Array, cfg: ArchConfig, ctx: ShardCtx
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Row-dispatched MoE (§Perf): scatters/gathers vmapped over the
+    batch dim so they stay local to the data shard."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, Ep, k = moe.n_experts, moe.n_experts_padded, moe.top_k
+    # per-row capacity, padded to a lane-friendly multiple of 8
+    C = int(-(-S * k // Ep) * moe.capacity_factor)
+    C = max(8, (C + 7) // 8 * 8)
+
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)               # (B, S, d)
+    logits = (xn @ p["router"]).astype(jnp.float32)       # (B, S, Ep)
+    if Ep > E:
+        pad_mask = jnp.arange(Ep) >= E
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                  # (B, S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_row(xr, er):
+        """xr: (S, d); er: (S, k) -> buf (Ep, C, d), routing metadata."""
+        e_flat = er.reshape(-1)                           # (S*k,)
+        order = jnp.argsort(e_flat)
+        e_sorted = e_flat[order]
+        tok_sorted = order // k
+        counts = jnp.sum(jax.nn.one_hot(e_flat, Ep, dtype=jnp.int32), axis=0)
+        offsets = jnp.cumsum(counts) - counts
+        pos = jnp.arange(S * k, dtype=jnp.int32) - offsets[e_sorted]
+        keep = pos < C
+        pos_c = jnp.where(keep, pos, 0)
+        buf = jnp.zeros((Ep, C, d), xr.dtype)
+        buf = buf.at[e_sorted, pos_c].add(
+            jnp.where(keep[:, None], xr[tok_sorted], 0.0))
+        # token-order routing tables for the scatter-free combine
+        inv = jnp.zeros_like(order).at[order].set(
+            jnp.arange(order.shape[0], dtype=order.dtype))
+        return buf, (e_flat, pos_c[inv], keep[inv])
+
+    buf, meta = jax.vmap(dispatch_row)(xn, idx)           # (B, Ep, C, d)
+    buf = ctx.act(buf, ctx.dp, ctx.tp, None, None)        # B:data, E:model
+
+    if cfg.mlp == MLPKind.GATED_SILU:
+        h = jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) \
+            * jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", buf, p["w_up"]))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    out_buf = ctx.act(out_buf, ctx.dp, ctx.tp, None, None)
+
+    def combine_row(ob, gr, m):
+        """Scatter-free combine: gather the k expert outputs per token and
+        reduce over k.  The sum sits directly above any partial-gather
+        all-reduce GSPMD inserts for the E-sharded ``ob``, so XLA can
+        reassociate the collective to (S, d) instead of (S*k, d)."""
+        e_tok, pos_tok, keep_tok = m
+        gathered = ob[e_tok, pos_tok]                     # (S*k, d)
+        contrib = jnp.where(keep_tok[:, None],
+                            gathered * gr.reshape(-1)[:, None], 0.0)
+        return contrib.reshape(S, k, d).sum(axis=1)
+
+    y = jax.vmap(combine_row)(out_buf, gates.astype(out_buf.dtype), meta)
+    y = ctx.act(y, ctx.dp, None, None)
+
+    me = jnp.mean(jax.nn.one_hot(idx[..., 0], Ep, dtype=jnp.float32),
+                  axis=(0, 1))
+    pe = jnp.mean(probs, axis=(0, 1))
+    load_balance = Ep * jnp.sum(me * pe)
+    z = jax.nn.logsumexp(logits, axis=-1)
+    router_z = jnp.mean(jnp.square(z))
+    keep_all = meta[2]
+    drop_frac = 1.0 - jnp.mean(keep_all.astype(jnp.float32))
+    return y, {
+        "load_balance": load_balance,
+        "router_z": router_z,
+        "drop_fraction": drop_frac,
+    }

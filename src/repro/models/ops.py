@@ -1,0 +1,211 @@
+"""Shared model ops: norms, rotary embeddings, attention (direct + chunked).
+
+The chunked attention path is the XLA-portable flash analogue (scan over
+query chunks, online statistics not needed because each chunk sees all keys
+at once but never materialises the full S_q x S_k score tensor).  The Pallas
+kernel in ``repro.kernels.flash_attention`` is the TPU-optimised version of
+the same contraction and is validated against ``attention_reference``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Execution context: activation-sharding constraints + kernel
+    implementation selection.  ``enabled=False`` (smoke tests, single
+    device) turns every sharding constraint into a no-op.
+
+    ``attention_impl`` / ``ssm_impl``: "xla" (portable chunked paths,
+    the dry-run/compile default — Pallas/Mosaic does not lower on the CPU
+    backend) or "pallas" (the TPU kernels in ``repro.kernels``, run in
+    interpret mode off-TPU)."""
+
+    enabled: bool = False
+    dp: Tuple[str, ...] = ("data",)       # batch axes
+    tp: Optional[str] = "model"
+    heads_sharded: bool = True
+    ff_sharded: bool = True
+    attention_impl: str = "xla"
+    ssm_impl: str = "xla"
+    # Sequence-parallel attention: when the head count does not divide the
+    # model axis (qwen2: 12, whisper: 20 vs 16), attention would otherwise
+    # run fully REPLICATED on that axis.  This shards q (and the score /
+    # output tensors) over the model axis on the SEQUENCE dim instead —
+    # k/v stay replicated (they are small under GQA) — so attention
+    # compute and its S^2 buffers split 16-ways.  §Perf hillclimb flag.
+    seq_parallel_attn: bool = False
+    # Recompute per-chunk attention in the backward pass instead of
+    # stacking per-chunk softmax residuals (an S^2-sized buffer) between
+    # the rematted forward and the scan transpose.  §Perf hillclimb flag.
+    remat_chunk_attn: bool = False
+    # Row-local MoE dispatch (scatters vmapped over the batch dim stay on
+    # the data shard; no replicated (T, d) combine buffer).  §Perf flag.
+    moe_row_dispatch: bool = False
+    # Megatron-style sequence parallelism for the residual stream: the
+    # layer carry (and its remat-saved copy) is sharded over the model
+    # axis on the SEQ dim.  Shrinks the stacked-activation footprint by
+    # the TP degree and turns the TP partial-sum all-reduces into
+    # reduce-scatter (+ all-gather at the next consumer) = half the
+    # collective bytes.  §Perf hillclimb flag.
+    seq_parallel_residual: bool = False
+
+    def act(self, x: jax.Array, *axes) -> jax.Array:
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*axes))
+
+    def batch(self, x: jax.Array) -> jax.Array:
+        """Constrain leading axis to the data-parallel axes only."""
+        return self.act(x, self.dp, *([None] * (x.ndim - 1)))
+
+    def res(self, x: jax.Array) -> jax.Array:
+        """Residual-stream constraint for a (B, S, d) carry.  Seq-shards
+        only full sequences (decode carries have S == 1)."""
+        if self.seq_parallel_residual and self.tp is not None \
+                and x.ndim >= 3 and x.shape[1] % 128 == 0:
+            return self.act(x, self.dp, self.tp, *([None] * (x.ndim - 2)))
+        return self.batch(x)
+
+    @property
+    def heads(self):
+        return self.tp if self.heads_sharded else None
+
+
+NOSHARD = ShardCtx(enabled=False)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Interleaved (NeoX pair) rotary embedding.
+
+    Interleaved pairs (2i, 2i+1) keep each rotation local to its pair, so a
+    head-dim-sharded tensor (decode path) needs no cross-shard shuffle as
+    long as shards are even-sized.
+
+    x: (..., S, n_heads, hd); positions: (..., S) absolute positions.
+    """
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x2 = x.reshape(*x.shape[:-1], hd // 2, 2)
+    x_even, x_odd = x2[..., 0], x2[..., 1]
+    out = jnp.stack(
+        [x_even * cos - x_odd * sin, x_even * sin + x_odd * cos], axis=-1
+    )
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def attention_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Plain softmax attention with GQA head grouping (the oracle).
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).  H must be a multiple of KV.
+    ``q_offset``: absolute position of q[0] (for causal masking in decode).
+    ``kv_len``: optional dynamic number of valid kv entries (cache decode);
+    a scalar, or a (B,) vector for continuous-batching decode where every
+    slot sits at its own sequence position.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(hd).astype(jnp.float32)
+    mask = None  # broadcastable to (B, 1, 1, Sq, Sk)
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Sk)
+        mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
+    if kv_len is not None:
+        kv_len = jnp.asarray(kv_len)
+        valid = jnp.arange(Sk)[None, :] < jnp.atleast_1d(kv_len)[:, None]
+        valid = valid[:, None, None, None, :]       # (B|1, 1, 1, 1, Sk)
+        mask = valid if mask is None else mask & valid
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_chunk: int = 512,
+    remat_body: bool = False,
+) -> jax.Array:
+    """Query-chunked attention: O(q_chunk * Sk) live scores.
+
+    Matches attention_reference exactly (same math, chunked q loop).
+    ``remat_body`` recomputes each chunk's scores in the backward pass, so
+    the scan saves NO per-chunk softmax residuals (which would otherwise
+    stack into a full S^2 tensor between the forward and the transpose).
+    """
+    B, Sq, H, hd = q.shape
+    if Sq <= q_chunk:
+        return attention_reference(q, k, v, causal=causal)
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    n = Sq // q_chunk
+    qs = q.reshape(B, n, q_chunk, H, hd).swapaxes(0, 1)  # (n, B, qc, H, hd)
+
+    def chunk(i, qc, k_, v_):
+        return attention_reference(qc, k_, v_, causal=causal,
+                                   q_offset=i * q_chunk)
+
+    if remat_body:
+        chunk = jax.checkpoint(
+            chunk, policy=jax.checkpoint_policies.nothing_saveable,
+            static_argnums=(),
+        )
+
+    def body(_, args):
+        i, qc = args
+        return None, chunk(i, qc, k, v)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n), qs))
+    return outs.swapaxes(0, 1).reshape(B, Sq, H, hd)
+
+
+def softmax_cross_entropy(
+    logits: jax.Array, labels: jax.Array, vocab: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Mean CE over tokens + z-loss term; logits (..., Vp) may be padded to
+    Vp >= vocab — padded slots are masked out of the partition function."""
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > vocab:
+        pad_mask = jnp.arange(vp) >= vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (logz - gold).mean()
+    zloss = jnp.square(logz).mean()
+    return ce, zloss

@@ -1,0 +1,164 @@
+"""Logical-axis sharding: a single schema drives both parameter shapes and
+their PartitionSpecs, so init, optimizer state, and pjit in_shardings can
+never drift apart.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod.  Logical parameter axes are mapped to mesh axes by rules that are
+derived per architecture (divisibility permitting).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ArchConfig, Family
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+
+@dataclass(frozen=True)
+class ParamSchema:
+    """One parameter: shape + logical axis names + init style."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[str, ...]
+    init: str = "normal"        # normal | zeros | ones | small_normal
+    dtype: Any = None           # defaults to the model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+@dataclass
+class ShardingRules:
+    """Map from logical axis name to mesh axes (or None = replicate)."""
+
+    rules: Dict[str, MeshAxes]
+
+    def spec_for(self, logical: Sequence[str]) -> P:
+        return P(*(self.rules.get(name) for name in logical))
+
+
+def default_rules(
+    cfg: ArchConfig,
+    *,
+    model_axis: str = "model",
+    fsdp_axes: MeshAxes = "data",
+    model_size: int = 16,
+    fsdp_total: int = 16,
+    batch_axes: MeshAxes = ("data",),
+    seq_shard_cache: bool = False,
+) -> ShardingRules:
+    """Derive TP/FSDP rules for an architecture, respecting divisibility.
+
+    * ``heads_q`` shards over the model axis when n_heads divides;
+    * ``d_ff``/``d_inner``/``experts`` shard over the model axis;
+    * ``d_model`` is the FSDP (ZeRO-3) axis (spanning pod x data when
+      multi-pod);
+    * vocab is padded to 256 so ``embed_vocab`` always shards;
+    * decode caches: ``hd_cache`` shards head_dim over the model axis and
+      optionally ``seq`` over data (B=1 long-context cells).
+    """
+    def fits(n: int, size: int) -> bool:
+        return n % size == 0
+
+    rules: Dict[str, MeshAxes] = {
+        "layers": None,
+        "groups": None,
+        "scan": None,
+        "d_model": fsdp_axes if fits(cfg.d_model, fsdp_total) else None,
+        "embed_vocab": model_axis if fits(cfg.vocab_padded, model_size) else None,
+        "heads_q": model_axis if fits(cfg.n_heads, model_size) else None,
+        "heads_kv": model_axis if fits(cfg.n_kv_heads, model_size) else None,
+        "hd": None,
+        # Decode caches carry both a heads_kv and an hd_cache axis; a mesh
+        # axis may appear once per spec, so hd_cache only shards when the
+        # kv-head axis cannot (GQA with few kv heads).
+        "hd_cache": model_axis
+        if fits(cfg.hd, model_size) and not fits(cfg.n_kv_heads, model_size)
+        else None,
+        "d_ff": model_axis if cfg.d_ff and fits(cfg.d_ff, model_size) else None,
+        "conv": None,
+        "state": None,
+        "dt": None,
+        "scalar": None,
+        "batch": batch_axes,
+        "seq": "data" if seq_shard_cache else None,
+    }
+    if cfg.moe is not None:
+        rules["experts"] = (
+            model_axis if fits(cfg.moe.n_experts_padded, model_size) else None
+        )
+        # When experts shard over model, per-expert d_ff stays unsharded.
+        if rules["experts"] is not None:
+            rules["d_ff"] = None
+    if cfg.ssm is not None:
+        di = cfg.d_inner
+        rules["d_inner"] = model_axis if fits(di, model_size) else None
+        nh = di // cfg.ssm.head_dim
+        rules["ssm_heads"] = model_axis if fits(nh, model_size) else None
+    return ShardingRules(rules)
+
+
+def schema_to_pspecs(schema, rules: ShardingRules):
+    """Map a schema pytree to PartitionSpecs."""
+    return jax.tree.map(
+        lambda ps: rules.spec_for(ps.logical),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSchema),
+    )
+
+
+def init_from_schema(rng: jax.Array, schema, dtype) -> Any:
+    """Numerically initialise a parameter pytree from its schema."""
+    import jax.numpy as jnp
+
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, ParamSchema)
+    )
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for key, ps in zip(keys, leaves):
+        dt = ps.dtype or dtype
+        if ps.init == "zeros":
+            out.append(jnp.zeros(ps.shape, dt))
+        elif ps.init == "ones":
+            out.append(jnp.ones(ps.shape, dt))
+        elif ps.init == "a_log":
+            # mamba1: A = 1..n per channel; mamba2: A ~ U[1, 16] per head.
+            n = ps.shape[-1]
+            if len(ps.shape) >= 2 and n > 1:
+                a = jnp.broadcast_to(
+                    jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), ps.shape
+                )
+            else:
+                a = jnp.log(
+                    1.0 + 15.0 * jax.random.uniform(key, ps.shape)
+                )
+            out.append(a.astype(dt))
+        elif ps.init == "dt_bias":
+            # softplus(dt_bias) ~ U[1e-3, 1e-1] (mamba init)
+            u = jax.random.uniform(
+                key, ps.shape, minval=np.log(1e-3), maxval=np.log(1e-1)
+            )
+            dt_ = jnp.exp(u)
+            out.append((dt_ + jnp.log(-jnp.expm1(-dt_))).astype(dt))
+        else:
+            fan_in = ps.shape[-2] if len(ps.shape) >= 2 else ps.shape[-1]
+            scale = 0.02 if ps.init == "small_normal" else 1.0 / np.sqrt(fan_in)
+            out.append(scale * jax.random.normal(key, ps.shape, dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_from_schema(schema, dtype) -> Any:
+    """ShapeDtypeStruct pytree (for dry-run lowering: no allocation)."""
+    return jax.tree.map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, ps.dtype or dtype),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSchema),
+    )

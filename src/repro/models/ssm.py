@@ -1,0 +1,276 @@
+"""State-space blocks: mamba1 selective scan and mamba2 (SSD) chunked scan.
+
+Both have a full-sequence path (training / prefill) and an O(1) recurrent
+decode step.  The full-sequence mamba2 path uses the chunked SSD algorithm
+(intra-chunk quadratic + inter-chunk state passing), which is also the
+blueprint for the Pallas kernel in ``repro.kernels.ssd_scan``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .ops import ShardCtx, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C); b: (C,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return out + b[None, None, :]
+
+
+def conv_step(
+    x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """One causal-conv decode step.  x_t: (B, C); conv_state: (B, K-1, C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b[None, :]
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# mamba1 (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+
+def mamba1_scan(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bc: jax.Array, Cc: jax.Array,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Selective scan.  x, dt: (B,S,di); A: (di,n); Bc, Cc: (B,S,n).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;  y_t = C_t . h_t
+    Associative scan over S (log-depth).  Returns (y (B,S,di), h_S).
+    """
+    dA = jnp.exp(dt[..., None] * A[None, None])                  # (B,S,di,n)
+    dBx = (dt * x)[..., None] * Bc[:, :, None, :]                # (B,S,di,n)
+    if h0 is not None:
+        # fold carry-in into the first step
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h0)
+
+    def combine(a, b):
+        a1, b1 = a
+        a2, b2 = b
+        return a1 * a2, b1 * a2 + b2
+
+    aA, h = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cc)
+    return y, h[:, -1]
+
+
+def mamba1_block(
+    p: Dict, x: jax.Array, cfg: ArchConfig, ctx: ShardCtx,
+    cache: Optional[Dict] = None, return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Full mamba1 block.  x: (B, S, d).  With ``cache`` (decode), S == 1.
+    ``return_state`` (prefill): emit {conv, ssm} states for later decode."""
+    ssm = cfg.ssm
+    di, n = cfg.d_inner, ssm.d_state
+    dt_rank = max(1, cfg.d_model // 16)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = h @ p["w_in"]                             # (B,S,2*di)
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = ctx.act(xi, ctx.dp, None, ctx.tp)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))   # (di,n)
+
+    if cache is None:
+        K = ssm.d_conv
+        xc = jax.nn.silu(causal_conv(xi, p["conv_w"], p["conv_b"]))
+        xdb = xc @ p["w_xproj"]                    # (B,S,r+2n)
+        dt = jax.nn.softplus(xdb[..., :dt_rank] @ p["w_dt"] + p["dt_bias"])
+        Bc = xdb[..., dt_rank : dt_rank + n].astype(jnp.float32)
+        Cc = xdb[..., dt_rank + n :].astype(jnp.float32)
+        y, h_fin = mamba1_scan(
+            xc.astype(jnp.float32), dt.astype(jnp.float32), A, Bc, Cc
+        )
+        y = y.astype(x.dtype) + xc * p["D"][None, None, :]
+        out = (y * jax.nn.silu(z)) @ p["w_out"]
+        state = None
+        if return_state:
+            state = {"conv": xi[:, -(K - 1):, :], "ssm": h_fin}
+        return x + out, state
+
+    # --- decode step ------------------------------------------------------
+    x_t = xi[:, 0]                                  # (B, di)
+    xc, conv_state = conv_step(x_t, cache["conv"], p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    xdb = xc @ p["w_xproj"]
+    dt = jax.nn.softplus(xdb[..., :dt_rank] @ p["w_dt"] + p["dt_bias"])
+    Bc = xdb[..., dt_rank : dt_rank + n].astype(jnp.float32)
+    Cc = xdb[..., dt_rank + n :].astype(jnp.float32)
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None])      # (B,di,n)
+    hs = cache["ssm"] * dA + (dt * xc).astype(jnp.float32)[..., None] \
+        * Bc[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", hs, Cc).astype(x.dtype)
+    y = y + xc * p["D"][None, :]
+    out = (y * jax.nn.silu(z[:, 0])) @ p["w_out"]
+    return x + out[:, None, :], {"conv": conv_state, "ssm": hs}
+
+
+# ---------------------------------------------------------------------------
+# mamba2 / SSD (zamba2 backbone)
+# ---------------------------------------------------------------------------
+
+
+def segsum(dtA: jax.Array) -> jax.Array:
+    """Lower-triangular cumulative decay: out[..., i, j] = sum_{j<k<=i} dtA_k
+    for j <= i, -inf otherwise.  dtA: (..., Q)."""
+    Q = dtA.shape[-1]
+    cs = jnp.cumsum(dtA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array, dt: jax.Array, A: jax.Array, Bc: jax.Array, Cc: jax.Array,
+    chunk: int, h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD, chunked.  x: (B,S,nh,hp); dt: (B,S,nh); A: (nh,) (<0);
+    Bc, Cc: (B,S,n) (shared across heads).  Returns (y, h_final (B,nh,hp,n)).
+    """
+    B_, S, nh, hp = x.shape
+    n = Bc.shape[-1]
+    S0 = S
+    if S % chunk:
+        # pad to a chunk multiple: padded steps have dt = 0, so exp(dt*A) = 1
+        # and dt*B*x = 0 — the state passes through unchanged.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+
+    # reshape into chunks
+    xc = x.reshape(B_, nc, chunk, nh, hp)
+    dtc = dt.reshape(B_, nc, chunk, nh)
+    Bcc = Bc.reshape(B_, nc, chunk, n)
+    Ccc = Cc.reshape(B_, nc, chunk, n)
+    dtA = dtc * A[None, None, None, :]                     # (B,nc,Q,nh)
+
+    # intra-chunk (quadratic within chunk)
+    L = jnp.exp(segsum(dtA.swapaxes(-1, -2)))              # (B,nc,nh,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Ccc, Bcc)       # (B,nc,Q,Q)
+    y_intra = _ssd_intra(L, scores, dtc, xc)
+
+    # chunk state: S_c = sum_k exp(sum_{j>k} dtA_j) dt_k B_k x_k
+    dtA_cum = jnp.cumsum(dtA, axis=2)                      # (B,nc,Q,nh)
+    decay_to_end = jnp.exp(dtA_cum[:, :, -1:, :] - dtA_cum)  # (B,nc,Q,nh)
+    states = jnp.einsum(
+        "bcqh,bcqh,bcqn,bcqhp->bchpn", decay_to_end, dtc, Bcc, xc
+    )                                                      # (B,nc,nh,hp,n)
+
+    # inter-chunk recurrence (sequential over nc, nc is small)
+    chunk_decay = jnp.exp(dtA_cum[:, :, -1, :])            # (B,nc,nh)
+
+    def step(h, inp):
+        s_c, dec = inp                                     # (B,nh,hp,n),(B,nh)
+        h_new = h * dec[..., None, None] + s_c
+        return h_new, h                                    # emit state BEFORE chunk
+
+    h_init = jnp.zeros((B_, nh, hp, n), x.dtype) if h0 is None else h0
+    h_fin, h_prevs = jax.lax.scan(
+        step, h_init,
+        (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)),
+    )
+    h_prevs = h_prevs.swapaxes(0, 1)                       # (B,nc,nh,hp,n)
+
+    # inter-chunk contribution: y_inter[q] = exp(dtA_cum[q]) C_q . h_prev
+    in_decay = jnp.exp(dtA_cum)                            # (B,nc,Q,nh)
+    y_inter = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Ccc, h_prevs, in_decay
+    )
+    y = (y_intra + y_inter).reshape(B_, S, nh, hp)[:, :S0]
+    return y, h_fin
+
+
+def _ssd_intra(L, scores, dtc, xc):
+    """y_intra = sum_k L[h,q,k] * scores[q,k] * dt[k,h] * x[k,h,p]."""
+    w = L * scores[:, :, None, :, :]                       # (B,nc,nh,Q,Q)
+    wdt = w * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]  # * dt_k
+    return jnp.einsum("bchqk,bckhp->bcqhp", wdt, xc)
+
+
+def mamba2_block(
+    p: Dict, x: jax.Array, cfg: ArchConfig, ctx: ShardCtx,
+    cache: Optional[Dict] = None, return_state: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """Mamba2 block (zamba2 backbone layer).  x: (B,S,d)."""
+    ssm = cfg.ssm
+    di, n, hp = cfg.d_inner, ssm.d_state, ssm.head_dim
+    nh = di // hp
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    z = h @ p["wz"]
+    xi = h @ p["wx"]
+    Bc = h @ p["wB"]
+    Cc = h @ p["wC"]
+    dt = jax.nn.softplus(h @ p["wdt"] + p["dt_bias"])      # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # (nh,)
+
+    if cache is None:
+        K = ssm.d_conv
+        xc = jax.nn.silu(causal_conv(xi, p["conv_x_w"], p["conv_x_b"]))
+        Bcv = jax.nn.silu(causal_conv(Bc, p["conv_B_w"], p["conv_B_b"]))
+        Ccv = jax.nn.silu(causal_conv(Cc, p["conv_C_w"], p["conv_C_b"]))
+        xh = xc.reshape(*xc.shape[:2], nh, hp)
+        if ctx.ssm_impl == "pallas":
+            from repro.kernels.ops import ssd_scan
+
+            y, h_fin = ssd_scan(
+                xh.astype(jnp.float32), dt.astype(jnp.float32), A,
+                Bcv.astype(jnp.float32), Ccv.astype(jnp.float32),
+                chunk=ssm.chunk,
+            )
+        else:
+            y, h_fin = ssd_chunked(
+                xh.astype(jnp.float32), dt.astype(jnp.float32), A,
+                Bcv.astype(jnp.float32), Ccv.astype(jnp.float32), ssm.chunk,
+            )
+        y = y.astype(x.dtype) + xh * p["D"][None, None, :, None]
+        y = y.reshape(*xc.shape[:2], di)
+        y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+        state = None
+        if return_state:
+            state = {
+                "conv_x": xi[:, -(K - 1):, :],
+                "conv_B": Bc[:, -(K - 1):, :],
+                "conv_C": Cc[:, -(K - 1):, :],
+                "ssm": h_fin,
+            }
+        return x + y @ p["w_out"], state
+
+    # --- decode -------------------------------------------------------------
+    xc, conv_x = conv_step(xi[:, 0], cache["conv_x"], p["conv_x_w"], p["conv_x_b"])
+    Bcv, conv_B = conv_step(Bc[:, 0], cache["conv_B"], p["conv_B_w"], p["conv_B_b"])
+    Ccv, conv_C = conv_step(Cc[:, 0], cache["conv_C"], p["conv_C_w"], p["conv_C_b"])
+    xc, Bcv, Ccv = jax.nn.silu(xc), jax.nn.silu(Bcv), jax.nn.silu(Ccv)
+    xh = xc.reshape(-1, nh, hp).astype(jnp.float32)
+    dt0 = dt[:, 0].astype(jnp.float32)                      # (B,nh)
+    dA = jnp.exp(dt0 * A[None])                             # (B,nh)
+    hs = cache["ssm"] * dA[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt0, xh, Bcv.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bn->bhp", hs, Ccv.astype(jnp.float32))
+    y = y.astype(x.dtype) + xh.astype(x.dtype) * p["D"][None, :, None]
+    y = y.reshape(-1, di)
+    y = rms_norm(y * jax.nn.silu(z[:, 0]), p["out_norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    return x + out[:, None, :], {
+        "conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C, "ssm": hs,
+    }

@@ -1,0 +1,2 @@
+"""Optimizers."""
+from . import adamw

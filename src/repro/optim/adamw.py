@@ -1,0 +1,137 @@
+"""AdamW with cosine schedule, global-norm clipping, configurable
+optimizer-state dtype (bf16 moments for 100B+ models), and optional int8
+error-feedback gradient compression for the cross-pod (DCN) data-parallel
+all-reduce.
+
+The compression path implements the standard error-feedback scheme:
+  q = quantize(g + e);  e' = (g + e) - dequant(q);  update uses dequant(q)
+so the quantisation error is re-injected on the next step — unbiased in the
+long run and robust at int8 for DP gradients.  Compression shrinks the
+cross-pod collective bytes ~2x (bf16->int8), directly attacking the
+collective roofline term of multi-pod training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    min_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"      # "float32" | "bfloat16"
+    compress_grads: bool = False      # int8 error-feedback DP compression
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    error: Any   # error-feedback residual (zeros when compression is off)
+
+
+def schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(cfg: OptimizerConfig, params: Any) -> OptState:
+    dt = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    mu = jax.tree.map(zeros, params)
+    nu = jax.tree.map(zeros, params)
+    err = jax.tree.map(
+        (lambda p: jnp.zeros(p.shape, jnp.float32))
+        if cfg.compress_grads else (lambda p: jnp.zeros((), jnp.float32)),
+        params,
+    )
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu, error=err)
+
+
+def _quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_gradient(g: jax.Array, err: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback int8 round-trip (applied before the DP all-reduce of
+    the pod axis; the all-reduce itself runs on the dequantised tensor, but
+    the wire format in the collective-permute based DCN reducer is int8)."""
+    t = g.astype(jnp.float32) + err
+    q, scale = _quantize_int8(t)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), t - deq
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def apply(
+    cfg: OptimizerConfig,
+    params: Any,
+    grads: Any,
+    state: OptState,
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    step = state.step + 1
+
+    error = state.error
+    if cfg.compress_grads:
+        pairs = jax.tree.map(compress_gradient, grads, state.error)
+        grads = jax.tree.map(lambda p: p[0], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        error = jax.tree.map(lambda p: p[1], pairs,
+                             is_leaf=lambda x: isinstance(x, tuple))
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        mh = m32 / b1c
+        vh = v32 / b2c
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p32 = p.astype(jnp.float32) - lr * (step_ + decay)
+        return p32.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, OptState(step, new_m, new_v, error), metrics

@@ -1,0 +1,3 @@
+"""Serving layer: continuous-batching engine over the framework's
+prefill/decode steps."""
+from .engine import EngineStats, Request, ServeEngine  # noqa: F401

@@ -1,0 +1,153 @@
+"""Training and serving step factories.
+
+``make_train_step`` builds a pure (params, opt_state, batch) ->
+(params, opt_state, metrics) function with:
+  * gradient accumulation over microbatches (lax.scan) — bounds activation
+    memory at any model size;
+  * per-layer remat (jax.checkpoint) inside the layer scan;
+  * MoE auxiliary losses folded into the objective;
+  * AdamW with clipping/schedule, optional int8 error-feedback compression.
+
+``make_prefill_step`` / ``make_serve_step`` build the serving entry points
+(full-sequence cache build and the one-token decode step the decode_* /
+long_* dry-run cells lower).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, CellTuning, Family
+from repro.models.model import DECODE, PREFILL, TRAIN, forward
+from repro.models.ops import ShardCtx, softmax_cross_entropy
+from repro.optim import adamw
+
+LOAD_BALANCE_COEF = 0.01
+ROUTER_Z_COEF = 1e-4
+Z_LOSS_COEF = 1e-4
+
+
+def loss_fn(
+    params: Any,
+    cfg: ArchConfig,
+    batch: Dict[str, jax.Array],
+    ctx: ShardCtx,
+    tuning: CellTuning,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, _, aux = forward(
+        params, cfg, batch, ctx=ctx, mode=TRAIN,
+        remat=tuning.remat,
+        compute_dtype=jnp.dtype(tuning.compute_dtype),
+    )
+    ce, zloss = softmax_cross_entropy(logits, batch["labels"], cfg.vocab)
+    loss = ce + Z_LOSS_COEF * zloss
+    metrics = {"ce": ce, "z_loss": zloss}
+    if aux:
+        loss = loss + LOAD_BALANCE_COEF * aux["load_balance"] \
+            + ROUTER_Z_COEF * aux["router_z"]
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: adamw.OptimizerConfig,
+    tuning: CellTuning,
+    ctx: ShardCtx = ShardCtx(enabled=False),
+) -> Callable:
+    """Returns train_step(params, opt_state, batch)."""
+    n_micro = tuning.num_microbatches
+    accum_dtype = jnp.dtype(tuning.accum_dtype)
+
+    def train_step(params, opt_state, batch):
+        gb = batch["tokens"].shape[0]
+        assert gb % n_micro == 0, (gb, n_micro)
+
+        def micro(b):
+            return jax.tree.map(
+                lambda a: a.reshape(n_micro, gb // n_micro, *a.shape[1:]), b
+            )
+
+        micro_batches = micro(batch)
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: loss_fn(p, cfg, mb, ctx, tuning), has_aux=True
+        )
+
+        def accum(carry, mb):
+            gsum, msum = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(accum_dtype), gsum, grads
+            )
+            msum = jax.tree.map(lambda a, m: a + m, msum, metrics)
+            return (gsum, msum), None
+
+        gzero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, accum_dtype), params
+        )
+        mzero = {
+            k: jnp.zeros((), jnp.float32)
+            for k in _metric_keys(cfg)
+        }
+        (gsum, msum), _ = jax.lax.scan(accum, (gzero, mzero), micro_batches)
+        grads = jax.tree.map(lambda g: (g / n_micro), gsum)
+        metrics = {k: v / n_micro for k, v in msum.items()}
+
+        params, opt_state, opt_metrics = adamw.apply(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _metric_keys(cfg: ArchConfig):
+    keys = ["ce", "z_loss", "loss"]
+    if cfg.family == Family.MOE:
+        keys += ["drop_fraction", "load_balance", "router_z"]
+    return keys
+
+
+def make_prefill_step(
+    cfg: ArchConfig,
+    tuning: CellTuning,
+    ctx: ShardCtx = ShardCtx(enabled=False),
+) -> Callable:
+    """prefill(params, batch) -> (last-token logits, cache)."""
+
+    def prefill_step(params, batch):
+        logits, cache, _ = forward(
+            params, cfg, batch, ctx=ctx, mode=PREFILL,
+            remat=False, compute_dtype=jnp.dtype(tuning.compute_dtype),
+        )
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_serve_step(
+    cfg: ArchConfig,
+    tuning: CellTuning,
+    ctx: ShardCtx = ShardCtx(enabled=False),
+) -> Callable:
+    """serve_step(params, cache, tokens (B,1)) -> (logits (B,Vp), cache).
+
+    One new token against a KV/state cache of length seq_len — this is what
+    the decode_* / long_* cells lower and compile."""
+
+    def serve_step(params, cache, tokens):
+        logits, new_cache, _ = forward(
+            params, cfg, {"tokens": tokens}, ctx=ctx, mode=DECODE,
+            cache=cache, remat=False,
+            compute_dtype=jnp.dtype(tuning.compute_dtype),
+        )
+        return logits[:, -1], new_cache
+
+    return serve_step

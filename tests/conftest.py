@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the real (1-device) CPU platform.  Only the dry-run entry
+# point forces 512 placeholder devices — never set that flag here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

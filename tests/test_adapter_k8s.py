@@ -1,0 +1,61 @@
+"""Kubernetes dialect of the Constraint Adapter (Sect. 3.1 generality)."""
+import pytest
+
+from repro.configs import boutique
+from repro.core import adapter
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.types import Affinity, AvoidNode, TimeShift
+
+
+def test_avoidnode_maps_to_node_anti_affinity():
+    cs = [AvoidNode(service="frontend", flavour="large", node="italy",
+                    weight=1.0),
+          AvoidNode(service="frontend", flavour="large", node="greatbritain",
+                    weight=0.636)]
+    k8s = adapter.to_kubernetes(cs)
+    prefs = k8s["frontend"]["affinity"]["nodeAffinity"][
+        "preferredDuringSchedulingIgnoredDuringExecution"]
+    assert len(prefs) == 2
+    assert prefs[0]["weight"] == 100 and prefs[1]["weight"] == 64
+    expr = prefs[0]["preference"]["matchExpressions"][0]
+    assert expr["operator"] == "NotIn" and expr["values"] == ["italy"]
+
+
+def test_affinity_maps_to_pod_affinity():
+    cs = [Affinity(service="prefill", flavour="perf", other="decode",
+                   weight=0.34)]
+    k8s = adapter.to_kubernetes(cs)
+    prefs = k8s["prefill"]["affinity"]["podAffinity"][
+        "preferredDuringSchedulingIgnoredDuringExecution"]
+    assert prefs[0]["weight"] == 34
+    assert prefs[0]["podAffinityTerm"]["labelSelector"]["matchLabels"] == \
+        {"app": "decode"}
+
+
+def test_timeshift_maps_to_suspend_annotations():
+    cs = [TimeShift(service="batch", flavour="perf", node="texas",
+                    shift_h=6, weight=0.73)]
+    k8s = adapter.to_kubernetes(cs)
+    ann = k8s["batch"]["annotations"]
+    assert ann["greenops/suspend"] == "true"
+    assert ann["greenops/not-before-offset-hours"] == "6"
+
+
+def test_memory_weight_attenuates_k8s_weight():
+    c = AvoidNode(service="s", flavour="f", node="n", weight=1.0,
+                  memory_weight=0.5)
+    prefs = adapter.to_kubernetes([c])["s"]["affinity"]["nodeAffinity"][
+        "preferredDuringSchedulingIgnoredDuringExecution"]
+    assert prefs[0]["weight"] == 50
+
+
+def test_end_to_end_scenario1_to_k8s():
+    app, infra, mon = boutique.scenario(1)
+    out = GreenConstraintPipeline().run(app, infra, mon, use_kb=False)
+    k8s = adapter.to_kubernetes(out.constraints)
+    # every constrained service gets a fragment; weights within K8s range
+    assert "frontend" in k8s and "productcatalog" in k8s
+    for frag in k8s.values():
+        for pref in frag["affinity"].get("nodeAffinity", {}).get(
+                "preferredDuringSchedulingIgnoredDuringExecution", []):
+            assert 1 <= pref["weight"] <= 100

@@ -1,0 +1,183 @@
+"""Unit tests for the loop-aware HLO cost model — the §Roofline measuring
+instrument — against hand-written SPMD module text."""
+import pytest
+
+from repro.launch import hlo_cost
+
+
+def analyze(text):
+    return hlo_cost.analyze(text)
+
+
+def test_dot_flops_and_bytes():
+    hlo = """
+ENTRY %main (a: f32[128,256], b: f32[256,512]) -> f32[128,512] {
+  %a = f32[128,256]{1,0} parameter(0)
+  %b = f32[256,512]{1,0} parameter(1)
+  ROOT %dot.1 = f32[128,512]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    t = analyze(hlo)
+    # 2 * M*K * N = 2 * 128*256 * 512
+    assert t.flops == pytest.approx(2 * 128 * 256 * 512)
+    # operands + result, f32
+    assert t.bytes == pytest.approx(4 * (128 * 256 + 256 * 512 + 128 * 512))
+
+
+def test_while_trip_count_multiplies():
+    hlo = """
+%body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %dot.2 = f32[64,64]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[64,64]) tuple(%i, %dot.2)
+}
+%cond (q: (s32[], f32[64,64])) -> pred[] {
+  %q = (s32[], f32[64,64]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+ENTRY %main (init: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %init = (s32[], f32[64,64]) parameter(0)
+  ROOT %while.1 = (s32[], f32[64,64]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"28"}}
+}
+"""
+    t = analyze(hlo)
+    assert t.flops == pytest.approx(28 * 2 * 64 ** 3)
+
+
+def test_collective_bytes_and_counts():
+    hlo = """
+ENTRY %main (x: bf16[1024,1024]) -> bf16[1024,1024] {
+  %x = bf16[1024,1024]{1,0} parameter(0)
+  %all-reduce.1 = bf16[1024,1024]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %all-gather.1 = bf16[1024,1024]{1,0} all-gather(%all-reduce.1), dimensions={0}
+}
+"""
+    t = analyze(hlo)
+    assert t.coll_counts == {"all-reduce": 1, "all-gather": 1}
+    assert t.coll_bytes == pytest.approx(2 * 2 * 1024 * 1024)
+
+
+def test_bare_dus_charges_update_only():
+    hlo = """
+ENTRY %main (buf: f32[32,1024], upd: f32[1,1024], i: s32[]) -> f32[32,1024] {
+  %buf = f32[32,1024]{1,0} parameter(0)
+  %upd = f32[1,1024]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  %c0 = s32[] constant(0)
+  ROOT %dynamic-update-slice.1 = f32[32,1024]{1,0} dynamic-update-slice(%buf, %upd, %i, %c0)
+}
+"""
+    t = analyze(hlo)
+    # read update + write region; the buffer is aliased in place
+    assert t.bytes == pytest.approx(2 * 4 * 1024)
+
+
+def test_fusion_dus_root_aliases_buffer():
+    hlo = """
+%fused_computation.1 (param_0: s32[], param_1: f32[32,1024], param_2: f32[1,1024]) -> f32[32,1024] {
+  %param_1 = f32[32,1024]{1,0} parameter(1)
+  %param_2 = f32[1,1024]{1,0} parameter(2)
+  %param_0 = s32[] parameter(0)
+  %c0 = s32[] constant(0)
+  ROOT %dynamic-update-slice.2 = f32[32,1024]{1,0} dynamic-update-slice(%param_1, %param_2, %param_0, %c0)
+}
+ENTRY %main (buf: f32[32,1024], upd: f32[1,1024], i: s32[]) -> f32[32,1024] {
+  %buf = f32[32,1024]{1,0} parameter(0)
+  %upd = f32[1,1024]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %fusion.1 = f32[32,1024]{1,0} fusion(%i, %buf, %upd), kind=kLoop, calls=%fused_computation.1
+}
+"""
+    t = analyze(hlo)
+    # write = update region; reads = update + scalar; buffer aliased
+    assert t.bytes == pytest.approx(4 * 1024 + (4 * 1024 + 4))
+
+
+def test_fusion_convert_dus_convert_treated_as_aliased():
+    """The CPU proxy backend's f32 round-trip around a bf16 loop-carried
+    buffer must be charged as an aliased update at the STORAGE dtype —
+    cost-model refinement v3."""
+    hlo = """
+%fused_computation.2 (param_0: s32[], param_1: bf16[32,1024], param_2: f32[1,1024]) -> bf16[32,1024] {
+  %param_1 = bf16[32,1024]{1,0} parameter(1)
+  %convert.1 = f32[32,1024]{1,0} convert(%param_1)
+  %param_2 = f32[1,1024]{1,0} parameter(2)
+  %param_0 = s32[] parameter(0)
+  %c0 = s32[] constant(0)
+  %dynamic-update-slice.3 = f32[32,1024]{1,0} dynamic-update-slice(%convert.1, %param_2, %param_0, %c0)
+  ROOT %convert.2 = bf16[32,1024]{1,0} convert(%dynamic-update-slice.3)
+}
+ENTRY %main (buf: bf16[32,1024], upd: f32[1,1024], i: s32[]) -> bf16[32,1024] {
+  %buf = bf16[32,1024]{1,0} parameter(0)
+  %upd = f32[1,1024]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %fusion.2 = bf16[32,1024]{1,0} fusion(%i, %buf, %upd), kind=kLoop, calls=%fused_computation.2
+}
+"""
+    t = analyze(hlo)
+    # write charged at bf16 (the storage dtype): 2 * 1024; reads: the f32
+    # update operand (4 * 1024) + scalar; the bf16 buffer is aliased.
+    assert t.bytes == pytest.approx(2 * 1024 + 4 * 1024 + 4)
+    # well below streaming the whole 32x1024 buffer through f32
+    assert t.bytes < 4 * 32 * 1024
+
+
+def test_fusion_param_consumed_by_dynamic_slice_charges_slice():
+    hlo = """
+%fused_computation.3 (param_0: f32[96,4096], param_1: s32[]) -> f32[1,4096] {
+  %param_0 = f32[96,4096]{1,0} parameter(0)
+  %param_1 = s32[] parameter(1)
+  %c0 = s32[] constant(0)
+  ROOT %dynamic-slice.1 = f32[1,4096]{1,0} dynamic-slice(%param_0, %param_1, %c0), dynamic_slice_sizes={1,4096}
+}
+ENTRY %main (stack: f32[96,4096], i: s32[]) -> f32[1,4096] {
+  %stack = f32[96,4096]{1,0} parameter(0)
+  %i = s32[] parameter(1)
+  ROOT %fusion.3 = f32[1,4096]{1,0} fusion(%stack, %i), kind=kLoop, calls=%fused_computation.3
+}
+"""
+    t = analyze(hlo)
+    # read the slice (not the 96-layer stack) + scalar + write the slice
+    assert t.bytes == pytest.approx(4 * 4096 + 4 + 4 * 4096)
+
+
+def test_elementwise_fusion_charges_operands_and_result():
+    hlo = """
+%fused_computation.4 (param_0: f32[512,512], param_1: f32[512,512]) -> f32[512,512] {
+  %param_0 = f32[512,512]{1,0} parameter(0)
+  %param_1 = f32[512,512]{1,0} parameter(1)
+  ROOT %add.1 = f32[512,512]{1,0} add(%param_0, %param_1)
+}
+ENTRY %main (a: f32[512,512], b: f32[512,512]) -> f32[512,512] {
+  %a = f32[512,512]{1,0} parameter(0)
+  %b = f32[512,512]{1,0} parameter(1)
+  ROOT %fusion.4 = f32[512,512]{1,0} fusion(%a, %b), kind=kLoop, calls=%fused_computation.4
+}
+"""
+    t = analyze(hlo)
+    assert t.bytes == pytest.approx(3 * 4 * 512 * 512)
+
+
+def test_collectives_inside_while_multiply():
+    hlo = """
+%body2 (p: (s32[], bf16[256,256])) -> (s32[], bf16[256,256]) {
+  %p = (s32[], bf16[256,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = bf16[256,256]{1,0} get-tuple-element(%p), index=1
+  %all-reduce.2 = bf16[256,256]{1,0} all-reduce(%x), replica_groups={}, to_apply=%add
+  ROOT %t = (s32[], bf16[256,256]) tuple(%i, %all-reduce.2)
+}
+%cond2 (q: (s32[], bf16[256,256])) -> pred[] {
+  %q = (s32[], bf16[256,256]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+ENTRY %main (init: (s32[], bf16[256,256])) -> (s32[], bf16[256,256]) {
+  %init = (s32[], bf16[256,256]) parameter(0)
+  ROOT %while.2 = (s32[], bf16[256,256]) while(%init), condition=%cond2, body=%body2, backend_config={"known_trip_count":{"n":"8"}}
+}
+"""
+    t = analyze(hlo)
+    assert t.coll_counts["all-reduce"] == 8
+    assert t.coll_bytes == pytest.approx(8 * 2 * 256 * 256)

@@ -1,0 +1,60 @@
+"""CLI smoke tests for the launch drivers (subprocess: drivers own their
+process-level jax configuration)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+ENV = {**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"}
+
+
+def run_cli(args, timeout=480):
+    return subprocess.run(
+        [sys.executable, "-m"] + args,
+        capture_output=True, text=True, timeout=timeout, env=ENV,
+    )
+
+
+@pytest.mark.slow
+def test_train_cli_with_checkpointing(tmp_path):
+    proc = run_cli([
+        "repro.launch.train", "--arch", "qwen2-1.5b", "--steps", "12",
+        "--seq-len", "32", "--batch", "4", "--log-every", "6",
+        "--ckpt-dir", str(tmp_path),
+    ])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "done:" in proc.stdout
+    assert any(p.startswith("step_") for p in os.listdir(tmp_path))
+    # resume: second invocation starts from the saved step
+    proc2 = run_cli([
+        "repro.launch.train", "--arch", "qwen2-1.5b", "--steps", "14",
+        "--seq-len", "32", "--batch", "4", "--log-every", "2",
+        "--ckpt-dir", str(tmp_path),
+    ])
+    assert proc2.returncode == 0, proc2.stderr[-2000:]
+    assert "step    14" in proc2.stdout
+    assert "step     2" not in proc2.stdout  # did not restart from scratch
+
+
+@pytest.mark.slow
+def test_serve_cli():
+    proc = run_cli([
+        "repro.launch.serve", "--arch", "falcon-mamba-7b", "--batch", "2",
+        "--prompt-len", "8", "--gen", "4",
+    ])
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "decoded 8 tokens" in proc.stdout
+
+
+@pytest.mark.slow
+def test_dryrun_cli_single_cell():
+    """The real dry-run entry point (512 fake devices) on the smallest
+    cell — proves the CLI path end to end."""
+    proc = run_cli([
+        "repro.launch.dryrun", "--arch", "zamba2-1.2b",
+        "--shape", "decode_32k",
+    ], timeout=560)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "[OK]" in proc.stdout and "bottleneck=" in proc.stdout

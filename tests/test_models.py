@@ -1,0 +1,191 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU) plus
+prefill/decode consistency and Pallas-vs-XLA implementation equivalence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.models.config import CellTuning, Family
+from repro.models.model import (
+    DECODE,
+    PREFILL,
+    TRAIN,
+    cache_schema,
+    forward,
+)
+from repro.models.ops import NOSHARD
+from repro.models.schema import build_schema
+from repro.models.sharding import abstract_from_schema, init_from_schema
+from repro.models.testing import reduced
+from repro.optim import adamw
+from repro.train.steps import (
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+B, S = 2, 16
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for name, full in ARCHS.items():
+        cfg = reduced(full)
+        params = init_from_schema(RNG, build_schema(cfg), jnp.float32)
+        batch = {
+            "tokens": jax.random.randint(RNG, (B, S), 0, cfg.vocab),
+            "labels": jax.random.randint(RNG, (B, S), 0, cfg.vocab),
+        }
+        if cfg.enc_len:
+            batch["enc_embeds"] = 0.02 * jax.random.normal(
+                RNG, (B, cfg.enc_len, cfg.d_model), jnp.float32)
+        out[name] = (cfg, params, batch)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_forward_shapes_and_finiteness(setups, name):
+    cfg, params, batch = setups[name]
+    logits, cache, aux = forward(params, cfg, batch, mode=TRAIN,
+                                 compute_dtype=jnp.float32)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert cache is None
+    assert np.isfinite(np.asarray(logits)).all()
+    if cfg.family == Family.MOE:
+        assert set(aux) >= {"load_balance", "router_z", "drop_fraction"}
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_train_step_runs_and_loss_finite(setups, name):
+    cfg, params, batch = setups[name]
+    tuning = CellTuning(num_microbatches=2, remat=True,
+                        compute_dtype="float32")
+    opt_cfg = adamw.OptimizerConfig()
+    opt_state = adamw.init(opt_cfg, params)
+    step = jax.jit(make_train_step(cfg, opt_cfg, tuning))
+    p2, o2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) < 20.0  # ~ln(vocab) scale, not exploded
+    assert int(o2.step) == 1
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, p2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefill_decode_matches_full_forward(setups, name):
+    cfg, params, batch = setups[name]
+    tuning = CellTuning(compute_dtype="float32")
+    pre = jax.jit(make_prefill_step(cfg, tuning))
+    dec = jax.jit(make_serve_step(cfg, tuning))
+
+    pb = {k: v for k, v in batch.items() if k != "labels"}
+    last_logits, cache = pre(params, pb)
+    # pad cache seq dim from S to S+4 (serve uses a fixed max length)
+    def pad_seq(a, axis):
+        w = [(0, 0)] * a.ndim
+        w[axis] = (0, 4)
+        return jnp.pad(a, w)
+    padded = {}
+    for k, v in cache.items():
+        if k in ("k", "v", "shared_k", "shared_v") and v.shape[2] == S:
+            padded[k] = pad_seq(v, 2)
+        else:
+            padded[k] = v
+    nxt = jnp.argmax(last_logits[:, : cfg.vocab], axis=-1)[:, None]
+    dl, cache2 = dec(params, padded, nxt)
+    assert int(cache2["pos"]) == S + 1
+
+    toks2 = jnp.concatenate([batch["tokens"], nxt], axis=1)
+    fb = dict(pb, tokens=toks2)
+    full, _, _ = forward(params, cfg, fb, mode=TRAIN,
+                         compute_dtype=jnp.float32)
+    err = np.abs(np.asarray(dl) - np.asarray(full[:, -1])).max()
+    assert err < 2e-3, err
+
+
+@pytest.mark.parametrize("name", ["yi-9b", "zamba2-1.2b", "whisper-large-v3",
+                                  "falcon-mamba-7b"])
+def test_pallas_impl_matches_xla_impl(setups, name):
+    cfg, params, batch = setups[name]
+    ctx_p = dataclasses.replace(NOSHARD, attention_impl="pallas",
+                                ssm_impl="pallas")
+    l_x, _, _ = forward(params, cfg, batch, ctx=NOSHARD, mode=TRAIN,
+                        compute_dtype=jnp.float32)
+    l_p, _, _ = forward(params, cfg, batch, ctx=ctx_p, mode=TRAIN,
+                        compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(l_p), np.asarray(l_x),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_vocab_padding_masked_out_of_loss(setups):
+    from repro.models.ops import softmax_cross_entropy
+    cfg, params, batch = setups["qwen2-1.5b"]  # vocab 257 -> padded 512
+    assert cfg.vocab_padded > cfg.vocab
+    logits, _, _ = forward(params, cfg, batch, mode=TRAIN,
+                           compute_dtype=jnp.float32)
+    ce, _ = softmax_cross_entropy(logits, batch["labels"], cfg.vocab)
+    # CE must be <= log(vocab_padded); with proper masking ~ log(vocab)
+    assert float(ce) < np.log(cfg.vocab) + 1.0
+
+
+def test_remat_does_not_change_loss(setups):
+    cfg, params, batch = setups["yi-6b"]
+    from repro.train.steps import loss_fn
+    t_on = CellTuning(remat=True, compute_dtype="float32")
+    t_off = CellTuning(remat=False, compute_dtype="float32")
+    l1, _ = loss_fn(params, cfg, batch, NOSHARD, t_on)
+    l2, _ = loss_fn(params, cfg, batch, NOSHARD, t_off)
+    assert float(jnp.abs(l1 - l2)) < 1e-5
+
+
+def test_microbatching_invariance(setups):
+    """Gradient accumulation over microbatches must match the single-shot
+    gradient (same global batch)."""
+    cfg, params, batch = setups["qwen2-1.5b"]
+    opt_cfg = adamw.OptimizerConfig()
+    outs = []
+    for n_micro in (1, 2):
+        tuning = CellTuning(num_microbatches=n_micro, remat=False,
+                            compute_dtype="float32")
+        opt_state = adamw.init(opt_cfg, params)
+        step = jax.jit(make_train_step(cfg, opt_cfg, tuning))
+        p2, _, m = step(params, opt_state, batch)
+        outs.append((p2, float(m["loss"])))
+    (p_a, l_a), (p_b, l_b) = outs
+    assert abs(l_a - l_b) < 1e-4
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p_a, p_b)
+    assert max(jax.tree.leaves(diffs)) < 1e-4
+
+
+def test_cache_schema_covers_all_families():
+    for name, full in ARCHS.items():
+        cfg = reduced(full)
+        cs = cache_schema(cfg, batch=2, max_len=32, enc_len=cfg.enc_len)
+        abstract = abstract_from_schema(cs, jnp.float32)
+        assert "pos" in abstract
+        for leaf in jax.tree.leaves(abstract):
+            assert all(d > 0 for d in leaf.shape)
+
+
+def test_decode_requires_cache(setups):
+    cfg, params, batch = setups["yi-6b"]
+    with pytest.raises(AssertionError):
+        forward(params, cfg, batch, mode=DECODE, cache=None)
+
+
+def test_moe_loss_not_dominated_by_aux(setups):
+    """Regression: the MoE pre-norm was once missing, sending router_z to
+    ~1e12 and the loss to ~1e8."""
+    cfg, params, batch = setups["phi3.5-moe-42b-a6.6b"]
+    from repro.train.steps import loss_fn
+    loss, metrics = loss_fn(params, cfg, batch, NOSHARD,
+                            CellTuning(compute_dtype="float32"))
+    assert float(metrics["router_z"]) < 100.0
+    assert float(loss) < 20.0

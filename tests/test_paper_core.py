@@ -1,0 +1,304 @@
+"""Unit tests for the paper's core machinery (Sect. 4 equations)."""
+import math
+
+import pytest
+
+from repro.core.energy import (
+    EnergyEstimator,
+    EnergyMixGatherer,
+    K_TRANSMISSION_KWH_PER_GB_2025,
+    static_signal,
+)
+from repro.core.generator import ConstraintGenerator, quantile_inf
+from repro.core.kb import KBEnricher, KnowledgeBase, Stats
+from repro.core.library import (
+    AvoidNodeModule,
+    ConstraintLibrary,
+    subnet_compatible,
+)
+from repro.core.ranker import ConstraintRanker
+from repro.core import adapter
+from repro.core.types import (
+    Affinity,
+    Application,
+    AvoidNode,
+    EnergySample,
+    Flavour,
+    Infrastructure,
+    MonitoringData,
+    Node,
+    NodeCapabilities,
+    Service,
+    Subnet,
+    ServiceRequirements,
+    TrafficSample,
+)
+
+
+def _mk_app(services):
+    return Application(name="t", services=tuple(services))
+
+
+def _svc(sid, flavours=("f",)):
+    return Service(sid, flavours=tuple(Flavour(f) for f in flavours))
+
+
+def _node(nid, carbon, subnet=Subnet.PUBLIC):
+    return Node(nid, carbon=carbon,
+                capabilities=NodeCapabilities(subnet=subnet))
+
+
+# --------------------------------------------------------------------------
+# Energy Estimator — Eq. 1 / Eq. 2 / Eq. 13
+# --------------------------------------------------------------------------
+
+
+def test_eq1_computation_profile_is_mean():
+    mon = MonitoringData(energy=(
+        EnergySample("s", "f", 10.0, t=0),
+        EnergySample("s", "f", 20.0, t=1),
+        EnergySample("s", "f", 30.0, t=2),
+        EnergySample("s", "g", 5.0, t=0),
+    ))
+    prof = EnergyEstimator().computation_profiles(mon)
+    assert prof[("s", "f")] == pytest.approx(20.0)
+    assert prof[("s", "g")] == pytest.approx(5.0)
+
+
+def test_eq13_communication_model():
+    est = EnergyEstimator(k_kwh_per_gb=0.002)
+    mon = MonitoringData(traffic=(
+        TrafficSample("s", "f", "z", request_volume=100.0,
+                      request_size_gb=0.5, t=0),
+    ))
+    prof = est.communication_profiles(mon)
+    # kWh = volume * size * k (Eq. 13)
+    assert prof[("s", "f", "z")] == pytest.approx(100.0 * 0.5 * 0.002)
+
+
+def test_eq2_communication_profile_mean_keeps_source_flavour():
+    est = EnergyEstimator(k_kwh_per_gb=1.0)
+    mon = MonitoringData(traffic=(
+        TrafficSample("s", "f", "z", 1.0, 1.0, t=0),
+        TrafficSample("s", "f", "z", 3.0, 1.0, t=1),
+        TrafficSample("s", "g", "z", 10.0, 1.0, t=0),
+    ))
+    prof = est.communication_profiles(mon)
+    assert prof[("s", "f", "z")] == pytest.approx(2.0)
+    assert prof[("s", "g", "z")] == pytest.approx(10.0)
+
+
+def test_k_2025_extrapolation():
+    # Aslan et al.: 0.06 kWh/GB in 2015, halving every ~2 years -> 2025
+    assert K_TRANSMISSION_KWH_PER_GB_2025 == pytest.approx(0.06 / 32)
+
+
+def test_estimator_enrich_fills_energy_property():
+    app = _mk_app([_svc("s", ("f",))])
+    mon = MonitoringData(energy=(EnergySample("s", "f", 7.0),))
+    app2 = EnergyEstimator().enrich(app, mon)
+    assert app2.service("s").flavour("f").energy_kwh == pytest.approx(7.0)
+    # unobserved flavours stay None
+    app3 = EnergyEstimator().enrich(_mk_app([_svc("s", ("g",))]), mon)
+    assert app3.service("s").flavour("g").energy_kwh is None
+
+
+# --------------------------------------------------------------------------
+# Energy Mix Gatherer — windowed average / explicit pin
+# --------------------------------------------------------------------------
+
+
+def test_gatherer_window_average():
+    sig = lambda region: list(range(100))  # 0..99, newest last
+    g = EnergyMixGatherer(signal=sig, window=10)
+    infra = Infrastructure("i", (Node("n"),))
+    out = g.enrich(infra)
+    assert out.node("n").carbon == pytest.approx(sum(range(90, 100)) / 10)
+
+
+def test_gatherer_respects_pinned_carbon():
+    g = EnergyMixGatherer(signal=static_signal({"n": 500.0}))
+    infra = Infrastructure("i", (Node("n", carbon=1.0),))
+    assert g.enrich(infra).node("n").carbon == 1.0  # solar edge node
+
+
+def test_gatherer_missing_signal_raises():
+    g = EnergyMixGatherer(signal=lambda r: [])
+    with pytest.raises(ValueError):
+        g.enrich(Infrastructure("i", (Node("n"),)))
+
+
+# --------------------------------------------------------------------------
+# Eq. 5 — adaptive threshold tau = q_alpha
+# --------------------------------------------------------------------------
+
+
+def test_quantile_inf_definition():
+    xs = [1.0, 2.0, 3.0, 4.0, 5.0]
+    # q_alpha = inf{x | F(x) >= alpha}, empirical CDF
+    assert quantile_inf(xs, 0.2) == 1.0
+    assert quantile_inf(xs, 0.21) == 2.0
+    assert quantile_inf(xs, 0.8) == 4.0
+    assert quantile_inf(xs, 1.0) == 5.0
+    assert quantile_inf([], 0.8) == math.inf
+
+
+def test_generator_retains_top_quintile():
+    # 10 services with impact 1..10 on one node with CI 1 -> tau = q_0.8 = 8,
+    # constraints generated for impacts > 8 (9, 10).
+    services = [_svc(f"s{i}") for i in range(1, 11)]
+    app = _mk_app(services)
+    infra = Infrastructure("i", (_node("n", 1.0),))
+    mon = MonitoringData(energy=tuple(
+        EnergySample(f"s{i}", "f", float(i)) for i in range(1, 11)
+    ))
+    out = ConstraintGenerator().generate(app, infra, mon)
+    got = {(c.service, c.node) for c in out}
+    assert got == {("s9", "n"), ("s10", "n")}
+
+
+def test_subnet_compatibility_blocks_candidates():
+    svc = Service("s", flavours=(Flavour("f"),),
+                  requirements=ServiceRequirements(subnet=Subnet.PRIVATE))
+    pub = _node("pub", 100.0, Subnet.PUBLIC)
+    priv = _node("priv", 100.0, Subnet.PRIVATE)
+    assert not subnet_compatible(svc, pub)
+    assert subnet_compatible(svc, priv)
+    cands = AvoidNodeModule().candidates(
+        _mk_app([svc]), Infrastructure("i", (pub, priv)),
+        {("s", "f"): 1.0}, {}, "current")
+    assert {c.payload[2] for c in cands} == {"priv"}
+
+
+# --------------------------------------------------------------------------
+# Eq. 11 / Eq. 12 — Constraints Ranker
+# --------------------------------------------------------------------------
+
+
+def _c(impact):
+    return AvoidNode(service="s", flavour="f", node="n", impact_g=impact)
+
+
+def test_ranker_normalises_to_unit_max():
+    ranked = ConstraintRanker().rank([_c(50.0), _c(100.0), _c(25.0)])
+    ws = [c.weight for c in ranked]
+    assert ws == [1.0, 0.5, 0.25]
+
+
+def test_ranker_attenuates_below_floor():
+    r = ConstraintRanker(impact_floor_g=60.0)
+    ranked = r.rank([_c(100.0), _c(50.0)])
+    assert ranked[1].weight == pytest.approx(0.5 * 0.75)  # lambda = 0.75
+
+
+def test_ranker_discards_below_0_1():
+    ranked = ConstraintRanker().rank([_c(100.0), _c(5.0)])
+    assert len(ranked) == 1
+    assert ranked[0].weight == 1.0
+
+
+def test_ranker_empty_and_zero():
+    assert ConstraintRanker().rank([]) == []
+    assert ConstraintRanker().rank([_c(0.0)]) == []
+
+
+# --------------------------------------------------------------------------
+# Eqs. 6-10 — Knowledge Base + memory weight decay
+# --------------------------------------------------------------------------
+
+
+def test_stats_track_max_min_avg():
+    s = Stats.fresh(10.0, t=0)
+    s.update(20.0, t=1)
+    s.update(30.0, t=2)
+    assert (s.max, s.min) == (30.0, 10.0)
+    assert s.avg == pytest.approx(20.0)
+    assert s.t == 2
+
+
+def test_kb_memory_weight_decay_and_forget():
+    kb = KnowledgeBase()
+    enr = KBEnricher(decay=0.8, forget=0.3, valid=0.5)
+    infra = Infrastructure("i", (_node("n", 10.0),))
+    c = _c(100.0)
+    enr.update(kb, [c], {}, {}, infra, iteration=1)
+    assert kb.ck[c.key()].mu == 1.0
+    # not regenerated: mu decays 0.8, 0.64, 0.512, 0.4096 -> forgotten < 0.3?
+    merged = enr.update(kb, [], {}, {}, infra, iteration=2)
+    assert kb.ck[c.key()].mu == pytest.approx(0.8)
+    assert any(x.key() == c.key() for x in merged)  # still valid (>= 0.5)
+    enr.update(kb, [], {}, {}, infra, iteration=3)
+    merged = enr.update(kb, [], {}, {}, infra, iteration=4)
+    # mu = 0.512 now: below valid (0.5 > mu? no, 0.512 >= 0.5 -> retrieved)
+    assert kb.ck[c.key()].mu == pytest.approx(0.512)
+    assert any(x.key() == c.key() for x in merged)
+    merged = enr.update(kb, [], {}, {}, infra, iteration=5)
+    # mu = 0.4096: below valid -> no longer retrieved, above forget -> kept
+    assert kb.ck[c.key()].mu == pytest.approx(0.4096)
+    assert not any(x.key() == c.key() for x in merged)
+    enr.update(kb, [], {}, {}, infra, iteration=6)
+    # mu = 0.328 -> kept; next decay 0.262 < 0.3 -> forgotten
+    enr.update(kb, [], {}, {}, infra, iteration=7)
+    assert c.key() not in kb.ck
+    # regenerating resets mu to 1
+    enr.update(kb, [c], {}, {}, infra, iteration=8)
+    assert kb.ck[c.key()].mu == 1.0
+
+
+def test_kb_json_roundtrip(tmp_path):
+    kb = KnowledgeBase()
+    enr = KBEnricher()
+    infra = Infrastructure("i", (_node("n", 10.0),))
+    enr.update(
+        kb,
+        [_c(100.0), Affinity(service="a", flavour="f", other="b",
+                             impact_g=5.0)],
+        {("s", "f"): 3.0}, {("a", "f", "b"): 1.0}, infra, iteration=1,
+    )
+    kb.save(str(tmp_path / "kb"))
+    kb2 = KnowledgeBase.load(str(tmp_path / "kb"))
+    assert kb2.sk[("s", "f")].avg == pytest.approx(3.0)
+    assert kb2.ik[("a", "f", "b")].avg == pytest.approx(1.0)
+    assert kb2.nk["n"].avg == pytest.approx(10.0)
+    assert set(kb2.ck) == set(kb.ck)
+    for k in kb.ck:
+        assert kb2.ck[k].mu == kb.ck[k].mu
+        assert type(kb2.ck[k].constraint) is type(kb.ck[k].constraint)
+
+
+# --------------------------------------------------------------------------
+# Constraint Adapter — prolog + json dialects
+# --------------------------------------------------------------------------
+
+
+def test_prolog_rendering_matches_paper_notation():
+    c = AvoidNode(service="frontend", flavour="large", node="italy",
+                  weight=1.0)
+    assert c.render() == "avoidNode(d(frontend, large), italy, 1.0)."
+    c2 = AvoidNode(service="frontend", flavour="large", node="greatbritain",
+                   weight=0.636)
+    assert c2.render() == \
+        "avoidNode(d(frontend, large), greatbritain, 0.636)."
+    a = Affinity(service="frontend", flavour="large", other="productcatalog",
+                 weight=0.12)
+    assert a.render() == \
+        "affinity(d(frontend, large), d(productcatalog, _), 0.12)."
+
+
+def test_adapter_json_roundtrip():
+    cs = [AvoidNode(service="s", flavour="f", node="n", weight=0.5,
+                    impact_g=10.0)]
+    d = adapter.to_dicts(cs)[0]
+    assert d["kind"] == "avoidNode" and d["node"] == "n"
+    assert "affinity" not in adapter.to_prolog(cs)
+
+
+def test_library_is_extensible():
+    lib = ConstraintLibrary.default()
+    assert set(lib.modules) == {"avoidNode", "affinity"}
+
+    class Custom(AvoidNodeModule):
+        name = "custom"
+
+    lib.register(Custom())
+    assert "custom" in lib.modules and len(list(lib)) == 3

@@ -1,0 +1,195 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.generator import quantile_inf
+from repro.core.kb import Stats
+from repro.core.ranker import ConstraintRanker
+from repro.core.scheduler import GreenScheduler, SchedulerConfig
+from repro.core.types import (
+    Application,
+    AvoidNode,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+)
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.ft.manager import plan_elastic_mesh
+from repro.optim.adamw import compress_gradient
+
+finite = st.floats(min_value=0.0, max_value=1e9, allow_nan=False,
+                   allow_infinity=False)
+
+
+# --------------------------------------------------------------------------
+# Eq. 5: quantile definition
+# --------------------------------------------------------------------------
+
+
+@given(st.lists(finite, min_size=1, max_size=50),
+       st.floats(min_value=0.01, max_value=1.0))
+def test_quantile_is_inf_of_upper_set(xs, alpha):
+    q = quantile_inf(xs, alpha)
+    xs_s = sorted(xs)
+    n = len(xs_s)
+    # q is a sample and F(q) >= alpha
+    assert q in xs_s
+    cdf_q = sum(1 for x in xs_s if x <= q) / n
+    assert cdf_q >= alpha - 1e-12
+    # no smaller sample satisfies F(x) >= alpha
+    for x in xs_s:
+        if x < q:
+            assert sum(1 for y in xs_s if y <= x) / n < alpha
+
+
+@given(st.lists(finite, min_size=1, max_size=50))
+def test_quantile_monotone_in_alpha(xs):
+    qs = [quantile_inf(xs, a) for a in (0.2, 0.5, 0.8, 1.0)]
+    assert qs == sorted(qs)
+
+
+# --------------------------------------------------------------------------
+# Eq. 11/12: ranker invariants
+# --------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(min_value=1e-6, max_value=1e9), min_size=1,
+                max_size=40),
+       st.floats(min_value=0.0, max_value=1e9))
+def test_ranker_invariants(impacts, floor):
+    cs = [AvoidNode(service=f"s{i}", flavour="f", node="n", impact_g=im)
+          for i, im in enumerate(impacts)]
+    ranked = ConstraintRanker(impact_floor_g=floor).rank(cs)
+    assert all(0.1 <= c.weight <= 1.0 for c in ranked)
+    # weights sorted descending
+    ws = [c.weight for c in ranked]
+    assert ws == sorted(ws, reverse=True)
+    # the max-impact constraint survives with weight 1 unless attenuated
+    top = max(impacts)
+    if top >= floor:
+        assert any(c.weight == 1.0 for c in ranked)
+    # ranked is a subset of the input with weights recomputed only
+    assert len(ranked) <= len(cs)
+
+
+# --------------------------------------------------------------------------
+# KB stats invariant
+# --------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False),
+                min_size=1, max_size=30))
+def test_stats_invariants(values):
+    s = Stats.fresh(values[0], t=0)
+    for i, v in enumerate(values[1:], 1):
+        s.update(v, t=i)
+    assert s.min <= s.avg + 1e-9 <= s.max + 2e-9
+    assert s.min == min(values)
+    assert s.max == max(values)
+    # the running mean's float error scales with the value magnitudes
+    # (cancellation): tolerance must too
+    scale = max(abs(v) for v in values) + 1.0
+    assert s.avg == pytest.approx(float(np.mean(values)),
+                                  abs=1e-9 * scale * len(values))
+    assert s.count == len(values)
+
+
+# --------------------------------------------------------------------------
+# scheduler: hard constraints are never violated
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=1, max_value=5),
+       st.randoms(use_true_random=False))
+def test_scheduler_respects_capacity(n_services, n_nodes, rnd):
+    services = tuple(
+        Service(f"s{i}", flavours=(
+            Flavour("f", requirements=FlavourRequirements(
+                cpu=rnd.choice([0.5, 1.0, 2.0]))),))
+        for i in range(n_services)
+    )
+    nodes = tuple(
+        Node(f"n{j}", carbon=rnd.uniform(10, 500),
+             capabilities=NodeCapabilities(cpu=rnd.choice([1.0, 2.0, 8.0])))
+        for j in range(n_nodes)
+    )
+    app = Application("a", services)
+    infra = Infrastructure("i", nodes)
+    comp = {(f"s{i}", "f"): rnd.uniform(1, 100) for i in range(n_services)}
+    plan = GreenScheduler(SchedulerConfig.green()).plan(app, infra, comp, {})
+    if plan.feasible:
+        used = {}
+        for p in plan.placements:
+            req = app.service(p.service).flavour(p.flavour).requirements
+            used[p.node] = used.get(p.node, 0.0) + req.cpu
+        for nid, cpu in used.items():
+            assert cpu <= infra.node(nid).capabilities.cpu + 1e-9
+
+
+# --------------------------------------------------------------------------
+# error-feedback compression: the residual identity holds for any input
+# --------------------------------------------------------------------------
+
+
+@settings(deadline=None)  # first example pays the jit compile
+@given(st.lists(st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                          width=32),
+                min_size=1, max_size=64),
+       st.lists(st.floats(min_value=-10, max_value=10, allow_nan=False,
+                          width=32),
+                min_size=1, max_size=64))
+def test_compression_error_feedback_identity(gs, es):
+    n = min(len(gs), len(es))
+    g = jnp.asarray(gs[:n], jnp.float32)
+    e = jnp.asarray(es[:n], jnp.float32)
+    deq, e2 = compress_gradient(g, e)
+    np.testing.assert_allclose(
+        np.asarray(deq + e2), np.asarray(g + e), rtol=1e-5, atol=1e-5)
+    # quantised values fit int8 dynamic range after scaling
+    assert np.isfinite(np.asarray(e2)).all()
+
+
+# --------------------------------------------------------------------------
+# data pipeline: sharding is a partition of the global batch
+# --------------------------------------------------------------------------
+
+
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(min_value=0, max_value=20))
+def test_data_shards_partition_global_batch(count, step):
+    cfg = DataConfig(vocab=128, seq_len=16, global_batch=8)
+    full = batch_for_step(cfg, step, shard=(0, 1))
+    parts = [batch_for_step(cfg, step, shard=(i, count))
+             for i in range(count)]
+    glued = np.concatenate([p["tokens"] for p in parts], axis=0)
+    assert glued.shape == full["tokens"].shape
+    # each shard is deterministic
+    again = batch_for_step(cfg, step, shard=(0, count))
+    np.testing.assert_array_equal(parts[0]["tokens"], again["tokens"])
+
+
+# --------------------------------------------------------------------------
+# elastic mesh planning invariants
+# --------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=0, max_value=4096),
+       st.sampled_from([4, 8, 16]))
+def test_elastic_mesh_invariants(n_devices, model):
+    plan = plan_elastic_mesh(n_devices, model=model)
+    if plan is None:
+        assert n_devices < model
+    else:
+        pod, data, m = plan
+        assert m == model
+        assert pod * data * m <= n_devices
+        # uses at least half the available device capacity in data units
+        assert pod * data >= (n_devices // model + 1) // 2

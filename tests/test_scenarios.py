@@ -1,0 +1,227 @@
+"""Paper validation: the five scenarios of Sect. 5.3, the Explainability
+Report of Sect. 5.4, and the threshold analysis of Sect. 5.6.
+
+Where our reproduction disagrees with a printed paper number, the paper's
+own equations side with us (see DESIGN.md §6): the paper's 0.446 weight for
+productcatalog-large is stale (implies an earlier 884 kWh profile), while
+Eq. 11 with Table 1's 989 kWh gives 0.499.  Scenario 4's currency weight
+(881/989 = 0.891 ~ the paper's 0.89) confirms Eq. 11 as implemented here.
+"""
+import pytest
+
+from repro.configs import boutique
+from repro.core.generator import ConstraintGenerator
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.types import Affinity, AvoidNode
+
+
+def run_scenario(n, **kw):
+    app, infra, mon = boutique.scenario(n)
+    pipe = GreenConstraintPipeline(**kw)
+    return pipe.run(app, infra, mon, use_kb=False)
+
+
+def by_key(out):
+    return {
+        (c.service, c.flavour, getattr(c, "node", getattr(c, "other", ""))): c
+        for c in out.constraints
+    }
+
+
+# --------------------------------------------------------------------------
+# Scenario 1 — baseline (Europe infrastructure)
+# --------------------------------------------------------------------------
+
+
+def test_scenario1_paper_constraints_present_with_paper_weights():
+    out = run_scenario(1)
+    got = by_key(out)
+    # paper: avoidNode(d(frontend, large), italy, 1.0).
+    assert got[("frontend", "large", "italy")].weight == pytest.approx(1.0)
+    # paper: avoidNode(d(frontend, large), greatbritain, 0.636).
+    assert got[("frontend", "large", "greatbritain")].weight == \
+        pytest.approx(213 / 335, abs=5e-4)  # 0.636
+    # paper prints 0.446 (stale); Eq. 11 with Table 1 gives 989/1981 = 0.499
+    assert got[("productcatalog", "large", "italy")].weight == \
+        pytest.approx(989 / 1981, abs=5e-4)
+
+
+def test_scenario1_affinity_filtered_out():
+    """Paper: 'the Affinity constraints have a significantly lower weight
+    ... the Constraints Ranker automatically removes them'."""
+    out = run_scenario(1)
+    assert all(isinstance(c, AvoidNode) for c in out.constraints)
+
+
+def test_scenario1_no_constraint_for_greenest_node():
+    out = run_scenario(1)
+    assert all(c.node != "france" for c in out.constraints)
+
+
+# --------------------------------------------------------------------------
+# Scenario 2 — swapped infrastructure (US)
+# --------------------------------------------------------------------------
+
+
+def test_scenario2_us_weights_match_paper():
+    out = run_scenario(2)
+    got = by_key(out)
+    # paper: florida 1.0, washington 0.428, newyork 0.414, california 0.412
+    assert got[("frontend", "large", "florida")].weight == pytest.approx(1.0)
+    assert got[("frontend", "large", "washington")].weight == \
+        pytest.approx(244 / 570, abs=5e-4)  # 0.428
+    assert got[("frontend", "large", "newyork")].weight == \
+        pytest.approx(236 / 570, abs=5e-4)  # 0.414
+    assert got[("frontend", "large", "california")].weight == \
+        pytest.approx(235 / 570, abs=5e-4)  # 0.412
+    # paper: avoidNode(d(productcatalog, large), florida, _)
+    assert ("productcatalog", "large", "florida") in got
+
+
+def test_scenario2_adapts_to_new_infrastructure():
+    s1 = {c.node for c in run_scenario(1).constraints}
+    s2 = {c.node for c in run_scenario(2).constraints}
+    assert s1 & set(boutique.EUROPE_CI) == s1
+    assert s2 & set(boutique.US_CI) == s2
+
+
+# --------------------------------------------------------------------------
+# Scenario 3 — carbon-intensity degradation of the France node
+# --------------------------------------------------------------------------
+
+
+def test_scenario3_france_becomes_most_avoided():
+    out = run_scenario(3)
+    got = by_key(out)
+    assert got[("frontend", "large", "france")].weight == pytest.approx(1.0)
+    # italy (335) now ranks below france (376): weight = 335/376 = 0.891
+    assert got[("frontend", "large", "italy")].weight == \
+        pytest.approx(335 / 376, abs=5e-4)
+
+
+# --------------------------------------------------------------------------
+# Scenario 4 — application update (frontend optimised to 481 kWh)
+# --------------------------------------------------------------------------
+
+
+def test_scenario4_matches_paper_output():
+    out = run_scenario(4)
+    got = by_key(out)
+    # paper: avoidNode(d(productcatalog, large), italy, 1.0).
+    top = max(out.constraints, key=lambda c: c.weight)
+    assert (top.service, top.node, top.weight) == \
+        ("productcatalog", "italy", pytest.approx(1.0))
+    # paper: avoidNode(d(currency, tiny), italy, 0.89).
+    assert got[("currency", "tiny", "italy")].weight == \
+        pytest.approx(881 / 989, abs=5e-4)  # 0.891 -> paper rounds 0.89
+    # the optimised frontend no longer dominates: its weight < currency's
+    fr = [c for c in out.constraints
+          if c.service == "frontend" and c.node == "italy"]
+    assert all(c.weight < 0.5 for c in fr)
+
+
+# --------------------------------------------------------------------------
+# Scenario 5 — x15000 traffic: affinity constraints survive the ranker
+# --------------------------------------------------------------------------
+
+
+def test_scenario5_affinity_constraints_emerge():
+    out = run_scenario(5)
+    aff = [c for c in out.constraints if isinstance(c, Affinity)]
+    assert aff, "x15000 traffic must surface affinity constraints"
+    pairs = {(c.service, c.other) for c in aff}
+    # the two heaviest links in the traffic matrix
+    assert ("frontend", "productcatalog") in pairs
+    assert ("recommendation", "productcatalog") in pairs
+    # but computation still dominates: affinity weights < avoid weights max
+    assert max(c.weight for c in aff) < 1.0
+
+
+def test_scenario5_same_avoid_set_as_scenario1():
+    a1 = {c.key() for c in run_scenario(1).constraints}
+    a5 = {c.key() for c in run_scenario(5).constraints
+          if isinstance(c, AvoidNode)}
+    assert a1 == a5  # computation profiles unchanged
+
+
+# --------------------------------------------------------------------------
+# Sect. 5.4 — Explainability Report
+# --------------------------------------------------------------------------
+
+
+def test_explainability_savings_ranges_scenario1():
+    out = run_scenario(1)
+    got = by_key(out)
+    # frontend-large on greatbritain: 1981*(213-132)/1000 .. 1981*(213-16)/1000
+    lo, hi = got[("frontend", "large", "greatbritain")].savings_range_g
+    assert lo == pytest.approx(1981 * (213 - 132) / 1000, abs=0.01)  # 160.46
+    assert hi == pytest.approx(1981 * (213 - 16) / 1000, abs=0.01)   # 390.26
+    # paper prints 160.51 / 390.38 (unrounded CIs): within 0.1%
+    assert lo == pytest.approx(160.51, rel=1e-3)
+    assert hi == pytest.approx(390.38, rel=1e-3)
+    # frontend-large on italy: paper prints 241.76 / 632.14
+    lo2, hi2 = got[("frontend", "large", "italy")].savings_range_g
+    assert lo2 == pytest.approx(241.76, rel=2e-3)
+    assert hi2 == pytest.approx(632.14, rel=2e-3)
+
+
+def test_explainability_report_text():
+    out = run_scenario(1)
+    text = out.report.render()
+    assert '"AvoidNode" constraint was generated' in text
+    assert '"frontend" service in the "large" flavour' in text
+    assert "estimated emissions savings" in text
+    # one entry per retained constraint
+    assert len(out.report.entries) == len(out.constraints)
+
+
+def test_savings_zero_on_greenest_node():
+    from repro.core.library import _avoid_savings
+    app, infra, mon = boutique.scenario(1)
+    from repro.core.energy import EnergyMixGatherer
+    node = infra.node("france")
+    assert _avoid_savings(1000.0, node, infra) == (0.0, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Sect. 5.6 — threshold analysis: lower quantile => (weakly) more constraints
+# --------------------------------------------------------------------------
+
+
+def test_threshold_monotonicity():
+    app, infra, mon = boutique.scenario(1)
+    counts = []
+    for alpha in (0.9, 0.8, 0.7, 0.6, 0.5):
+        gen = ConstraintGenerator(alpha=alpha)
+        counts.append(len(gen.generate(app, infra, mon)))
+    assert counts == sorted(counts), counts
+    assert counts[0] < counts[-1]
+
+
+def test_tau_is_exposed_for_analysis():
+    app, infra, mon = boutique.scenario(1)
+    gen = ConstraintGenerator()
+    t_hi = gen.tau_for(app, infra, mon, "avoidNode", alpha=0.9)
+    t_lo = gen.tau_for(app, infra, mon, "avoidNode", alpha=0.5)
+    assert t_hi >= t_lo > 0
+
+
+# --------------------------------------------------------------------------
+# Adaptivity across iterations (KB memory in the full pipeline)
+# --------------------------------------------------------------------------
+
+
+def test_pipeline_keeps_recent_past_constraints_via_kb():
+    app, infra, mon = boutique.scenario(1)
+    pipe = GreenConstraintPipeline()
+    out1 = pipe.run(app, infra, mon)        # iteration 1: europe
+    app2, infra2, mon2 = boutique.scenario(2)
+    out2 = pipe.run(app2, infra2, mon2)     # iteration 2: US infra
+    # europe constraints persist with decayed memory weight
+    carried = [c for c in out2.constraints
+               if getattr(c, "node", "") in boutique.EUROPE_CI]
+    assert carried, "KB must carry forward recent constraints"
+    assert all(c.memory_weight < 1.0 for c in carried)
+    fresh = [c for c in out2.constraints
+             if getattr(c, "node", "") in boutique.US_CI]
+    assert fresh and all(c.memory_weight == 1.0 for c in fresh)

@@ -1,0 +1,139 @@
+"""Constraint-aware scheduler: green constraints must reduce emissions
+relative to the environment-blind baseline, bounded by the oracle."""
+import pytest
+
+from repro.configs import boutique
+from repro.core.energy import EnergyEstimator, EnergyMixGatherer
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import (
+    GreenScheduler,
+    SchedulerConfig,
+    plan_emissions,
+)
+from repro.core.types import (
+    Application,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    MonitoringData,
+    EnergySample,
+    Node,
+    NodeCapabilities,
+    Service,
+)
+
+
+@pytest.fixture(scope="module")
+def scenario1():
+    app, infra, mon = boutique.scenario(1)
+    est = EnergyEstimator()
+    infra = EnergyMixGatherer().enrich(infra)
+    app = est.enrich(app, mon)
+    comp = est.computation_profiles(mon)
+    comm = est.communication_profiles(mon)
+    out = GreenConstraintPipeline().run(app, infra, mon, use_kb=False)
+    return app, infra, comp, comm, out.constraints
+
+
+def _emissions(plan, app, infra, comp, comm):
+    assign = {p.service: (p.flavour, p.node) for p in plan.placements}
+    return plan_emissions(app, infra, assign, comp, comm)
+
+
+def test_green_beats_baseline_bounded_by_oracle(scenario1):
+    app, infra, comp, comm, constraints = scenario1
+    base = GreenScheduler(SchedulerConfig.baseline()).plan(
+        app, infra, comp, comm, constraints)
+    green = GreenScheduler(SchedulerConfig.green()).plan(
+        app, infra, comp, comm, constraints)
+    oracle = GreenScheduler(SchedulerConfig.oracle()).plan(
+        app, infra, comp, comm, constraints)
+    for p in (base, green, oracle):
+        assert p.feasible
+    e_base = _emissions(base, app, infra, comp, comm)
+    e_green = _emissions(green, app, infra, comp, comm)
+    e_oracle = _emissions(oracle, app, infra, comp, comm)
+    assert e_oracle <= e_green <= e_base
+    assert e_green < e_base, "green constraints must save emissions"
+
+
+def test_green_respects_avoid_constraints(scenario1):
+    app, infra, comp, comm, constraints = scenario1
+    green = GreenScheduler(SchedulerConfig.green()).plan(
+        app, infra, comp, comm, constraints)
+    placed = {(p.service, p.flavour, p.node) for p in green.placements}
+    from repro.core.types import AvoidNode
+    for c in constraints:
+        if isinstance(c, AvoidNode) and c.weight > 0.4:
+            assert (c.service, c.flavour, c.node) not in placed, c.render()
+
+
+def test_all_mandatory_services_placed(scenario1):
+    app, infra, comp, comm, constraints = scenario1
+    plan = GreenScheduler(SchedulerConfig.green()).plan(
+        app, infra, comp, comm, constraints)
+    placed = {p.service for p in plan.placements}
+    assert placed == {s.component_id for s in app.services}
+
+
+def test_capacity_limits_respected(scenario1):
+    app, infra, comp, comm, constraints = scenario1
+    plan = GreenScheduler(SchedulerConfig.green()).plan(
+        app, infra, comp, comm, constraints)
+    used = {}
+    for p in plan.placements:
+        req = app.service(p.service).flavour(p.flavour).requirements
+        cpu, ram = used.get(p.node, (0.0, 0.0))
+        used[p.node] = (cpu + req.cpu, ram + req.ram_gb)
+    for nid, (cpu, ram) in used.items():
+        cap = infra.node(nid).capabilities
+        assert cpu <= cap.cpu + 1e-9
+        assert ram <= cap.ram_gb + 1e-9
+
+
+def test_infeasible_mandatory_service():
+    svc = Service("big", flavours=(
+        Flavour("f", requirements=FlavourRequirements(cpu=128.0)),))
+    app = Application("a", (svc,))
+    infra = Infrastructure("i", (
+        Node("n", carbon=10.0, capabilities=NodeCapabilities(cpu=4.0)),))
+    plan = GreenScheduler().plan(app, infra, {}, {})
+    assert not plan.feasible
+
+
+def test_optional_service_dropped_when_infeasible():
+    must = Service("must", flavours=(
+        Flavour("f", requirements=FlavourRequirements(cpu=3.0)),))
+    opt = Service("opt", must_deploy=False, flavours=(
+        Flavour("f", requirements=FlavourRequirements(cpu=3.0)),))
+    app = Application("a", (must, opt))
+    infra = Infrastructure("i", (
+        Node("n", carbon=10.0, capabilities=NodeCapabilities(cpu=4.0)),))
+    plan = GreenScheduler().plan(app, infra, {}, {})
+    assert plan.feasible
+    assert plan.skipped_services == ("opt",)
+    assert {p.service for p in plan.placements} == {"must"}
+
+
+def test_affinity_colocates_under_heavy_traffic():
+    app, infra, mon = boutique.scenario(5)  # x15000 traffic
+    est = EnergyEstimator()
+    infra = EnergyMixGatherer().enrich(infra)
+    comp = est.computation_profiles(mon)
+    comm = est.communication_profiles(mon)
+    out = GreenConstraintPipeline().run(app, infra, mon, use_kb=False)
+    plan = GreenScheduler(
+        SchedulerConfig(green_penalty=50.0)).plan(
+        app, infra, comp, comm, out.constraints)
+    # the heavy frontend->productcatalog link must be co-located
+    assert plan.node_of("frontend") == plan.node_of("productcatalog")
+
+
+def test_oracle_prefers_greenest_nodes(scenario1):
+    app, infra, comp, comm, constraints = scenario1
+    oracle = GreenScheduler(SchedulerConfig.oracle()).plan(
+        app, infra, comp, comm, constraints)
+    # the heaviest service must sit on (one of) the greenest feasible nodes
+    fr = oracle.node_of("frontend")
+    assert infra.node(fr).carbon <= min(
+        n.carbon for n in infra.nodes) + 1e-9 or fr == "france"

@@ -1,0 +1,110 @@
+"""Continuous-batching serve engine: correctness (matches lockstep greedy
+decoding per request) and slot-reuse behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.launch.serve import serve_batch
+from repro.models.schema import build_schema
+from repro.models.sharding import init_from_schema
+from repro.models.testing import reduced
+from repro.serve import Request, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def dense_setup():
+    cfg = reduced(ARCHS["qwen2-1.5b"])
+    params = init_from_schema(jax.random.PRNGKey(0),
+                              build_schema(cfg), jnp.float32)
+    return cfg, params
+
+
+def _ref_continuation(cfg, params, prompt, n):
+    """Lockstep single-request greedy reference."""
+    seqs = serve_batch(cfg, params, jnp.asarray(prompt[None, :]), n)
+    return list(np.asarray(seqs[0, len(prompt):]))
+
+
+def test_engine_matches_lockstep_reference(dense_setup):
+    cfg, params = dense_setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=12).astype(np.int32)
+               for _ in range(3)]
+    engine = ServeEngine(cfg, params, slots=2, max_len=48)
+    reqs = [Request(i, p, max_new_tokens=6) for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    stats = engine.run_until_drained()
+    assert stats.finished == 3
+    for r, p in zip(reqs, prompts):
+        assert r.generated == _ref_continuation(cfg, params, p, 6), r.request_id
+
+
+def test_engine_staggered_admission_is_isolated(dense_setup):
+    """A request admitted mid-stream must produce the same tokens as one
+    served alone — slots cannot leak into each other."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(1)
+    p0 = rng.integers(0, cfg.vocab, size=16).astype(np.int32)
+    p1 = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+
+    engine = ServeEngine(cfg, params, slots=2, max_len=48)
+    r0 = Request(0, p0, max_new_tokens=8)
+    engine.submit(r0)
+    engine.tick()          # r0 runs alone for 3 ticks
+    engine.tick()
+    engine.tick()
+    r1 = Request(1, p1, max_new_tokens=4)
+    engine.submit(r1)      # joins mid-stream at a different position
+    engine.run_until_drained()
+    assert r0.generated == _ref_continuation(cfg, params, p0, 8)
+    assert r1.generated == _ref_continuation(cfg, params, p1, 4)
+
+
+def test_engine_slot_reuse_more_requests_than_slots(dense_setup):
+    cfg, params = dense_setup
+    rng = np.random.default_rng(2)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, size=10).astype(np.int32),
+                    max_new_tokens=3)
+            for i in range(5)]
+    engine = ServeEngine(cfg, params, slots=2, max_len=32)
+    for r in reqs:
+        engine.submit(r)
+    stats = engine.run_until_drained()
+    assert stats.finished == 5 and stats.admitted == 5
+    assert all(len(r.generated) == 3 for r in reqs)
+    # continuous batching keeps slots busy: ticks well below serial bound
+    assert stats.decoded_tokens == 15
+    assert stats.ticks <= 12  # serial would need >= 15
+
+
+def test_engine_eos_frees_slot(dense_setup):
+    cfg, params = dense_setup
+    rng = np.random.default_rng(3)
+    p = rng.integers(0, cfg.vocab, size=10).astype(np.int32)
+    ref = _ref_continuation(cfg, params, p, 8)
+    eos = ref[2]  # force EOS at the 3rd generated token
+    engine = ServeEngine(cfg, params, slots=1, max_len=32)
+    r = Request(0, p, max_new_tokens=8, eos_token=int(eos))
+    engine.submit(r)
+    engine.run_until_drained()
+    assert r.done and r.generated == ref[:3]
+
+
+def test_engine_ssm_family(dense_setup):
+    """State-space caches (no seq axis) go through the same engine."""
+    cfg = reduced(ARCHS["falcon-mamba-7b"])
+    params = init_from_schema(jax.random.PRNGKey(4),
+                              build_schema(cfg), jnp.float32)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+               for _ in range(2)]
+    engine = ServeEngine(cfg, params, slots=2, max_len=32)
+    reqs = [Request(i, p, max_new_tokens=4) for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_until_drained()
+    for r, p in zip(reqs, prompts):
+        assert r.generated == _ref_continuation(cfg, params, p, 4)

@@ -1,0 +1,262 @@
+"""Substrate tests: optimizer, checkpointing, fault tolerance, data
+pipeline, loss-goes-down integration."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.data.pipeline import DataConfig, batch_for_step
+from repro.ft.manager import (
+    RestartManager,
+    StragglerDetector,
+    plan_elastic_mesh,
+)
+from repro.optim import adamw
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = adamw.OptimizerConfig(lr=0.1, warmup_steps=0, decay_steps=100,
+                                weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = adamw.init(cfg, params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda p: jnp.sum(jnp.square(p["w"])))(p)
+        return adamw.apply(cfg, p, g, s)
+
+    for _ in range(200):
+        params, state, _ = step(params, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_clips_gradient_norm():
+    cfg = adamw.OptimizerConfig(clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init(cfg, params)
+    huge = {"w": 1e6 * jnp.ones(4)}
+    _, _, metrics = adamw.apply(cfg, params, huge, state)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = adamw.OptimizerConfig(lr=1.0, warmup_steps=10, decay_steps=110,
+                                min_lr_frac=0.1)
+    assert float(adamw.schedule(cfg, jnp.int32(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule(cfg, jnp.int32(10))) == pytest.approx(1.0)
+    end = float(adamw.schedule(cfg, jnp.int32(110)))
+    assert end == pytest.approx(0.1, rel=1e-3)
+
+
+def test_error_feedback_compression_identity():
+    """deq + err' == g + err exactly (the quantisation error is never
+    lost — the invariant that makes EF-int8 converge)."""
+    g = jnp.array([0.5, -1.25, 3.0, 0.001])
+    err = jnp.array([0.1, 0.0, -0.2, 0.0])
+    deq, err2 = adamw.compress_gradient(g, err)
+    np.testing.assert_allclose(np.asarray(deq + err2), np.asarray(g + err),
+                               atol=1e-6)
+
+
+def test_compressed_training_tracks_uncompressed():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    outs = {}
+    for compress in (False, True):
+        cfg = adamw.OptimizerConfig(lr=0.05, warmup_steps=0, decay_steps=1000,
+                                    weight_decay=0.0, compress_grads=compress)
+        p, s = params, adamw.init(cfg, params)
+        for _ in range(300):
+            g = jax.grad(lambda p: jnp.sum(jnp.square(p["w"])))(p)
+            p, s, _ = adamw.apply(cfg, p, g, s)
+        outs[compress] = float(jnp.abs(p["w"]).max())
+    assert outs[True] < 0.05  # converges despite int8 wire format
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((3, 2), x), "b": {"c": jnp.arange(4)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    store.save(d, 10, _tree(2.5), extra={"loss": 1.25})
+    out, extra = store.restore(d, 10, _tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.5)
+    assert extra == {"loss": 1.25}
+
+
+def test_checkpoint_latest_and_gc(tmp_path):
+    d = str(tmp_path)
+    for s in (10, 20, 30, 40):
+        store.save(d, s, _tree(float(s)), keep=2)
+    assert store.latest_step(d) == 40
+    assert store.all_steps(d) == [30, 40]  # keep=2 garbage-collects
+
+
+def test_partial_checkpoint_invisible(tmp_path):
+    d = str(tmp_path)
+    store.save(d, 10, _tree())
+    # simulate a crash mid-write: directory without meta.json
+    os.makedirs(os.path.join(d, "step_20"))
+    assert store.latest_step(d) == 10
+
+
+def test_restore_validates_shapes(tmp_path):
+    d = str(tmp_path)
+    store.save(d, 1, _tree())
+    with pytest.raises(AssertionError):
+        store.restore(d, 1, {"a": jnp.zeros((9, 9)), "b": {"c": jnp.arange(4)}})
+
+
+# --------------------------------------------------------------------------
+# fault tolerance
+# --------------------------------------------------------------------------
+
+
+def test_restart_manager_recovers_from_failures(tmp_path):
+    mgr = RestartManager(str(tmp_path), checkpoint_every=5, max_failures=3)
+    crashes = {"left": 2}
+
+    def init_fn():
+        return {"x": jnp.zeros(())}
+
+    def step_fn(state, step):
+        if step == 12 and crashes["left"] > 0:
+            crashes["left"] -= 1
+            raise RuntimeError("injected node failure")
+        return {"x": state["x"] + 1}
+
+    out = mgr.run(init_fn, step_fn, num_steps=20)
+    assert float(out["x"]) == 20  # deterministic replay: no lost/dup steps
+    assert mgr.failures == 2
+
+
+def test_restart_manager_gives_up_after_max_failures(tmp_path):
+    mgr = RestartManager(str(tmp_path), checkpoint_every=5, max_failures=2)
+
+    def step_fn(state, step):
+        raise RuntimeError("systematic failure")
+
+    with pytest.raises(RuntimeError):
+        mgr.run(lambda: {"x": jnp.zeros(())}, step_fn, num_steps=10)
+
+
+def test_restart_manager_resumes_from_checkpoint(tmp_path):
+    d = str(tmp_path)
+    mgr = RestartManager(d, checkpoint_every=5)
+    mgr.run(lambda: {"x": jnp.zeros(())},
+            lambda s, i: {"x": s["x"] + 1}, num_steps=7)
+    # new manager process: must resume from step 7 (final save), not 0
+    state, start = RestartManager(d).resume_or_init(
+        lambda: {"x": jnp.zeros(())})
+    assert start == 7 and float(state["x"]) == 7
+
+
+def test_straggler_detector_flags_slow_host():
+    det = StragglerDetector(ratio=1.5, patience=2)
+    flagged = []
+    for _ in range(5):  # strikes accrue per detection window
+        for h in ("h0", "h1", "h2", "h3"):
+            det.observe(h, 1.0)
+        det.observe("slow", 3.0)
+        flagged = det.stragglers()
+    assert flagged == ["slow"]
+
+
+def test_straggler_detector_forgives_recovered_host():
+    det = StragglerDetector(ratio=1.5, patience=3, alpha=1.0)
+    for h in ("h0", "h1", "h2"):
+        det.observe(h, 1.0)
+    det.observe("s", 5.0)
+    det.stragglers()
+    det.observe("s", 1.0)  # recovered
+    assert det.stragglers() == []
+
+
+def test_plan_elastic_mesh():
+    # prefers the largest even pod split: 512 devices -> 4 pods of (8, 16)
+    assert plan_elastic_mesh(512, model=16) == (4, 8, 16)
+    assert plan_elastic_mesh(256, model=16) == (4, 4, 16)
+    # lose a pod: 256 survive out of 512
+    pod, data, model = plan_elastic_mesh(511, model=16)
+    assert pod * data * model <= 511 and model == 16
+    assert plan_elastic_mesh(8, model=16) is None
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+
+def test_data_deterministic_per_step():
+    cfg = DataConfig(vocab=256, seq_len=32, global_batch=8)
+    a = batch_for_step(cfg, 5)
+    b = batch_for_step(cfg, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_for_step(cfg, 6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab=256, seq_len=32, global_batch=4)
+    b = batch_for_step(cfg, 0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_data_learnable_structure():
+    cfg = DataConfig(vocab=256, seq_len=128, global_batch=8)
+    b = batch_for_step(cfg, 0)
+    V = cfg.vocab
+    a_, c_ = 6364136223846793005 % V or 7, 1442695040888963407 % V or 11
+    pred = (a_ * b["tokens"].astype(np.int64) + c_) % V
+    agree = (pred == b["labels"]).mean()
+    assert agree > 0.85  # 10% noise injected
+
+
+def test_data_enc_embeds_for_encdec():
+    cfg = DataConfig(vocab=64, seq_len=8, global_batch=2, enc_len=4,
+                     d_model=16)
+    b = batch_for_step(cfg, 0)
+    assert b["enc_embeds"].shape == (2, 4, 16)
+
+
+# --------------------------------------------------------------------------
+# integration: loss goes down on a real (reduced) model
+# --------------------------------------------------------------------------
+
+
+def test_loss_goes_down_end_to_end():
+    from repro.configs.registry import ARCHS
+    from repro.models.config import CellTuning
+    from repro.models.schema import build_schema
+    from repro.models.sharding import init_from_schema
+    from repro.models.testing import reduced
+    from repro.train.steps import make_train_step
+
+    cfg = reduced(ARCHS["qwen2-1.5b"])
+    params = init_from_schema(jax.random.PRNGKey(1),
+                              build_schema(cfg), jnp.float32)
+    opt_cfg = adamw.OptimizerConfig(lr=2e-2, warmup_steps=10, decay_steps=300)
+    opt_state = adamw.init(opt_cfg, params)
+    tuning = CellTuning(num_microbatches=1, remat=False,
+                        compute_dtype="float32")
+    step = jax.jit(make_train_step(cfg, opt_cfg, tuning))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=16, seed=3)
+    losses = []
+    for i in range(120):
+        batch = {k: jnp.asarray(v) for k, v in batch_for_step(dcfg, i).items()}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0] - 0.5, losses[::24]

@@ -1,0 +1,65 @@
+"""End-to-end behaviour: the full Green-aware Constraint Generator pipeline
+(Fig. 1) driving the scheduler, with KB persistence across 'deployments'."""
+import pytest
+
+from repro.configs import boutique
+from repro.core.energy import EnergyEstimator, EnergyMixGatherer
+from repro.core.kb import KnowledgeBase
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import GreenScheduler, SchedulerConfig, plan_emissions
+from repro.core.types import AvoidNode
+
+
+def test_full_pipeline_end_to_end(tmp_path):
+    """Monitoring -> constraints -> explainability -> scheduler -> plan,
+    then a second iteration restoring the KB from disk."""
+    app, infra, mon = boutique.scenario(1)
+    pipe = GreenConstraintPipeline()
+    out = pipe.run(app, infra, mon)
+
+    # constraints generated, ranked, explained, adapted
+    assert out.constraints
+    assert out.constraints[0].weight == 1.0
+    assert len(out.report.entries) == len(out.constraints)
+    assert out.prolog.count("avoidNode") == sum(
+        isinstance(c, AvoidNode) for c in out.constraints)
+    assert all(0.1 <= c.weight <= 1.0 for c in out.constraints)
+
+    # the plan honours the constraints and beats the baseline
+    est = EnergyEstimator()
+    infra_e = EnergyMixGatherer().enrich(infra)
+    comp = est.computation_profiles(mon)
+    comm = est.communication_profiles(mon)
+    green = GreenScheduler(SchedulerConfig.green()).plan(
+        app, infra_e, comp, comm, out.constraints)
+    base = GreenScheduler(SchedulerConfig.baseline()).plan(
+        app, infra_e, comp, comm, out.constraints)
+    a_g = {p.service: (p.flavour, p.node) for p in green.placements}
+    a_b = {p.service: (p.flavour, p.node) for p in base.placements}
+    assert plan_emissions(app, infra_e, a_g, comp, comm) < \
+        plan_emissions(app, infra_e, a_b, comp, comm)
+
+    # KB persists and reloads across pipeline instances
+    kb_dir = str(tmp_path / "kb")
+    pipe.kb.save(kb_dir)
+    pipe2 = GreenConstraintPipeline(kb=KnowledgeBase.load(kb_dir))
+    pipe2.iteration = pipe.iteration
+    out2 = pipe2.run(app, infra, mon)
+    assert {c.key() for c in out2.constraints} >= \
+        {c.key() for c in out.constraints}
+
+
+def test_adaptivity_under_carbon_shift():
+    """Scenario 1 -> Scenario 3 in one pipeline: the system must adapt to
+    France degrading while remembering the previous iteration."""
+    pipe = GreenConstraintPipeline()
+    app, infra, mon = boutique.scenario(1)
+    out1 = pipe.run(app, infra, mon)
+    assert all(c.node != "france" for c in out1.constraints)
+
+    app3, infra3, mon3 = boutique.scenario(3)
+    out3 = pipe.run(app3, infra3, mon3)
+    fresh = [c for c in out3.constraints if c.memory_weight == 1.0]
+    assert any(c.node == "france" for c in fresh)
+    top = max(out3.constraints, key=lambda c: c.weight)
+    assert top.node == "france"
