@@ -11,6 +11,7 @@ import random
 import time
 
 from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import GreenScheduler, SchedulerConfig
 from repro.core.types import (
     Application,
     EnergySample,
@@ -88,7 +89,28 @@ def run(report=print, sweep=(100, 200, 400, 700, 1000)):
         times = [t for _, t in rows]
         assert times == sorted(times) or max(times) < 1.0, rows
         assert times[-1] < 120.0, "paper: worst case under 120 s"
-    return {"app_sweep": rows_a, "infra_sweep": rows_b}
+
+    # beyond-paper: the adaptive loop is generation + scheduling, so plan
+    # time must not become the new wall at Fig. 2 scale.  The array-native
+    # scheduler plans the largest sweep point in seconds.
+    report("\n# scheduler plan wall time (array-native core)")
+    report(f"{'components':>11} {'nodes':>6} {'plan_s':>8}")
+    rows_plan = []
+    for n_c, n_n in ((sweep[0], 50), (sweep[-1], 50), (50, sweep[-1])):
+        app, infra, mon = synth(n_c, n_n)
+        pipe = GreenConstraintPipeline()
+        out = pipe.run(app, infra, mon, use_kb=False)
+        t0 = time.perf_counter()
+        plan = GreenScheduler(SchedulerConfig.green()).plan(
+            out.app, out.infra, out.computation, out.communication,
+            out.constraints)
+        dt = time.perf_counter() - t0
+        assert plan.feasible
+        rows_plan.append((n_c, n_n, dt))
+        report(f"{n_c:>11} {n_n:>6} {dt:>8.3f}")
+    assert all(t < 60.0 for _, _, t in rows_plan), rows_plan
+    return {"app_sweep": rows_a, "infra_sweep": rows_b,
+            "plan_sweep": rows_plan}
 
 
 if __name__ == "__main__":

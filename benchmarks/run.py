@@ -15,6 +15,7 @@ def main() -> None:
         roofline,
         scenarios,
         scheduler_savings,
+        scheduler_scalability,
         table1_energy_profiles,
         table4_threshold,
     )
@@ -27,6 +28,13 @@ def main() -> None:
          {"sweep": (100, 200, 400) if quick else (100, 200, 400, 700, 1000)}),
         ("table4_threshold (Table 4 / Fig. 3)", table4_threshold.run, {}),
         ("scheduler_savings (end-to-end)", scheduler_savings.run, {}),
+        ("scheduler_scalability (array-native core)",
+         scheduler_scalability.run,
+         # quick mode skips the heavy (200,100) legacy point and must not
+         # overwrite the tracked BENCH_scheduler.json with a partial sweep
+         {"sweep": ((50, 25), (100, 50)),
+          "vec_only_sweep": ((200, 100),),
+          "out_json": None} if quick else {}),
         ("roofline single-pod (§Roofline)", roofline.run, {}),
         ("roofline multi-pod (§Dry-run)", roofline.run, {"multi_pod": True}),
     ]

@@ -1,10 +1,18 @@
 """Sect. 5.3 reproduction: constraints generated for the five scenarios,
 printed in the paper's Prolog notation, with the paper's own printed
-constraints checked against ours."""
+constraints checked against ours.  Also checks the array-native scheduler
+against the legacy reference on every scenario (plan objective must match
+or beat it)."""
 import time
 
 from repro.configs import boutique
 from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import (
+    GreenScheduler,
+    ReferenceScheduler,
+    SchedulerConfig,
+    reference_objective,
+)
 from repro.core.types import Affinity, AvoidNode
 
 # (scenario, service, flavour, node/other, paper weight, note)
@@ -51,7 +59,30 @@ def run(report=print):
         "Scenario 1 affinity must be ranked out"
     report(f"\n# {checked} paper-printed weights verified; "
            f"S5 affinity surfaced: {[(c.service, c.other) for c in s5_aff]}")
-    return {"scenarios": 5, "us_per_call": dt_us, "paper_facts": checked}
+
+    # array-native scheduler vs legacy reference on every scenario: the
+    # vectorized plan's objective must match or beat the legacy plan's.
+    cfg = SchedulerConfig.green()
+    parity = {}
+    for n, out in outs.items():
+        app, infra = out.app, out.infra
+        comp, comm = out.computation, out.communication
+        ref = ReferenceScheduler(cfg).plan(app, infra, comp, comm,
+                                           out.constraints)
+        vec = GreenScheduler(cfg).plan(app, infra, comp, comm,
+                                       out.constraints)
+        j = {
+            k: reference_objective(
+                app, infra, comp, comm, out.constraints, cfg,
+                {p.service: (p.flavour, p.node) for p in plan.placements})
+            for k, plan in (("ref", ref), ("vec", vec))
+        }
+        assert j["vec"] <= j["ref"] + 1e-9 * max(1.0, abs(j["ref"])), (n, j)
+        parity[n] = j
+    report(f"# scheduler parity: vectorized objective <= legacy on all "
+           f"{len(parity)} scenarios")
+    return {"scenarios": 5, "us_per_call": dt_us, "paper_facts": checked,
+            "scheduler_parity": parity}
 
 
 if __name__ == "__main__":

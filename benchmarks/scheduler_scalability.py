@@ -1,0 +1,147 @@
+"""Scheduler scalability: legacy object-walking vs array-native core.
+
+Sweeps (S services, N nodes) and times one full `plan()` call (greedy +
+local search) for the retained ``ReferenceScheduler`` and the vectorized
+``GreenScheduler`` on the same synthetic problem and the same config.
+Writes ``BENCH_scheduler.json`` so the perf trajectory is tracked from
+this PR onward; asserts the vectorized plan's objective never exceeds the
+legacy plan's and that the speedup at (S=200, N=100) is at least 10x.
+
+The legacy path is O(S^2*F*N*(S+L)) per greedy pass, so the sweep keeps
+``local_search_rounds`` small and caps the legacy side at (200, 100);
+larger vectorized-only points show the array-native scaling headroom.
+"""
+import json
+import random
+import time
+
+from repro.core.scheduler import (
+    GreenScheduler,
+    ReferenceScheduler,
+    SchedulerConfig,
+    reference_objective,
+)
+from repro.core.types import (
+    Affinity,
+    Application,
+    AvoidNode,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+)
+
+OUT_JSON = "BENCH_scheduler.json"
+REQUIRED_SPEEDUP = 10.0          # acceptance floor at (200, 100)
+
+
+def synth(n_services: int, n_nodes: int, seed: int = 0, flavours: int = 2):
+    """A dense-ish placement problem: F flavours per service, ring links,
+    AvoidNode/Affinity soft constraints."""
+    rnd = random.Random(seed)
+    services = tuple(
+        Service(f"s{i}", flavours=tuple(
+            Flavour(f"f{k}", requirements=FlavourRequirements(
+                cpu=rnd.choice([0.5, 1.0, 2.0]),
+                ram_gb=rnd.choice([1.0, 2.0, 4.0])))
+            for k in range(flavours)))
+        for i in range(n_services)
+    )
+    nodes = tuple(
+        Node(f"n{j}", carbon=rnd.uniform(10.0, 600.0),
+             cost_per_cpu_hour=rnd.uniform(0.0, 2.0),
+             capabilities=NodeCapabilities(
+                 cpu=rnd.choice([8.0, 16.0]), ram_gb=64.0))
+        for j in range(n_nodes)
+    )
+    comp = {
+        (f"s{i}", f"f{k}"): rnd.uniform(1.0, 100.0)
+        for i in range(n_services) for k in range(flavours)
+    }
+    comm = {
+        (f"s{i}", "f0", f"s{(i + 1) % n_services}"): rnd.uniform(0.1, 20.0)
+        for i in range(n_services)
+    }
+    cs = []
+    for i in range(0, n_services, 3):
+        cs.append(AvoidNode(service=f"s{i}", flavour="f0",
+                            node=f"n{rnd.randrange(n_nodes)}",
+                            weight=rnd.uniform(0.2, 1.0)))
+    for i in range(0, n_services, 5):
+        cs.append(Affinity(service=f"s{i}",
+                           other=f"s{(i + 1) % n_services}",
+                           weight=rnd.uniform(0.2, 1.0)))
+    return (Application("synth", services), Infrastructure("synth", nodes),
+            comp, comm, cs)
+
+
+def _objective(plan, app, infra, comp, comm, cs, cfg):
+    assign = {p.service: (p.flavour, p.node) for p in plan.placements}
+    return reference_objective(app, infra, comp, comm, cs, cfg, assign)
+
+
+def run(report=print, sweep=((50, 25), (100, 50), (200, 100)),
+        vec_only_sweep=((500, 200), (1000, 400)), rounds: int = 2,
+        out_json: str = OUT_JSON):
+    cfg = SchedulerConfig.green()
+    cfg.local_search_rounds = rounds
+    rows = []
+    report("# Scheduler wall time: legacy (ReferenceScheduler) vs "
+           "array-native (GreenScheduler)")
+    report(f"{'S':>5} {'N':>5} {'t_ref_s':>9} {'t_vec_s':>9} "
+           f"{'speedup':>8} {'J_ref':>12} {'J_vec':>12}")
+    for S, N in sweep:
+        app, infra, comp, comm, cs = synth(S, N)
+        t0 = time.perf_counter()
+        ref = ReferenceScheduler(cfg).plan(app, infra, comp, comm, cs)
+        t_ref = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        vec = GreenScheduler(cfg).plan(app, infra, comp, comm, cs)
+        t_vec = time.perf_counter() - t0
+        j_ref = _objective(ref, app, infra, comp, comm, cs, cfg)
+        j_vec = _objective(vec, app, infra, comp, comm, cs, cfg)
+        assert vec.feasible == ref.feasible
+        assert j_vec <= j_ref + 1e-9 * max(1.0, abs(j_ref)), \
+            (S, N, j_ref, j_vec)
+        speedup = t_ref / max(t_vec, 1e-9)
+        rows.append({"S": S, "N": N, "t_ref_s": t_ref, "t_vec_s": t_vec,
+                     "speedup": speedup, "J_ref": j_ref, "J_vec": j_vec})
+        report(f"{S:>5} {N:>5} {t_ref:>9.3f} {t_vec:>9.3f} "
+               f"{speedup:>7.1f}x {j_ref:>12.3f} {j_vec:>12.3f}")
+
+    vec_rows = []
+    report("\n# Array-native only (legacy intractable at this scale)")
+    report(f"{'S':>5} {'N':>5} {'t_vec_s':>9}")
+    for S, N in vec_only_sweep:
+        app, infra, comp, comm, cs = synth(S, N)
+        t0 = time.perf_counter()
+        plan = GreenScheduler(cfg).plan(app, infra, comp, comm, cs)
+        t_vec = time.perf_counter() - t0
+        assert plan.feasible
+        vec_rows.append({"S": S, "N": N, "t_vec_s": t_vec})
+        report(f"{S:>5} {N:>5} {t_vec:>9.3f}")
+
+    top = max(rows, key=lambda r: (r["S"], r["N"]))
+    report(f"\n# speedup at S={top['S']}, N={top['N']}: "
+           f"{top['speedup']:.1f}x")
+    # the 10x acceptance floor is defined at (S=200, N=100); only enforce
+    # it when the sweep actually contains that point (quick sweeps don't)
+    gate = [r for r in rows if (r["S"], r["N"]) == (200, 100)]
+    if gate:
+        report(f"# acceptance: {gate[0]['speedup']:.1f}x at (200, 100) "
+               f"(floor {REQUIRED_SPEEDUP:.0f}x)")
+        assert gate[0]["speedup"] >= REQUIRED_SPEEDUP, gate[0]
+
+    out = {"config": {"local_search_rounds": rounds, "profile": "green"},
+           "old_vs_vectorized": rows, "vectorized_only": vec_rows}
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(out, fh, indent=2)
+        report(f"# wrote {out_json}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

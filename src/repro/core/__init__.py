@@ -15,9 +15,15 @@ from .library import (
     ConstraintLibrary,
     ConstraintModule,
 )
+from .lowering import LoweredProblem, lower, lower_constraints
 from .pipeline import GeneratorOutput, GreenConstraintPipeline
 from .ranker import ConstraintRanker
-from .scheduler import GreenScheduler, SchedulerConfig
+from .scheduler import (
+    GreenScheduler,
+    ReferenceScheduler,
+    SchedulerConfig,
+    reference_objective,
+)
 from .types import (
     Affinity,
     Application,

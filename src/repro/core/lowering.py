@@ -1,0 +1,234 @@
+"""Lowering: Application/Infrastructure/constraints -> dense tensors.
+
+The object model in :mod:`repro.core.types` mirrors the paper's Sect. 3.2
+artefacts; this module lowers them once into a dense array-native substrate
+(`LoweredProblem`) so the scheduler can score *all* candidate placements in
+batched array ops instead of re-walking Python objects per candidate.
+
+Tensor <-> paper-symbol map (S services, F flavour slots, N nodes):
+
+  ``E[s, f]``      energyProfile(s, f)        — Eq. 1 computation profile
+                   (kWh per observation window; falls back to the
+                   Energy-Estimator-enriched ``Flavour.energy_kwh``).
+  ``K[s, f, z]``   energyProfile(s, f, z)     — Eq. 2 communication profile
+                   under the Eq. 13 transmission model
+                   (kWh = requestVolume * requestSize * k), keyed by
+                   (source service, source flavour, target service).
+  ``ci[n]``        C(n)                       — carbon intensity of node n
+                   (gCO2eq/kWh, Energy Mix Gatherer; missing values are
+                   filled with the infrastructure mean as in the scheduler).
+  ``P[s, f, n]``   avoidNode(d(s, f), n, w)   — Definition 1 soft-constraint
+                   penalty w_i * mu_i.
+  ``A[s, z]``      affinity(d(s, _), d(z, _)) — Definition 2 soft-constraint
+                   penalty w_i * mu_i (flavour-independent, as consumed by
+                   the scheduler objective).
+  ``cost[n]``      monetary cost per CPU-hour of node n.
+  ``cpu_req/ram_req/avail_req[s, f]``  flavour requirements (Sect. 3.2).
+  ``cpu_cap/ram_cap/avail_cap[n]``     node capabilities.
+  ``compat[s, n]`` subnet compatibility mask (Sect. 4.3).
+  ``valid[s, f]``  True where flavour slot f is a real flavour of s
+                   (slot order = ``flavours_order``, so the slot index *is*
+                   the flavoursOrder preference rank).
+  ``must[s]``      mandatory-deployment flag.
+  ``order[s]``     greedy construction order (heaviest profile first,
+                   stable — identical to the reference scheduler's).
+
+Everything is plain NumPy; the arrays are directly consumable by
+``jax.numpy`` for the jit-compiled scheduler path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Mapping, Sequence, Tuple
+
+import numpy as np
+
+from .library import subnet_compatible
+from .types import (
+    Affinity,
+    Application,
+    AvoidNode,
+    Constraint,
+    Infrastructure,
+)
+
+
+@dataclass
+class LoweredProblem:
+    """Dense-tensor form of one placement problem (constraints excluded —
+    lower those separately with :func:`lower_constraints` so a cached
+    lowering can be reused across adaptive-loop iterations)."""
+
+    service_ids: Tuple[str, ...]
+    node_ids: Tuple[str, ...]
+    flavour_names: Tuple[Tuple[str, ...], ...]   # per service, order = rank
+
+    # application-side tensors
+    E: np.ndarray          # [S, F] computation energy (kWh/window)
+    K: np.ndarray          # [S, F, S] communication energy (kWh/window)
+    has_link: np.ndarray   # [S, F, S] bool — entry present in the comm map
+    cpu_req: np.ndarray    # [S, F]
+    ram_req: np.ndarray    # [S, F]
+    avail_req: np.ndarray  # [S, F]
+    valid: np.ndarray      # [S, F] bool
+    must: np.ndarray       # [S] bool
+    order: np.ndarray      # [S] int — greedy construction order
+
+    # infrastructure-side tensors
+    ci: np.ndarray         # [N] carbon intensity, mean-filled
+    mean_ci: float
+    cost: np.ndarray       # [N]
+    cpu_cap: np.ndarray    # [N]
+    ram_cap: np.ndarray    # [N]
+    avail_cap: np.ndarray  # [N]
+    compat: np.ndarray     # [S, N] bool
+
+    @property
+    def S(self) -> int:
+        return len(self.service_ids)
+
+    @property
+    def F(self) -> int:
+        return self.E.shape[1] if self.E.ndim == 2 else 0
+
+    @property
+    def N(self) -> int:
+        return len(self.node_ids)
+
+    def service_index(self) -> Dict[str, int]:
+        return {sid: i for i, sid in enumerate(self.service_ids)}
+
+    def node_index(self) -> Dict[str, int]:
+        return {nid: j for j, nid in enumerate(self.node_ids)}
+
+
+def lower(
+    app: Application,
+    infra: Infrastructure,
+    computation: Mapping[Tuple[str, str], float],
+    communication: Mapping[Tuple[str, str, str], float],
+) -> LoweredProblem:
+    """Lower the object-model problem into dense tensors.
+
+    Communication entries whose source/target is not an application service,
+    or whose flavour is not in the source's ``flavours_order``, can never
+    contribute to the objective (the reference scheduler requires both
+    endpoints assigned and the source's assigned flavour to match) and are
+    dropped.  Self-links are zeroed for the same reason.
+    """
+    services = app.services
+    nodes = infra.nodes
+    S, N = len(services), len(nodes)
+    F = max((len(s.flavours_order) for s in services), default=0)
+    F = max(F, 1)  # keep arrays 2-D even for flavourless services
+
+    service_ids = tuple(s.component_id for s in services)
+    node_ids = tuple(n.node_id for n in nodes)
+    flavour_names = tuple(s.flavours_order for s in services)
+    sidx = {sid: i for i, sid in enumerate(service_ids)}
+
+    E = np.zeros((S, F))
+    cpu_req = np.zeros((S, F))
+    ram_req = np.zeros((S, F))
+    avail_req = np.zeros((S, F))
+    valid = np.zeros((S, F), dtype=bool)
+    must = np.array([s.must_deploy for s in services], dtype=bool)
+
+    max_profile = np.zeros(S)  # greedy-order key: max energy over flavours
+    for i, svc in enumerate(services):
+        for f, fname in enumerate(svc.flavours_order):
+            fl = svc.flavour(fname)
+            e = computation.get((svc.component_id, fname))
+            if e is None:
+                e = fl.energy_kwh if fl.energy_kwh is not None else 0.0
+            E[i, f] = e
+            cpu_req[i, f] = fl.requirements.cpu
+            ram_req[i, f] = fl.requirements.ram_gb
+            avail_req[i, f] = fl.requirements.availability
+            valid[i, f] = True
+        # the reference greedy keys on *all* flavours, not just ordered ones
+        profiles = []
+        for fl in svc.flavours:
+            e = computation.get((svc.component_id, fl.name))
+            if e is None:
+                e = fl.energy_kwh if fl.energy_kwh is not None else 0.0
+            profiles.append(e)
+        max_profile[i] = max(profiles, default=0.0)
+    # stable sort, heaviest first — matches sorted(key=-max_energy)
+    order = np.argsort(-max_profile, kind="stable")
+
+    K = np.zeros((S, F, S))
+    has_link = np.zeros((S, F, S), dtype=bool)
+    for (s, fname, z), e in communication.items():
+        i, j = sidx.get(s), sidx.get(z)
+        if i is None or j is None or i == j:
+            continue
+        try:
+            f = services[i].flavours_order.index(fname)
+        except ValueError:
+            continue
+        K[i, f, j] = e
+        has_link[i, f, j] = True
+
+    cis = [n.carbon for n in nodes if n.carbon is not None]
+    mean_ci = float(sum(cis) / len(cis)) if cis else 0.0
+    ci = np.array(
+        [n.carbon if n.carbon is not None else mean_ci for n in nodes],
+        dtype=float,
+    ) if N else np.zeros(0)
+    cost = np.array([n.cost_per_cpu_hour for n in nodes], dtype=float)
+    cpu_cap = np.array([n.capabilities.cpu for n in nodes], dtype=float)
+    ram_cap = np.array([n.capabilities.ram_gb for n in nodes], dtype=float)
+    avail_cap = np.array(
+        [n.capabilities.availability for n in nodes], dtype=float)
+
+    compat = np.zeros((S, N), dtype=bool)
+    for i, svc in enumerate(services):
+        for j, node in enumerate(nodes):
+            compat[i, j] = subnet_compatible(svc, node)
+
+    return LoweredProblem(
+        service_ids=service_ids,
+        node_ids=node_ids,
+        flavour_names=flavour_names,
+        E=E, K=K, has_link=has_link,
+        cpu_req=cpu_req, ram_req=ram_req, avail_req=avail_req,
+        valid=valid, must=must, order=order,
+        ci=ci, mean_ci=mean_ci, cost=cost,
+        cpu_cap=cpu_cap, ram_cap=ram_cap, avail_cap=avail_cap,
+        compat=compat,
+    )
+
+
+def lower_constraints(
+    low: LoweredProblem, constraints: Sequence[Constraint]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Lower soft green constraints to penalty tensors ``(P, A)``.
+
+    ``P[s, f, n]`` — AvoidNode penalty w_i * mu_i; ``A[s, z]`` — Affinity
+    penalty w_i * mu_i.  Later constraints with the same key overwrite
+    earlier ones, matching the reference scheduler's dict construction.
+    Constraints referencing unknown services/flavours/nodes are ignored
+    (they could never fire in the reference objective either).
+    """
+    S, F, N = low.S, low.F, low.N
+    P = np.zeros((S, F, N))
+    A = np.zeros((S, S))
+    sidx = low.service_index()
+    nidx = low.node_index()
+    for c in constraints:
+        if isinstance(c, AvoidNode):
+            i, j = sidx.get(c.service), nidx.get(c.node)
+            if i is None or j is None:
+                continue
+            try:
+                f = low.flavour_names[i].index(c.flavour)
+            except ValueError:
+                continue
+            P[i, f, j] = c.weight * c.memory_weight
+        elif isinstance(c, Affinity):
+            i, j = sidx.get(c.service), sidx.get(c.other)
+            if i is None or j is None:
+                continue
+            A[i, j] = c.weight * c.memory_weight
+    return P, A

@@ -3,11 +3,17 @@
 Wires together: Energy Mix Gatherer -> Energy Estimator -> Constraint
 Generator -> KB Enricher -> Constraints Ranker -> Explainability Generator
 -> Constraint Adapter.  One call = one iteration of the adaptive loop.
+
+``run`` also surfaces the enriched descriptions and the Eq. 1/2 energy
+profiles on its output, and ``plan`` closes the loop: constraints ->
+array-native scheduler -> deployment plan, reusing one dense lowering
+(:mod:`repro.core.lowering`) across iterations of the adaptive loop when
+the application/infrastructure shape is unchanged.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from . import adapter
 from .energy import EnergyEstimator, EnergyMixGatherer
@@ -15,10 +21,13 @@ from .explain import ExplainabilityReport, generate_report
 from .generator import ConstraintGenerator
 from .kb import KBEnricher, KnowledgeBase
 from .library import ConstraintLibrary
+from .lowering import LoweredProblem, lower
 from .ranker import ConstraintRanker
+from .scheduler import GreenScheduler, SchedulerConfig
 from .types import (
     Application,
     Constraint,
+    DeploymentPlan,
     Infrastructure,
     MonitoringData,
 )
@@ -30,6 +39,13 @@ class GeneratorOutput:
     report: ExplainabilityReport
     prolog: str
     dicts: list
+    # Enriched artefacts threaded through so downstream consumers (the
+    # scheduler, the launch layer) don't re-derive them per iteration.
+    app: Optional[Application] = None              # energy-enriched
+    infra: Optional[Infrastructure] = None         # carbon-enriched
+    computation: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    communication: Dict[Tuple[str, str, str], float] = field(
+        default_factory=dict)
 
     def render(self) -> str:
         return self.prolog
@@ -58,6 +74,8 @@ class GreenConstraintPipeline:
         self.iteration += 1
         infra = self.gatherer.enrich(infra)
         app = self.estimator.enrich(app, monitoring)
+        computation = self.estimator.computation_profiles(monitoring)
+        communication = self.estimator.communication_profiles(monitoring)
 
         generator = ConstraintGenerator(
             library=self.library,
@@ -69,8 +87,6 @@ class GreenConstraintPipeline:
         fresh = generator.generate(app, infra, monitoring, self.iteration)
 
         if use_kb:
-            computation = self.estimator.computation_profiles(monitoring)
-            communication = self.estimator.communication_profiles(monitoring)
             merged = self.enricher.update(
                 self.kb, fresh, computation, communication, infra,
                 self.iteration,
@@ -85,4 +101,53 @@ class GreenConstraintPipeline:
             report=report,
             prolog=adapter.to_prolog(ranked),
             dicts=adapter.to_dicts(ranked),
+            app=app,
+            infra=infra,
+            computation=computation,
+            communication=communication,
         )
+
+    def plan(
+        self,
+        app: Application,
+        infra: Infrastructure,
+        monitoring: MonitoringData,
+        scheduler: Optional[GreenScheduler] = None,
+        use_kb: bool = True,
+    ) -> Tuple[DeploymentPlan, GeneratorOutput]:
+        """One full adaptive-loop iteration: constraints + deployment plan.
+
+        The dense lowering is rebuilt only when the enriched problem
+        changes (profiles drift every iteration, so the lowering is keyed
+        on the profile values too — the cache saves work when the loop
+        replans on an unchanged window, e.g. for multi-config what-ifs).
+        """
+        scheduler = scheduler or GreenScheduler(SchedulerConfig.green())
+        out = self.run(app, infra, monitoring, use_kb=use_kb)
+        lowered = self._lowered(out)
+        plan = scheduler.plan(
+            out.app, out.infra, out.computation, out.communication,
+            out.constraints, lowered=lowered,
+        )
+        return plan, out
+
+    _lowering_cache: Optional[Tuple[tuple, LoweredProblem]] = field(
+        default=None, repr=False, compare=False)
+
+    def _lowered(self, out: GeneratorOutput) -> LoweredProblem:
+        # Application/Infrastructure are frozen dataclasses: value equality
+        # covers every lowered input (capacities, costs, subnets, flavour
+        # requirements, carbon), so a stale lowering can never be reused.
+        key = (
+            out.app,
+            out.infra,
+            tuple(sorted(out.computation.items())),
+            tuple(sorted(out.communication.items())),
+        )
+        if self._lowering_cache is not None \
+                and self._lowering_cache[0] == key:
+            return self._lowering_cache[1]
+        lowered = lower(out.app, out.infra, out.computation,
+                        out.communication)
+        self._lowering_cache = (key, lowered)
+        return lowered

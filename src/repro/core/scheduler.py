@@ -1,4 +1,4 @@
-"""Constraint-aware deployment scheduler.
+"""Constraint-aware deployment scheduler (array-native core).
 
 The paper delegates plan generation to an external constraint-based scheduler
 ([36]); we implement one as the required baseline so the whole pipeline is
@@ -12,8 +12,21 @@ runnable end-to-end.  The scheduler minimises a weighted objective
 
 subject to hard requirements: subnet compatibility, node capacities
 (CPU/RAM), availability.  Optional services may be dropped when no feasible
-placement exists.  Solved with greedy construction + first-improvement local
-search.
+placement exists.
+
+Two implementations share the objective:
+
+* ``GreenScheduler`` — the array-native core.  The problem is lowered once
+  to dense tensors (:mod:`repro.core.lowering`); greedy construction scores
+  every (flavour, node) candidate for a service in one batched incremental
+  delta-objective evaluation, and local search scores the entire
+  single-relocation move grid ``[S, F, N]`` per step as one vectorized op
+  (NumPy baseline; ``SchedulerConfig.use_jax`` switches the move grid to a
+  ``jax.jit``-compiled path).
+* ``ReferenceScheduler`` — the legacy object-walking greedy +
+  first-improvement local search, retained verbatim for equivalence testing
+  and old-vs-new benchmarking.  ``reference_objective`` exposes its
+  objective for any assignment.
 
 Three standard profiles:
   * ``baseline``  — QoS/cost-driven, environment-blind (what today's
@@ -23,11 +36,13 @@ Three standard profiles:
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .library import subnet_compatible
+from .lowering import LoweredProblem, lower, lower_constraints
 from .types import (
     Affinity,
     Application,
@@ -39,6 +54,10 @@ from .types import (
     Service,
 )
 
+# Improvement threshold shared by both local searches (a move must beat the
+# incumbent by more than this to be taken).
+_EPS = 1e-12
+
 
 @dataclass
 class SchedulerConfig:
@@ -48,6 +67,9 @@ class SchedulerConfig:
     green_penalty: float = 5.0
     use_green_constraints: bool = True
     local_search_rounds: int = 50
+    # Evaluate the local-search move grid with jax.jit instead of NumPy.
+    # Same tensors, same semantics; pays one compile per problem shape.
+    use_jax: bool = False
 
     @classmethod
     def baseline(cls) -> "SchedulerConfig":
@@ -63,8 +85,285 @@ class SchedulerConfig:
                    use_green_constraints=False)
 
 
+# ---------------------------------------------------------------------------
+# Array-native scheduler
+# ---------------------------------------------------------------------------
+
+
+def _move_deltas(xp, static, W, stat_feas, cpu_req, ram_req, cpu_cap,
+                 ram_cap, placed, fcur, ncur, cpu_load, ram_load):
+    """Delta objective of every single-relocation move, as one batched op.
+
+    Returns ``delta[s, f, n]`` = J(after moving s to (f, n)) - J(current),
+    with +inf at infeasible moves, unplaced services, and the incumbent
+    cell.  ``xp`` is ``numpy`` or ``jax.numpy`` — the function is pure and
+    shape-static, so the jax path can wrap it in ``jax.jit``.
+    """
+    S, F, N = static.shape
+    placed_f = placed.astype(static.dtype)
+    # onehot[z, n] = 1 iff service z is placed on node n
+    onehot = (ncur[:, None] == xp.arange(N)[None, :]) * placed_f[:, None]
+
+    # outgoing links s -> z: pay W[s, f, z] unless z sits on the target node
+    t_out = (W * placed_f[None, None, :]).sum(-1)              # [S, F]
+    out = t_out[:, :, None] - xp.einsum("sfz,zn->sfn", W, onehot)
+    # incoming links z -> s under z's *current* flavour
+    Wf = xp.take_along_axis(W, fcur[:, None, None], axis=1)[:, 0, :]
+    Wf = Wf * placed_f[:, None]                                 # [Z, S]
+    inn = Wf.sum(0)[:, None] - xp.einsum("zs,zn->sn", Wf, onehot)
+
+    score = static + out + inn[:, None, :]                      # [S, F, N]
+    cur = xp.take_along_axis(
+        xp.take_along_axis(score, fcur[:, None, None], axis=1)[:, 0, :],
+        ncur[:, None], axis=1)[:, 0]
+    delta = score - cur[:, None, None]
+
+    # capacity feasibility with the service's own load removed
+    own_cpu = xp.take_along_axis(cpu_req, fcur[:, None], axis=1)[:, 0]
+    own_ram = xp.take_along_axis(ram_req, fcur[:, None], axis=1)[:, 0]
+    cpu_wo = cpu_load[None, :] - own_cpu[:, None] * onehot
+    ram_wo = ram_load[None, :] - own_ram[:, None] * onehot
+    feas = (stat_feas
+            & (cpu_wo[:, None, :] + cpu_req[:, :, None]
+               <= cpu_cap[None, None, :])
+            & (ram_wo[:, None, :] + ram_req[:, :, None]
+               <= ram_cap[None, None, :]))
+    mask = feas & placed[:, None, None]
+    # exclude the incumbent (f, n) cell
+    incumbent = ((xp.arange(F)[None, :, None] == fcur[:, None, None])
+                 & (xp.arange(N)[None, None, :] == ncur[:, None, None]))
+    mask = mask & ~incumbent
+    return xp.where(mask, delta, xp.inf)
+
+
 @dataclass
 class GreenScheduler:
+    """Array-native greedy + vectorized best-improvement local search."""
+
+    config: SchedulerConfig = field(default_factory=SchedulerConfig)
+
+    def plan(
+        self,
+        app: Application,
+        infra: Infrastructure,
+        computation: Mapping[Tuple[str, str], float],
+        communication: Mapping[Tuple[str, str, str], float],
+        constraints: Sequence[Constraint] = (),
+        lowered: Optional[LoweredProblem] = None,
+    ) -> DeploymentPlan:
+        cfg = self.config
+        low = lowered if lowered is not None \
+            else lower(app, infra, computation, communication)
+        if not cfg.use_green_constraints:
+            constraints = ()
+        P, A = lower_constraints(low, constraints)
+        S, F, N = low.S, low.F, low.N
+
+        # config-weighted scoring tensors
+        static = (cfg.money_weight * low.cost[None, None, :]
+                  * low.cpu_req[:, :, None]
+                  + cfg.pref_weight * np.arange(F)[None, :, None]
+                  + cfg.emission_weight * low.E[:, :, None]
+                  * low.ci[None, None, :]
+                  + cfg.green_penalty * P)
+        W = (cfg.emission_weight * low.mean_ci * low.K
+             + cfg.green_penalty * A[:, None, :] * low.has_link)
+        stat_feas = (low.valid[:, :, None]
+                     & low.compat[:, None, :]
+                     & (low.avail_cap[None, None, :]
+                        >= low.avail_req[:, :, None]))
+
+        placed = np.zeros(S, dtype=bool)
+        fcur = np.zeros(S, dtype=np.int64)
+        ncur = np.zeros(S, dtype=np.int64)
+        cpu_load = np.zeros(N)
+        ram_load = np.zeros(N)
+        skipped: List[str] = []
+
+        # --- greedy construction: heaviest services first; all (f, n)
+        # candidates of a service scored in one batched delta evaluation.
+        for s in map(int, low.order):
+            feas = (stat_feas[s]
+                    & (cpu_load[None, :] + low.cpu_req[s][:, None]
+                       <= low.cpu_cap[None, :])
+                    & (ram_load[None, :] + low.ram_req[s][:, None]
+                       <= low.ram_cap[None, :]))
+            if not feas.any():
+                if low.must[s]:
+                    return DeploymentPlan(
+                        placements=(),
+                        feasible=False,
+                        notes=(f"no feasible node for {low.service_ids[s]}",),
+                    )
+                skipped.append(low.service_ids[s])
+                continue
+            score = static[s].copy()
+            if placed.any():
+                pl = np.nonzero(placed)[0]
+                n_pl = ncur[pl]
+                w_out = W[s][:, pl]                              # [F, P]
+                colloc = np.zeros((F, N))
+                for f in range(F):
+                    colloc[f] = np.bincount(n_pl, weights=w_out[f],
+                                            minlength=N)
+                v_in = W[pl, fcur[pl], s]                        # [P]
+                in_colloc = np.bincount(n_pl, weights=v_in, minlength=N)
+                score += (w_out.sum(1)[:, None] - colloc
+                          + (v_in.sum() - in_colloc)[None, :])
+            score = np.where(feas, score, np.inf)
+            # row-major argmin == legacy tie-break: flavoursOrder rank,
+            # then node index
+            f, n = divmod(int(np.argmin(score)), N)
+            placed[s] = True
+            fcur[s], ncur[s] = f, n
+            cpu_load[n] += low.cpu_req[s, f]
+            ram_load[n] += low.ram_req[s, f]
+
+        # --- local search: the whole [S, F, N] single-relocation move grid
+        # is scored per step; best improving move applied until convergence.
+        deltas = self._delta_fn(static, W, stat_feas, low) \
+            if placed.any() else None
+        for _ in range(cfg.local_search_rounds * max(1, S) if deltas else 0):
+            delta = deltas(placed, fcur, ncur, cpu_load, ram_load)
+            k = int(np.argmin(delta))
+            s, r = divmod(k, F * N)
+            f, n = divmod(r, N)
+            if not np.asarray(delta).flat[k] < -_EPS:
+                break
+            cpu_load[ncur[s]] -= low.cpu_req[s, fcur[s]]
+            ram_load[ncur[s]] -= low.ram_req[s, fcur[s]]
+            fcur[s], ncur[s] = f, n
+            cpu_load[n] += low.cpu_req[s, f]
+            ram_load[n] += low.ram_req[s, f]
+
+        assign = {
+            low.service_ids[s]: (low.flavour_names[s][int(fcur[s])],
+                                 low.node_ids[int(ncur[s])])
+            for s in range(S) if placed[s]
+        }
+        placements = tuple(
+            Placement(sid, f, n) for sid, (f, n) in sorted(assign.items())
+        )
+        return DeploymentPlan(
+            placements=placements,
+            skipped_services=tuple(skipped),
+            total_emissions_g=plan_emissions(
+                app, infra, assign, computation, communication
+            ),
+            feasible=True,
+        )
+
+    def _delta_fn(self, static, W, stat_feas, low: LoweredProblem):
+        """Bind the problem tensors into a move-grid evaluator."""
+        if not self.config.use_jax:
+            return lambda placed, fcur, ncur, cpu_load, ram_load: \
+                _move_deltas(np, static, W, stat_feas, low.cpu_req,
+                             low.ram_req, low.cpu_cap, low.ram_cap,
+                             placed, fcur, ncur, cpu_load, ram_load)
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+
+        # x64 keeps the jax path bit-comparable to the NumPy baseline; a
+        # float32 downcast would drown the _EPS improvement threshold in
+        # rounding noise and let the local search ping-pong on near-ties.
+        with enable_x64():
+            consts = tuple(jnp.asarray(a) for a in (
+                static, W, stat_feas, low.cpu_req, low.ram_req,
+                low.cpu_cap, low.ram_cap))
+
+        @jax.jit
+        def jitted(placed, fcur, ncur, cpu_load, ram_load):
+            return _move_deltas(jnp, *consts, placed, fcur, ncur,
+                                cpu_load, ram_load)
+
+        def call(placed, fcur, ncur, cpu_load, ram_load):
+            with enable_x64():
+                return np.asarray(
+                    jitted(placed, fcur, ncur, cpu_load, ram_load))
+
+        return call
+
+
+# ---------------------------------------------------------------------------
+# Legacy reference implementation (object-walking), kept for equivalence
+# testing and old-vs-new benchmarking.
+# ---------------------------------------------------------------------------
+
+
+def _constraint_maps(
+    constraints: Sequence[Constraint],
+) -> Tuple[Dict[Tuple[str, str, str], float], Dict[Tuple[str, str], float]]:
+    avoid: Dict[Tuple[str, str, str], float] = {}
+    affinity: Dict[Tuple[str, str], float] = {}
+    for c in constraints:
+        if isinstance(c, AvoidNode):
+            avoid[(c.service, c.flavour, c.node)] = c.weight * c.memory_weight
+        elif isinstance(c, Affinity):
+            affinity[(c.service, c.other)] = c.weight * c.memory_weight
+    return avoid, affinity
+
+
+def _flavour_energy(
+    svc: Service, fname: str, computation: Mapping[Tuple[str, str], float]
+) -> float:
+    v = computation.get((svc.component_id, fname))
+    if v is not None:
+        return v
+    e = svc.flavour(fname).energy_kwh
+    return e if e is not None else 0.0
+
+
+def reference_objective(
+    app: Application,
+    infra: Infrastructure,
+    computation: Mapping[Tuple[str, str], float],
+    communication: Mapping[Tuple[str, str, str], float],
+    constraints: Sequence[Constraint],
+    config: SchedulerConfig,
+    assign: Mapping[str, Tuple[str, str]],
+) -> float:
+    """The legacy object-walking objective J(assign) — ground truth for
+    equivalence tests of the array-native scheduler."""
+    cfg = config
+    if not cfg.use_green_constraints:
+        constraints = ()
+    avoid, affinity = _constraint_maps(constraints)
+    mean_ci = _mean_ci(infra)
+    money = pref = emissions = green = 0.0
+    for sid, (fname, nid) in assign.items():
+        svc = app.service(sid)
+        node = infra.node(nid)
+        req = svc.flavour(fname).requirements
+        money += node.cost_per_cpu_hour * req.cpu
+        pref += svc.flavours_order.index(fname)
+        if cfg.emission_weight:
+            ci = node.carbon if node.carbon is not None else mean_ci
+            emissions += _flavour_energy(svc, fname, computation) * ci
+        g = avoid.get((sid, fname, nid))
+        if g:
+            green += g
+    for (s, f, z), e in communication.items():
+        if s in assign and z in assign and assign[s][0] == f:
+            if assign[s][1] != assign[z][1]:
+                if cfg.emission_weight:
+                    emissions += e * mean_ci
+                g = affinity.get((s, z))
+                if g:
+                    green += g
+    return (cfg.money_weight * money
+            + cfg.pref_weight * pref
+            + cfg.emission_weight * emissions
+            + cfg.green_penalty * green)
+
+
+@dataclass
+class ReferenceScheduler:
+    """The original pure-Python scheduler: greedy construction with full
+    objective recomputation per candidate + first-improvement local search.
+    O(S^2*F*N*(S+L)) per greedy pass — retained as the correctness and
+    performance reference for ``GreenScheduler``."""
+
     config: SchedulerConfig = field(default_factory=SchedulerConfig)
 
     def plan(
@@ -78,53 +377,12 @@ class GreenScheduler:
         cfg = self.config
         if not cfg.use_green_constraints:
             constraints = ()
-        avoid: Dict[Tuple[str, str, str], float] = {}
-        affinity: Dict[Tuple[str, str], float] = {}
-        for c in constraints:
-            if isinstance(c, AvoidNode):
-                avoid[(c.service, c.flavour, c.node)] = c.weight * c.memory_weight
-            elif isinstance(c, Affinity):
-                affinity[(c.service, c.other)] = c.weight * c.memory_weight
-
-        mean_ci = _mean_ci(infra)
         nodes = list(infra.nodes)
 
-        def flavour_energy(svc: Service, fname: str) -> float:
-            v = computation.get((svc.component_id, fname))
-            if v is not None:
-                return v
-            e = svc.flavour(fname).energy_kwh
-            return e if e is not None else 0.0
-
         def objective(assign: Dict[str, Tuple[str, str]]) -> float:
-            money = 0.0
-            pref = 0.0
-            emissions = 0.0
-            green = 0.0
-            for sid, (fname, nid) in assign.items():
-                svc = app.service(sid)
-                node = infra.node(nid)
-                req = svc.flavour(fname).requirements
-                money += node.cost_per_cpu_hour * req.cpu
-                pref += svc.flavours_order.index(fname)
-                if cfg.emission_weight:
-                    ci = node.carbon if node.carbon is not None else mean_ci
-                    emissions += flavour_energy(svc, fname) * ci
-                g = avoid.get((sid, fname, nid))
-                if g:
-                    green += g
-            for (s, f, z), e in communication.items():
-                if s in assign and z in assign and assign[s][0] == f:
-                    if assign[s][1] != assign[z][1]:
-                        if cfg.emission_weight:
-                            emissions += e * mean_ci
-                        g = affinity.get((s, z))
-                        if g:
-                            green += g
-            return (cfg.money_weight * money
-                    + cfg.pref_weight * pref
-                    + cfg.emission_weight * emissions
-                    + cfg.green_penalty * green)
+            return reference_objective(
+                app, infra, computation, communication, constraints, cfg,
+                assign)
 
         def feasible(svc: Service, fname: str, nid: str,
                      load: Dict[str, Tuple[float, float]]) -> bool:
@@ -146,7 +404,8 @@ class GreenScheduler:
         order = sorted(
             app.services,
             key=lambda s: -max(
-                (flavour_energy(s, f.name) for f in s.flavours), default=0.0
+                (_flavour_energy(s, f.name, computation)
+                 for f in s.flavours), default=0.0
             ),
         )
         assign: Dict[str, Tuple[str, str]] = {}
@@ -160,7 +419,8 @@ class GreenScheduler:
                         continue
                     trial = dict(assign)
                     trial[svc.component_id] = (fname, node.node_id)
-                    cand = (objective(trial), pref_rank, k, fname, node.node_id)
+                    cand = (objective(trial), pref_rank, k, fname,
+                            node.node_id)
                     if best is None or cand < best:
                         best = cand
             if best is None:
@@ -195,7 +455,7 @@ class GreenScheduler:
                         trial = dict(assign)
                         trial[sid] = (fname, node.node_id)
                         c = objective(trial)
-                        if c + 1e-12 < base:
+                        if c + _EPS < base:
                             assign, base, improved = trial, c, True
             if not improved:
                 break

@@ -216,13 +216,17 @@ class GreenPlacement:
 
         out = self.pipeline.run(app, infra, mon)
 
-        infra_e = self.pipeline.gatherer.enrich(infra)
-        comp = self.pipeline.estimator.computation_profiles(mon)
-        comm = self.pipeline.estimator.communication_profiles(mon)
-        plan = self.scheduler.plan(app, infra_e, comp, comm, out.constraints)
+        # The pipeline threads the enriched descriptions and Eq. 1/2
+        # profiles through its output; both schedulers share one dense
+        # lowering, cached across adaptive-loop iterations by the pipeline.
+        app, infra_e = out.app, out.infra
+        comp, comm = out.computation, out.communication
+        lowered = self.pipeline._lowered(out)
+        plan = self.scheduler.plan(app, infra_e, comp, comm,
+                                   out.constraints, lowered=lowered)
 
         baseline = GreenScheduler(SchedulerConfig.baseline()).plan(
-            app, infra_e, comp, comm, out.constraints)
+            app, infra_e, comp, comm, out.constraints, lowered=lowered)
         a_g = {p.service: (p.flavour, p.node) for p in plan.placements}
         a_b = {p.service: (p.flavour, p.node) for p in baseline.placements}
         stats = {

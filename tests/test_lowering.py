@@ -1,0 +1,114 @@
+"""Lowering: object model -> dense tensors (repro.core.lowering)."""
+import numpy as np
+
+from repro.core.lowering import lower, lower_constraints
+from repro.core.types import (
+    Affinity,
+    Application,
+    AvoidNode,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+    ServiceRequirements,
+    Subnet,
+)
+
+
+def _problem():
+    s0 = Service("a", flavours=(
+        Flavour("small", requirements=FlavourRequirements(
+            cpu=1.0, ram_gb=2.0, availability=0.9)),
+        Flavour("large", requirements=FlavourRequirements(cpu=4.0)),
+    ))
+    s1 = Service("b", must_deploy=False,
+                 flavours=(Flavour("f", energy_kwh=7.5),),
+                 requirements=ServiceRequirements(subnet=Subnet.PRIVATE))
+    app = Application("app", (s0, s1))
+    n0 = Node("pub", carbon=100.0, cost_per_cpu_hour=0.5,
+              capabilities=NodeCapabilities(subnet=Subnet.PUBLIC))
+    n1 = Node("priv", capabilities=NodeCapabilities(
+        subnet=Subnet.PRIVATE, cpu=8.0, ram_gb=16.0, availability=0.95))
+    infra = Infrastructure("infra", (n0, n1))
+    comp = {("a", "small"): 3.0}
+    comm = {
+        ("a", "small", "b"): 1.25,
+        ("a", "nosuchflavour", "b"): 9.0,   # dropped: flavour not in order
+        ("ghost", "f", "b"): 9.0,           # dropped: unknown source
+        ("a", "small", "a"): 9.0,           # dropped: self-link
+    }
+    return app, infra, comp, comm
+
+
+def test_shapes_and_indices():
+    app, infra, comp, comm = _problem()
+    low = lower(app, infra, comp, comm)
+    assert (low.S, low.F, low.N) == (2, 2, 2)
+    assert low.service_ids == ("a", "b")
+    assert low.node_ids == ("pub", "priv")
+    assert low.flavour_names == (("small", "large"), ("f",))
+    assert low.valid.tolist() == [[True, True], [True, False]]
+    assert low.must.tolist() == [True, False]
+
+
+def test_energy_profile_and_fallback():
+    app, infra, comp, comm = _problem()
+    low = lower(app, infra, comp, comm)
+    assert low.E[0, 0] == 3.0          # from the computation profile (Eq. 1)
+    assert low.E[0, 1] == 0.0          # no profile, no flavour energy
+    assert low.E[1, 0] == 7.5          # falls back to Flavour.energy_kwh
+    # greedy order: "b" (7.5) before "a" (3.0) — heaviest profile first
+    assert low.order.tolist() == [1, 0]
+
+
+def test_communication_matrix_filters():
+    app, infra, comp, comm = _problem()
+    low = lower(app, infra, comp, comm)
+    assert low.K[0, 0, 1] == 1.25
+    assert low.has_link[0, 0, 1]
+    # everything else (unknown flavour/service, self-link) dropped
+    assert low.K.sum() == 1.25
+    assert low.has_link.sum() == 1
+
+
+def test_carbon_mean_fill_and_masks():
+    app, infra, comp, comm = _problem()
+    low = lower(app, infra, comp, comm)
+    assert low.mean_ci == 100.0        # only "pub" has a CI
+    assert low.ci.tolist() == [100.0, 100.0]
+    # subnet: "a" (ANY) fits both; "b" (PRIVATE) only the private node
+    assert low.compat.tolist() == [[True, True], [False, True]]
+    assert low.avail_req[0, 0] == 0.9
+    assert low.avail_cap.tolist() == [0.999, 0.95]
+
+
+def test_constraint_lowering_overwrite_and_unknowns():
+    app, infra, comp, comm = _problem()
+    low = lower(app, infra, comp, comm)
+    cs = [
+        AvoidNode(service="a", flavour="small", node="pub",
+                  weight=0.4, memory_weight=0.5),
+        AvoidNode(service="a", flavour="small", node="pub", weight=1.0),
+        AvoidNode(service="a", flavour="nope", node="pub", weight=1.0),
+        AvoidNode(service="a", flavour="small", node="ghost", weight=1.0),
+        Affinity(service="a", other="b", weight=0.7, memory_weight=0.9),
+        Affinity(service="ghost", other="b", weight=1.0),
+    ]
+    P, A = lower_constraints(low, cs)
+    assert P.shape == (2, 2, 2) and A.shape == (2, 2)
+    # later constraint with the same key overwrites (dict semantics)
+    assert P[0, 0, 0] == 1.0
+    assert P.sum() == 1.0
+    assert A[0, 1] == 0.7 * 0.9
+    assert A.sum() == A[0, 1]
+
+
+def test_empty_application():
+    app = Application("empty", ())
+    infra = Infrastructure("i", (Node("n"),))
+    low = lower(app, infra, {}, {})
+    assert low.S == 0 and low.N == 1 and low.F == 1
+    P, A = lower_constraints(low, [])
+    assert P.size == 0 and A.size == 0

@@ -1,0 +1,172 @@
+"""Equivalence: array-native GreenScheduler vs the legacy ReferenceScheduler.
+
+Randomized (seeded, deterministic) placement problems across all scheduler
+profiles: the vectorized plan's objective — evaluated by the retained
+legacy ``reference_objective`` — must match or beat the reference plan's,
+with identical feasibility verdicts and skipped-optional-service sets.
+"""
+import random
+
+import pytest
+
+from repro.configs import boutique
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import (
+    GreenScheduler,
+    ReferenceScheduler,
+    SchedulerConfig,
+    reference_objective,
+)
+from repro.core.types import (
+    Affinity,
+    Application,
+    AvoidNode,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+    ServiceRequirements,
+    Subnet,
+)
+
+
+def synth(seed, n_services=8, n_nodes=5, max_flavours=2):
+    rnd = random.Random(seed)
+    services = []
+    for i in range(n_services):
+        fls = tuple(
+            Flavour(f"f{k}", requirements=FlavourRequirements(
+                cpu=rnd.choice([0.5, 1.0, 2.0]),
+                ram_gb=rnd.choice([1.0, 2.0, 4.0]),
+                availability=rnd.choice([0.0, 0.9, 0.999])))
+            for k in range(rnd.randint(1, max_flavours)))
+        services.append(Service(
+            f"s{i}", must_deploy=rnd.random() < 0.8, flavours=fls,
+            requirements=ServiceRequirements(subnet=rnd.choice(list(Subnet)))))
+    nodes = tuple(
+        Node(f"n{j}",
+             carbon=rnd.uniform(10, 600) if rnd.random() < 0.9 else None,
+             cost_per_cpu_hour=rnd.uniform(0, 2),
+             capabilities=NodeCapabilities(
+                 cpu=rnd.choice([2.0, 4.0, 8.0]),
+                 ram_gb=rnd.choice([4.0, 16.0]),
+                 availability=rnd.choice([0.9, 0.99, 0.9999]),
+                 subnet=rnd.choice([Subnet.PUBLIC, Subnet.PRIVATE])))
+        for j in range(n_nodes))
+    app = Application("a", tuple(services))
+    infra = Infrastructure("i", nodes)
+    comp = {(f"s{i}", f.name): rnd.uniform(1, 100)
+            for i in range(n_services)
+            for f in services[i].flavours if rnd.random() < 0.8}
+    comm = {}
+    for _ in range(n_services):
+        i, j = rnd.randrange(n_services), rnd.randrange(n_services)
+        f = rnd.choice(services[i].flavours).name
+        comm[(f"s{i}", f, f"s{j}")] = rnd.uniform(0.1, 50)
+    cs = []
+    for _ in range(6):
+        i, j = rnd.randrange(n_services), rnd.randrange(n_nodes)
+        f = rnd.choice(services[i].flavours).name
+        cs.append(AvoidNode(service=f"s{i}", flavour=f, node=f"n{j}",
+                            weight=rnd.uniform(0.1, 1),
+                            memory_weight=rnd.uniform(0.5, 1)))
+    for _ in range(3):
+        i, j = rnd.randrange(n_services), rnd.randrange(n_services)
+        cs.append(Affinity(service=f"s{i}", other=f"s{j}",
+                           weight=rnd.uniform(0.1, 1)))
+    return app, infra, comp, comm, cs
+
+
+CONFIGS = {
+    "baseline": SchedulerConfig.baseline,
+    "green": SchedulerConfig.green,
+    "oracle": SchedulerConfig.oracle,
+    "mixed": lambda: SchedulerConfig(emission_weight=0.3),
+}
+
+
+def _assert_equivalent(app, infra, comp, comm, cs, cfg):
+    ref = ReferenceScheduler(cfg).plan(app, infra, comp, comm, cs)
+    vec = GreenScheduler(cfg).plan(app, infra, comp, comm, cs)
+    assert vec.feasible == ref.feasible
+    if not ref.feasible:
+        assert vec.notes == ref.notes
+        return ref, vec
+    assert set(vec.skipped_services) == set(ref.skipped_services)
+    a_ref = {p.service: (p.flavour, p.node) for p in ref.placements}
+    a_vec = {p.service: (p.flavour, p.node) for p in vec.placements}
+    j_ref = reference_objective(app, infra, comp, comm, cs, cfg, a_ref)
+    j_vec = reference_objective(app, infra, comp, comm, cs, cfg, a_vec)
+    assert j_vec <= j_ref + 1e-9 * max(1.0, abs(j_ref)), (j_ref, j_vec)
+    return ref, vec
+
+
+@pytest.mark.parametrize("profile", sorted(CONFIGS))
+@pytest.mark.parametrize("seed", range(15))
+def test_randomized_equivalence(seed, profile):
+    app, infra, comp, comm, cs = synth(seed)
+    _assert_equivalent(app, infra, comp, comm, cs, CONFIGS[profile]())
+
+
+def test_infeasible_mandatory_matches_reference():
+    svc = Service("big", flavours=(
+        Flavour("f", requirements=FlavourRequirements(cpu=128.0)),))
+    app = Application("a", (svc,))
+    infra = Infrastructure("i", (
+        Node("n", carbon=10.0, capabilities=NodeCapabilities(cpu=4.0)),))
+    ref, vec = _assert_equivalent(app, infra, {}, {}, (),
+                                  SchedulerConfig())
+    assert not vec.feasible and not ref.feasible
+    assert vec.notes == ("no feasible node for big",)
+
+
+def test_optional_skip_matches_reference():
+    must = Service("must", flavours=(
+        Flavour("f", requirements=FlavourRequirements(cpu=3.0)),))
+    opt = Service("opt", must_deploy=False, flavours=(
+        Flavour("f", requirements=FlavourRequirements(cpu=3.0)),))
+    app = Application("a", (must, opt))
+    infra = Infrastructure("i", (
+        Node("n", carbon=10.0, capabilities=NodeCapabilities(cpu=4.0)),))
+    ref, vec = _assert_equivalent(app, infra, {}, {}, (), SchedulerConfig())
+    assert vec.feasible
+    assert vec.skipped_services == ref.skipped_services == ("opt",)
+    assert {p.service for p in vec.placements} == {"must"}
+
+
+def test_boutique_scenarios_match_or_beat_reference():
+    for n in range(1, 6):
+        app, infra, mon = boutique.scenario(n)
+        out = GreenConstraintPipeline().run(app, infra, mon, use_kb=False)
+        for make in CONFIGS.values():
+            _assert_equivalent(out.app, out.infra, out.computation,
+                               out.communication, out.constraints, make())
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_jax_path_matches_numpy_path(seed):
+    # the jax path runs under x64, so plans are bit-identical to NumPy's
+    app, infra, comp, comm, cs = synth(seed)
+    plans = {}
+    for use_jax in (False, True):
+        cfg = SchedulerConfig.green()
+        cfg.use_jax = use_jax
+        plans[use_jax] = GreenScheduler(cfg).plan(app, infra, comp, comm, cs)
+    assert plans[True].placements == plans[False].placements
+    assert plans[True].skipped_services == plans[False].skipped_services
+
+
+def test_pipeline_plan_threads_lowering():
+    app, infra, mon = boutique.scenario(1)
+    pipe = GreenConstraintPipeline()
+    plan, out = pipe.plan(app, infra, mon, use_kb=False)
+    assert plan.feasible
+    assert out.constraints
+    assert pipe._lowering_cache is not None
+    cached = pipe._lowering_cache[1]
+    # replanning the unchanged window reuses the cached lowering
+    plan2, _ = pipe.plan(app, infra, mon, use_kb=False)
+    assert pipe._lowering_cache[1] is cached
+    assert plan2.placements == plan.placements
