@@ -10,6 +10,7 @@ import time
 def main() -> None:
     quick = "--quick" in sys.argv
     from benchmarks import (
+        continuum_loop,
         explainability,
         fig2_scalability,
         roofline,
@@ -35,6 +36,10 @@ def main() -> None:
          {"sweep": ((50, 25), (100, 50)),
           "vec_only_sweep": ((200, 100),),
           "out_json": None} if quick else {}),
+        ("continuum_loop (adaptive loop, 7-day trace)", continuum_loop.run,
+         # quick mode shortens the trace and must not overwrite the tracked
+         # BENCH_continuum.json with a partial run
+         {"smoke": True, "out_json": None} if quick else {}),
         ("roofline single-pod (§Roofline)", roofline.run, {}),
         ("roofline multi-pod (§Dry-run)", roofline.run, {"multi_pod": True}),
     ]

@@ -1,0 +1,20 @@
+"""Continuum runtime: the batched adaptive-loop subsystem.
+
+Closes the paper's Fig. 1 loop over a time horizon: synthetic carbon /
+workload traces (:mod:`traces`), batched what-if planning over forecast
+ensembles in one jit/vmap call (:mod:`whatif`), and the warm-starting,
+migration-aware discrete-time runtime (:mod:`loop`).
+"""
+from .loop import (          # noqa: F401
+    ContinuumResult,
+    ContinuumRuntime,
+    RuntimeConfig,
+    TickRecord,
+)
+from .traces import (        # noqa: F401
+    REGION_PRESETS,
+    CarbonTrace,
+    RegionProfile,
+    WorkloadTrace,
+)
+from .whatif import WhatIfPlanner, WhatIfResult  # noqa: F401

@@ -1,0 +1,222 @@
+"""ContinuumRuntime: the discrete-time adaptive loop that closes Fig. 1.
+
+Each tick (= one observation window, one hour):
+
+  1. ingest monitoring data (WorkloadTrace) and the grid carbon signal
+     (CarbonTrace) — the Energy Mix Gatherer's ``signal``/``forecast``
+     hooks are re-pointed at the trace's state as of the tick;
+  2. run the GreenConstraintPipeline: profiles are re-estimated, the KB is
+     enriched (Eq. 10 memory weights decay for constraints that stop being
+     regenerated), constraints are re-ranked;
+  3. replan: a forecast ensemble is stacked into a ``ScenarioBatch`` and
+     priced in ONE jit/vmap call (``WhatIfPlanner.evaluate``); the search
+     is WARM-STARTED from the previous assignment (verified against the
+     capacity/subnet masks, reject-and-rebuild on infeasible), reusing the
+     pipeline's lowering cache;
+  4. switch only when it pays: expected savings over the horizon must
+     exceed the migration cost (per moved service) plus a hysteresis
+     threshold — otherwise the incumbent assignment is kept;
+  5. account: actual emissions of the ACTIVE assignment under the tick's
+     true carbon intensities, plus migration emissions when switching.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.lowering import ScenarioBatch, lowered_emissions
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import GreenScheduler, SchedulerConfig
+from repro.core.types import Application, Infrastructure
+
+from .traces import CarbonTrace, WorkloadTrace
+from .whatif import (
+    WhatIfPlanner,
+    assignment_arrays,
+    ensemble_emissions,
+    plan_assignment,
+)
+
+
+@dataclass
+class RuntimeConfig:
+    # Expectation window for what-if pricing.  Deliberately SHORT of a full
+    # day: a 24h mean averages the diurnal cycle away and makes every
+    # placement look time-invariant; a few hours preserves the temporal
+    # carbon variation the loop is meant to exploit.
+    horizon_h: int = 6
+    scenarios: int = 8         # forecast branches per tick (B)
+    replan_every: int = 1      # ticks between replans (1 = every tick)
+    hysteresis_g: float = 10.0  # extra expected saving required to switch
+    migration_g: float = 2.0   # gCO2eq charged per relocated service
+    warm_start: bool = True
+    use_whatif: bool = True    # batched ensemble vs single-forecast plan
+    oracle: bool = False       # price the TRUE future window (upper bound)
+    use_kb: bool = True
+
+
+@dataclass
+class TickRecord:
+    t: int
+    emissions_g: float          # active assignment under the tick's true CI
+    migration_g: float          # migration charge paid this tick
+    migrations: int             # services relocated this tick
+    replanned: bool
+    switched: bool
+    expected_saving_g: float    # forecast saving that justified the switch
+    n_constraints: int
+    warm_start_rejected: bool
+
+
+@dataclass
+class ContinuumResult:
+    ticks: List[TickRecord]
+    final_assignment: Dict[str, Tuple[str, str]]
+
+    @property
+    def total_emissions_g(self) -> float:
+        return sum(r.emissions_g + r.migration_g for r in self.ticks)
+
+    @property
+    def total_migrations(self) -> int:
+        return sum(r.migrations for r in self.ticks)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "ticks": len(self.ticks),
+            "total_emissions_g": self.total_emissions_g,
+            "operational_emissions_g": sum(r.emissions_g for r in self.ticks),
+            "migration_emissions_g": sum(r.migration_g for r in self.ticks),
+            "migrations": self.total_migrations,
+            "switches": sum(r.switched for r in self.ticks),
+            "replans": sum(r.replanned for r in self.ticks),
+        }
+
+
+@dataclass
+class ContinuumRuntime:
+    """Drives the adaptive loop over synchronized carbon/workload traces."""
+
+    app: Application
+    infra: Infrastructure            # nodes carry regions, NOT carbon
+    carbon: CarbonTrace
+    workload: WorkloadTrace
+    config: RuntimeConfig = field(default_factory=RuntimeConfig)
+    pipeline: GreenConstraintPipeline = field(
+        default_factory=GreenConstraintPipeline)
+    planner: WhatIfPlanner = field(default_factory=lambda: WhatIfPlanner(
+        GreenScheduler(SchedulerConfig(emission_weight=1.0))))
+
+    current: Optional[Dict[str, Tuple[str, str]]] = None
+    last_result: Optional[object] = field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        self._node_regions = [
+            n.region or n.node_id for n in self.infra.nodes]
+
+    def tick(self, t: int) -> TickRecord:
+        """One adaptive-loop iteration.  Repoints the pipeline gatherer's
+        signal/forecast hooks at the trace's state as of ``t``; ``run``
+        restores them afterwards (callers driving ``tick`` directly on a
+        shared pipeline should do the same)."""
+        cfg = self.config
+        # 1. monitoring + carbon ingestion: the gatherer reads the signal
+        # as of this tick (window mean -> node.carbon, persistence forecast)
+        self.pipeline.gatherer.signal = self.carbon.history_signal(t)
+        self.pipeline.gatherer.forecast = self.carbon.forecast_signal(
+            t, cfg.horizon_h)
+        mon = self.workload.monitoring(t)
+
+        # 2. constraints + enriched problem (KB decay happens inside)
+        out = self.pipeline.run(self.app, self.infra, mon,
+                                use_kb=cfg.use_kb)
+        low = self.pipeline.lowered_for(out)
+
+        replanned = (t % max(cfg.replan_every, 1) == 0) \
+            or self.current is None
+        switched = False
+        migrations = 0
+        migration_g = 0.0
+        expected_saving = 0.0
+        warm_rejected = False
+
+        if replanned:
+            initial = self.current if cfg.warm_start else None
+            if cfg.oracle:
+                ci_b = self.carbon.future_matrix(
+                    self._node_regions, t, cfg.horizon_h)
+            else:
+                ci_b = self.carbon.scenario_matrix(
+                    self._node_regions, t, cfg.horizon_h,
+                    cfg.scenarios if cfg.use_whatif else 1)
+            scenarios = ScenarioBatch(ci=ci_b)
+            result = self.planner.evaluate(
+                low, scenarios, tuple(out.constraints), initial=initial)
+            self.last_result = result
+            cand_plan = result.best_plan
+            warm_rejected = any(
+                "warm start rejected" in n for n in cand_plan.notes)
+
+            if cand_plan.feasible:
+                cand = plan_assignment(cand_plan)
+                if self.current is None:
+                    self.current, switched = cand, True
+                    migrations = len(cand)  # initial rollout, not charged
+                elif cand != self.current:
+                    moved = self._moved(self.current, cand)
+                    cost = cfg.migration_g * moved
+                    saving = (self._expected_g(low, result, self.current)
+                              - result.best_expected_g) * cfg.horizon_h
+                    expected_saving = saving
+                    # 4. hysteresis switching rule; the oracle skips the
+                    # hysteresis margin (its forecast is exact) but still
+                    # pays — and must justify — migration cost
+                    hyst = 0.0 if cfg.oracle else cfg.hysteresis_g
+                    if saving > cost + hyst:
+                        self.current = cand
+                        switched = True
+                        migrations = moved
+                        migration_g = cost
+
+        # 5. accounting under the TRUE instantaneous carbon intensity
+        emissions = 0.0
+        if self.current:
+            placed, fcur, ncur = assignment_arrays(low, self.current)
+            emissions = lowered_emissions(
+                low, placed, fcur, ncur,
+                ci=self.carbon.now(self._node_regions, t))
+        return TickRecord(
+            t=t, emissions_g=emissions, migration_g=migration_g,
+            migrations=migrations, replanned=replanned, switched=switched,
+            expected_saving_g=expected_saving,
+            n_constraints=len(out.constraints),
+            warm_start_rejected=warm_rejected)
+
+    def run(self, start: int, ticks: int) -> ContinuumResult:
+        gatherer = self.pipeline.gatherer
+        saved = (gatherer.signal, gatherer.forecast)
+        try:
+            records = [self.tick(t) for t in range(start, start + ticks)]
+        finally:
+            # don't leak the trace's closures into later non-continuum
+            # uses of a shared pipeline (e.g. GreenPlacement.place)
+            gatherer.signal, gatherer.forecast = saved
+        return ContinuumResult(ticks=records,
+                               final_assignment=dict(self.current or {}))
+
+    @staticmethod
+    def _moved(old: Dict[str, Tuple[str, str]],
+               new: Dict[str, Tuple[str, str]]) -> int:
+        """Services whose hosting node changes (flavour-only changes are
+        in-place restarts, not migrations)."""
+        return sum(
+            1 for sid, (_, nid) in new.items()
+            if sid not in old or old[sid][1] != nid
+        ) + sum(1 for sid in old if sid not in new)
+
+    def _expected_g(self, low, result, assign) -> float:
+        """Expected per-window emissions of an assignment across the
+        tick's forecast ensemble."""
+        em = ensemble_emissions(
+            low, [assignment_arrays(low, assign)], result.scenarios)
+        return float(em.mean())

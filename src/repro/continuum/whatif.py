@@ -1,0 +1,168 @@
+"""Batched what-if planning over carbon-forecast scenarios.
+
+Stacks B forecast branches into a ``ScenarioBatch`` leading axis and prices
+ALL of them in one jit/vmap call over the move-grid scheduler
+(:meth:`GreenScheduler.plan_batch`), then selects the plan with the lowest
+EXPECTED emissions across the whole ensemble — branch b's plan is optimal
+for forecast b, but the selected plan must hedge against every branch, so
+each candidate is re-priced under all B forecasts (cheap host-side tensor
+work) before the argmin.
+
+``evaluate_sequential`` is the reference path — B separate
+``GreenScheduler.plan`` calls over per-scenario lowerings — kept for the
+equivalence tests and the batched-vs-sequential benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.lowering import LoweredProblem, ScenarioBatch
+from repro.core.scheduler import GreenScheduler, SchedulerConfig
+from repro.core.types import Constraint, DeploymentPlan
+
+
+def assignment_arrays(
+    low: LoweredProblem, assign: Dict[str, Tuple[str, str]]
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Map a service -> (flavour, node) assignment to lowered index arrays
+    ``(placed, fcur, ncur)`` for tensor-side pricing."""
+    S = low.S
+    placed = np.zeros(S, dtype=bool)
+    fcur = np.zeros(S, dtype=np.int64)
+    ncur = np.zeros(S, dtype=np.int64)
+    sidx, nidx = low.service_index(), low.node_index()
+    for sid, (fname, nid) in assign.items():
+        s = sidx[sid]
+        placed[s] = True
+        fcur[s] = low.flavour_names[s].index(fname)
+        ncur[s] = nidx[nid]
+    return placed, fcur, ncur
+
+
+def plan_assignment(plan: DeploymentPlan) -> Dict[str, Tuple[str, str]]:
+    return {p.service: (p.flavour, p.node) for p in plan.placements}
+
+
+@dataclass
+class WhatIfResult:
+    """B branch plans + the cross-ensemble emission matrix."""
+
+    plans: List[DeploymentPlan]
+    scenarios: ScenarioBatch
+    # emissions_g[i, j] — plan of branch i priced under forecast branch j
+    emissions_g: np.ndarray
+    # expected_g[i] — mean over forecast branches (inf for infeasible plans)
+    expected_g: np.ndarray
+    best_index: int
+
+    @property
+    def best_plan(self) -> DeploymentPlan:
+        return self.plans[self.best_index]
+
+    @property
+    def best_expected_g(self) -> float:
+        return float(self.expected_g[self.best_index])
+
+
+def ensemble_emissions(
+    low: LoweredProblem,
+    assignments: List[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+    scenarios: ScenarioBatch,
+) -> np.ndarray:
+    """``[P, B]`` — emissions of each of P assignments under each of B
+    forecast branches, as one broadcasted tensor op (the O(P*B) Python
+    loop over ``lowered_emissions`` dominates what-if wall time otherwise).
+    """
+    ci_b, E_b, _ = scenarios.materialize(low)
+    P, B, S = len(assignments), scenarios.B, low.S
+    if P == 0:
+        return np.zeros((0, B))
+    placed = np.stack([a[0] for a in assignments])        # [P, S]
+    fcur = np.stack([a[1] for a in assignments])
+    ncur = np.stack([a[2] for a in assignments])
+    s_ix = np.arange(S)
+    # computation: E_b[j, s, fcur[p, s]] * ci_b[j, ncur[p, s]]
+    Esel = np.asarray(E_b)[:, s_ix[None, :], fcur]        # [B, P, S]
+    cisel = ci_b[:, ncur]                                 # [B, P, S]
+    comp = (placed[None] * Esel * cisel).sum(-1).T        # [P, B]
+    # communication: plan-dependent energy x branch mean CI
+    Ksel = low.K[s_ix[None, :, None], fcur[:, :, None], s_ix[None, None, :]]
+    linked = low.has_link[
+        s_ix[None, :, None], fcur[:, :, None], s_ix[None, None, :]]
+    pay = (linked & placed[:, :, None] & placed[:, None, :]
+           & (ncur[:, :, None] != ncur[:, None, :]))      # [P, S, S]
+    commE = (Ksel * pay).sum((1, 2))                      # [P]
+    return comp + commE[:, None] * ci_b.mean(axis=1)[None, :]
+
+
+def _score(
+    low: LoweredProblem,
+    plans: List[DeploymentPlan],
+    scenarios: ScenarioBatch,
+) -> WhatIfResult:
+    feas = [i for i, p in enumerate(plans) if p.feasible]
+    em = np.full((len(plans), scenarios.B), np.inf)
+    if feas:
+        em[feas] = ensemble_emissions(
+            low,
+            [assignment_arrays(low, plan_assignment(plans[i]))
+             for i in feas],
+            scenarios)
+    expected = em.mean(axis=1)
+    best = int(np.argmin(expected))
+    return WhatIfResult(plans=plans, scenarios=scenarios, emissions_g=em,
+                        expected_g=expected, best_index=best)
+
+
+@dataclass
+class WhatIfPlanner:
+    """Prices forecast ensembles; carbon-aware scheduler config by default
+    (the green profile's objective is CI-blind — the what-if branches only
+    diverge when the emission term is priced in)."""
+
+    scheduler: GreenScheduler = field(default_factory=lambda: GreenScheduler(
+        SchedulerConfig(emission_weight=1.0)))
+
+    def evaluate(
+        self,
+        low: LoweredProblem,
+        scenarios: ScenarioBatch,
+        constraints: Tuple[Constraint, ...] = (),
+        initial: Optional[Dict[str, Tuple[str, str]]] = None,
+    ) -> WhatIfResult:
+        """One jit/vmap call plans every branch; returns the scored result."""
+        plans = self.scheduler.plan_batch(
+            None, None, {}, {}, constraints,
+            scenarios=scenarios, lowered=low, initial=initial)
+        return self._finish(low, plans, scenarios)
+
+    def evaluate_sequential(
+        self,
+        low: LoweredProblem,
+        scenarios: ScenarioBatch,
+        constraints: Tuple[Constraint, ...] = (),
+        initial: Optional[Dict[str, Tuple[str, str]]] = None,
+    ) -> WhatIfResult:
+        """Reference path: re-plan each branch separately (B ``plan`` calls
+        over per-scenario lowerings) — what the adaptive loop would have to
+        do without the scenario axis."""
+        ci_b, E_b, order_b = scenarios.materialize(low)
+        plans = []
+        for b in range(scenarios.B):
+            # thread the branch's greedy order too: when E varies, the
+            # base lowering's order (keyed on the base profiles) would
+            # diverge from what the batched planner uses
+            low_b = dataclasses.replace(
+                low, ci=ci_b[b], mean_ci=float(ci_b[b].mean()),
+                E=np.asarray(E_b[b]), order=np.asarray(order_b[b]))
+            plans.append(self.scheduler.plan(
+                None, None, {}, {}, constraints,
+                lowered=low_b, initial=initial))
+        return self._finish(low, plans, scenarios)
+
+    def _finish(self, low, plans, scenarios) -> WhatIfResult:
+        return _score(low, plans, scenarios)

@@ -39,7 +39,7 @@ Everything is plain NumPy; the arrays are directly consumable by
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Mapping, Sequence, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -198,6 +198,109 @@ def lower(
         cpu_cap=cpu_cap, ram_cap=ram_cap, avail_cap=avail_cap,
         compat=compat,
     )
+
+
+@dataclass
+class ScenarioBatch:
+    """B what-if branches over one :class:`LoweredProblem`.
+
+    Each branch re-prices the same placement problem under a different
+    forecast: ``ci[b, n]`` replaces the lowered carbon intensities and
+    (optionally) ``E[b, s, f]`` replaces the computation profiles — the two
+    inputs the adaptive loop's forecasts actually vary.  Everything else
+    (requirements, capacities, constraint penalties) is shared, so the
+    whole batch can be priced in one jit/vmap call over the move-grid
+    scheduler (``GreenScheduler.plan_batch``).
+
+    When ``E`` varies, the greedy construction order is recomputed per
+    branch exactly as :func:`lower` does; this assumes ``flavours_order``
+    covers every flavour (the default), since the scenario axis only
+    carries ordered flavour slots.
+    """
+
+    ci: np.ndarray                 # [B, N]
+    E: Optional[np.ndarray] = None  # [B, S, F]; None -> shared low.E
+
+    @property
+    def B(self) -> int:
+        return self.ci.shape[0]
+
+    def materialize(
+        self, low: LoweredProblem
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Dense per-branch ``(ci[B,N], E[B,S,F], order[B,S])`` tensors."""
+        ci = np.asarray(self.ci, dtype=float)
+        if ci.ndim != 2 or ci.shape[1] != low.N:
+            raise ValueError(f"scenario ci must be [B, {low.N}]")
+        if self.E is None:
+            E = np.broadcast_to(low.E, (self.B,) + low.E.shape)
+            order = np.broadcast_to(low.order, (self.B, low.S))
+            return ci, E, order
+        E = np.asarray(self.E, dtype=float)
+        if E.shape != (self.B,) + low.E.shape:
+            raise ValueError(
+                f"scenario E must be [B, {low.S}, {low.F}]")
+        # per-branch greedy order, same key + stable tie-break as lower()
+        max_profile = np.where(low.valid[None], E, -np.inf).max(axis=2)
+        max_profile = np.where(np.isfinite(max_profile), max_profile, 0.0)
+        order = np.argsort(-max_profile, axis=1, kind="stable")
+        return ci, E, order
+
+
+def lowered_emissions(
+    low: LoweredProblem,
+    placed: np.ndarray,
+    fcur: np.ndarray,
+    ncur: np.ndarray,
+    ci: Optional[np.ndarray] = None,
+    E: Optional[np.ndarray] = None,
+) -> float:
+    """True emissions (g) of a tensor-form assignment — the array twin of
+    ``scheduler.plan_emissions`` (computation at the hosting node's CI +
+    cross-node transmission at the mean CI), evaluated against an optional
+    scenario ``ci`` / ``E`` override."""
+    if not placed.any():
+        return 0.0
+    ci = low.ci if ci is None else np.asarray(ci, dtype=float)
+    E = low.E if E is None else np.asarray(E, dtype=float)
+    mean_ci = float(ci.mean()) if ci.size else 0.0
+    sel_E = np.take_along_axis(E, fcur[:, None], axis=1)[:, 0]
+    comp = float((placed * sel_E * ci[ncur]).sum())
+    Ksel = np.take_along_axis(
+        low.K, fcur[:, None, None], axis=1)[:, 0, :]          # [S, S]
+    linked = np.take_along_axis(
+        low.has_link, fcur[:, None, None], axis=1)[:, 0, :]
+    pay = (linked & placed[:, None] & placed[None, :]
+           & (ncur[:, None] != ncur[None, :]))
+    return comp + float((Ksel * pay).sum()) * mean_ci
+
+
+def batched_lowered_emissions(
+    low: LoweredProblem,
+    placed: np.ndarray,   # [B, S] bool
+    fcur: np.ndarray,     # [B, S]
+    ncur: np.ndarray,     # [B, S]
+    ci: np.ndarray,       # [B, N]
+    E: Optional[np.ndarray] = None,  # [B, S, F]
+) -> np.ndarray:
+    """``[B]`` — :func:`lowered_emissions` of branch b's assignment under
+    branch b's ci/E, as one broadcasted op (the per-branch Python loop
+    dominates what-if wall time otherwise)."""
+    B, S = placed.shape
+    if S == 0 or not placed.any():
+        return np.zeros(B)
+    E = np.broadcast_to(low.E, (B,) + low.E.shape) if E is None \
+        else np.asarray(E, dtype=float)
+    Esel = np.take_along_axis(E, fcur[:, :, None], axis=2)[:, :, 0]
+    cisel = np.take_along_axis(ci, ncur, axis=1)              # [B, S]
+    comp = (placed * Esel * cisel).sum(axis=1)
+    s_ix = np.arange(S)
+    Ksel = low.K[s_ix[None, :, None], fcur[:, :, None], s_ix[None, None, :]]
+    linked = low.has_link[
+        s_ix[None, :, None], fcur[:, :, None], s_ix[None, None, :]]
+    pay = (linked & placed[:, :, None] & placed[:, None, :]
+           & (ncur[:, :, None] != ncur[:, None, :]))          # [B, S, S]
+    return comp + (Ksel * pay).sum((1, 2)) * ci.mean(axis=1)
 
 
 def lower_constraints(

@@ -114,6 +114,7 @@ class GreenConstraintPipeline:
         monitoring: MonitoringData,
         scheduler: Optional[GreenScheduler] = None,
         use_kb: bool = True,
+        initial: Optional[Dict[str, Tuple[str, str]]] = None,
     ) -> Tuple[DeploymentPlan, GeneratorOutput]:
         """One full adaptive-loop iteration: constraints + deployment plan.
 
@@ -121,20 +122,22 @@ class GreenConstraintPipeline:
         changes (profiles drift every iteration, so the lowering is keyed
         on the profile values too — the cache saves work when the loop
         replans on an unchanged window, e.g. for multi-config what-ifs).
+        ``initial`` warm-starts the scheduler's local search from a
+        previous assignment (verified, reject-and-rebuild on infeasible).
         """
         scheduler = scheduler or GreenScheduler(SchedulerConfig.green())
         out = self.run(app, infra, monitoring, use_kb=use_kb)
-        lowered = self._lowered(out)
+        lowered = self.lowered_for(out)
         plan = scheduler.plan(
             out.app, out.infra, out.computation, out.communication,
-            out.constraints, lowered=lowered,
+            out.constraints, lowered=lowered, initial=initial,
         )
         return plan, out
 
     _lowering_cache: Optional[Tuple[tuple, LoweredProblem]] = field(
         default=None, repr=False, compare=False)
 
-    def _lowered(self, out: GeneratorOutput) -> LoweredProblem:
+    def lowered_for(self, out: GeneratorOutput) -> LoweredProblem:
         # Application/Infrastructure are frozen dataclasses: value equality
         # covers every lowered input (capacities, costs, subnets, flavour
         # requirements, carbon), so a stale lowering can never be reused.

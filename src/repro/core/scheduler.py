@@ -42,7 +42,14 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 from .library import subnet_compatible
-from .lowering import LoweredProblem, lower, lower_constraints
+from .lowering import (
+    LoweredProblem,
+    ScenarioBatch,
+    batched_lowered_emissions,
+    lower,
+    lower_constraints,
+    lowered_emissions,
+)
 from .types import (
     Affinity,
     Application,
@@ -136,6 +143,172 @@ def _move_deltas(xp, static, W, stat_feas, cpu_req, ram_req, cpu_cap,
     return xp.where(mask, delta, xp.inf)
 
 
+_PLAN_BATCH_CACHE: Dict[str, object] = {}
+
+
+def _batched_planner():
+    """One jit-compiled program planning B scenarios at once.
+
+    Built lazily (jax import deferred) and cached at module level so every
+    adaptive-loop tick with unchanged problem shapes reuses the compiled
+    executable — the problem tensors are ARGUMENTS, not closed-over
+    constants, so drifting profiles/forecasts never retrace.
+
+    Per scenario (vmapped leading axis): greedy construction is a
+    ``lax.scan`` over the service order and local search a
+    ``lax.while_loop`` over the same ``_move_deltas`` move grid as the
+    scalar path — semantics (scoring, row-major tie-breaks, improvement
+    threshold, must-deploy bailout) match ``GreenScheduler.plan`` exactly.
+    """
+    if "fn" in _PLAN_BATCH_CACHE:
+        return _PLAN_BATCH_CACHE["fn"]
+    import jax
+    import jax.numpy as jnp
+
+    def single(ci, E, order, w_placed, w_fcur, w_ncur, w_cpu, w_ram,
+               K, has_link, P, A, stat_feas, cpu_req, ram_req,
+               cpu_cap, ram_cap, must, cost,
+               money_w, pref_w, emission_w, green_pen, max_steps):
+        S, F, N = stat_feas.shape
+        dt = ci.dtype
+        static = (money_w * cost[None, None, :] * cpu_req[:, :, None]
+                  + pref_w * jnp.arange(F, dtype=dt)[None, :, None]
+                  + emission_w * E[:, :, None] * ci[None, None, :]
+                  + green_pen * P)
+        W = (emission_w * ci.mean() * K
+             + green_pen * A[:, None, :] * has_link)
+
+        def greedy_step(state, k):
+            placed, fcur, ncur, cpu_load, ram_load, skipped, infeas, fail_s \
+                = state
+            s = order[k]
+            feas = (stat_feas[s]
+                    & (cpu_load[None, :] + cpu_req[s][:, None]
+                       <= cpu_cap[None, :])
+                    & (ram_load[None, :] + ram_req[s][:, None]
+                       <= ram_cap[None, :]))
+            placed_f = placed.astype(dt)
+            onehot = ((ncur[:, None] == jnp.arange(N)[None, :])
+                      * placed_f[:, None])                      # [S, N]
+            w_out = W[s] * placed_f[None, :]                    # [F, S]
+            colloc = w_out @ onehot                             # [F, N]
+            v_in = jnp.take_along_axis(
+                W[:, :, s], fcur[:, None], axis=1)[:, 0] * placed_f
+            in_colloc = v_in @ onehot                           # [N]
+            score = (static[s] + (w_out.sum(1)[:, None] - colloc)
+                     + (v_in.sum() - in_colloc)[None, :])
+            score = jnp.where(feas, score, jnp.inf)
+            any_feas = feas.any()
+            kk = jnp.argmin(score)   # row-major: flavour rank, node index
+            f, n = kk // N, kk % N
+            fresh = ~infeas & ~placed[s]
+            do = any_feas & fresh
+            placed = placed.at[s].set(placed[s] | do)
+            fcur = fcur.at[s].set(jnp.where(do, f, fcur[s]))
+            ncur = ncur.at[s].set(jnp.where(do, n, ncur[s]))
+            cpu_load = cpu_load.at[n].add(
+                jnp.where(do, cpu_req[s, f], 0.0))
+            ram_load = ram_load.at[n].add(
+                jnp.where(do, ram_req[s, f], 0.0))
+            new_fail = ~any_feas & fresh & must[s]
+            skipped = skipped.at[s].set(
+                skipped[s] | (~any_feas & fresh & ~must[s]))
+            fail_s = jnp.where(new_fail & (fail_s < 0), s, fail_s)
+            infeas = infeas | new_fail
+            return (placed, fcur, ncur, cpu_load, ram_load, skipped,
+                    infeas, fail_s), None
+
+        init = (w_placed, w_fcur, w_ncur, w_cpu, w_ram,
+                jnp.zeros(S, dtype=bool), jnp.asarray(False),
+                jnp.asarray(-1, dtype=order.dtype))
+        (placed, fcur, ncur, cpu_load, ram_load, skipped, infeas, fail_s), _ \
+            = jax.lax.scan(greedy_step, init, jnp.arange(S))
+
+        def ls_cond(st):
+            return ~st[-1] & (st[-2] < max_steps)
+
+        def ls_body(st):
+            placed, fcur, ncur, cpu_load, ram_load, t, done = st
+            delta = _move_deltas(
+                jnp, static, W, stat_feas, cpu_req, ram_req, cpu_cap,
+                ram_cap, placed, fcur, ncur, cpu_load, ram_load)
+            kk = jnp.argmin(delta)
+            improve = delta.reshape(-1)[kk] < -_EPS
+            s = kk // (F * N)
+            f = (kk % (F * N)) // N
+            n = kk % N
+            do = improve & ~done
+            old_f, old_n = fcur[s], ncur[s]
+            cpu_load = cpu_load.at[old_n].add(
+                jnp.where(do, -cpu_req[s, old_f], 0.0))
+            ram_load = ram_load.at[old_n].add(
+                jnp.where(do, -ram_req[s, old_f], 0.0))
+            cpu_load = cpu_load.at[n].add(jnp.where(do, cpu_req[s, f], 0.0))
+            ram_load = ram_load.at[n].add(jnp.where(do, ram_req[s, f], 0.0))
+            fcur = fcur.at[s].set(jnp.where(do, f, fcur[s]))
+            ncur = ncur.at[s].set(jnp.where(do, n, ncur[s]))
+            return (placed, fcur, ncur, cpu_load, ram_load, t + 1,
+                    done | ~improve)
+
+        # infeasible scenarios skip local search (scalar path bails out
+        # before it); under vmap the while body no-ops once done is set.
+        placed, fcur, ncur, cpu_load, ram_load, _, _ = jax.lax.while_loop(
+            ls_cond, ls_body,
+            (placed, fcur, ncur, cpu_load, ram_load, jnp.asarray(0),
+             infeas))
+        return placed, fcur, ncur, skipped, infeas, fail_s
+
+    fn = jax.jit(jax.vmap(single, in_axes=(0, 0, 0) + (None,) * 21))
+    _PLAN_BATCH_CACHE["fn"] = fn
+    return fn
+
+
+def _static_feasibility(low: LoweredProblem) -> np.ndarray:
+    """Load-independent feasibility mask [S, F, N]: real flavour slot,
+    subnet compatibility, availability."""
+    return (low.valid[:, :, None]
+            & low.compat[:, None, :]
+            & (low.avail_cap[None, None, :] >= low.avail_req[:, :, None]))
+
+
+def _warm_start_state(
+    low: LoweredProblem,
+    stat_feas: np.ndarray,
+    initial: Mapping[str, Tuple[str, str]],
+) -> Tuple[Optional[Tuple], Optional[str]]:
+    """Validate an initial assignment against the lowered masks.
+
+    Returns ``((placed, fcur, ncur, cpu_load, ram_load), None)`` when every
+    entry names a known (service, flavour, node), passes the static
+    feasibility mask, and the accumulated loads respect node capacities;
+    otherwise ``(None, reason)`` so the caller can reject-and-rebuild.
+    """
+    S, N = low.S, low.N
+    sidx, nidx = low.service_index(), low.node_index()
+    placed = np.zeros(S, dtype=bool)
+    fcur = np.zeros(S, dtype=np.int64)
+    ncur = np.zeros(S, dtype=np.int64)
+    cpu_load = np.zeros(N)
+    ram_load = np.zeros(N)
+    for sid, (fname, nid) in initial.items():
+        s, n = sidx.get(sid), nidx.get(nid)
+        if s is None or n is None:
+            return None, f"unknown service/node {sid!r} -> {nid!r}"
+        try:
+            f = low.flavour_names[s].index(fname)
+        except ValueError:
+            return None, f"unknown flavour {fname!r} of {sid!r}"
+        if not stat_feas[s, f, n]:
+            return None, f"{sid!r} infeasible on {nid!r} (mask)"
+        placed[s] = True
+        fcur[s], ncur[s] = f, n
+        cpu_load[n] += low.cpu_req[s, f]
+        ram_load[n] += low.ram_req[s, f]
+    if (cpu_load > low.cpu_cap).any() or (ram_load > low.ram_cap).any():
+        return None, "capacity exceeded"
+    return (placed, fcur, ncur, cpu_load, ram_load), None
+
+
 @dataclass
 class GreenScheduler:
     """Array-native greedy + vectorized best-improvement local search."""
@@ -144,13 +317,27 @@ class GreenScheduler:
 
     def plan(
         self,
-        app: Application,
-        infra: Infrastructure,
+        app: Optional[Application],
+        infra: Optional[Infrastructure],
         computation: Mapping[Tuple[str, str], float],
         communication: Mapping[Tuple[str, str, str], float],
         constraints: Sequence[Constraint] = (),
         lowered: Optional[LoweredProblem] = None,
+        initial: Optional[Mapping[str, Tuple[str, str]]] = None,
     ) -> DeploymentPlan:
+        """Plan a deployment; ``initial`` warm-starts the search.
+
+        ``app``/``infra`` may be ``None`` when a cached ``lowered`` problem
+        is supplied (tensor-only adaptive-loop callers).
+
+        A warm start maps service -> (flavour, node), e.g. the previous
+        adaptive-loop assignment.  It is verified against the capacity /
+        subnet / availability masks first: an infeasible warm start is
+        rejected as a whole and the plan is rebuilt greedily from scratch
+        (noted on the returned plan).  A valid warm start skips greedy
+        construction for its services, so replanning cost is dominated by
+        the local-search repair steps.
+        """
         cfg = self.config
         low = lowered if lowered is not None \
             else lower(app, infra, computation, communication)
@@ -168,10 +355,7 @@ class GreenScheduler:
                   + cfg.green_penalty * P)
         W = (cfg.emission_weight * low.mean_ci * low.K
              + cfg.green_penalty * A[:, None, :] * low.has_link)
-        stat_feas = (low.valid[:, :, None]
-                     & low.compat[:, None, :]
-                     & (low.avail_cap[None, None, :]
-                        >= low.avail_req[:, :, None]))
+        stat_feas = _static_feasibility(low)
 
         placed = np.zeros(S, dtype=bool)
         fcur = np.zeros(S, dtype=np.int64)
@@ -179,10 +363,21 @@ class GreenScheduler:
         cpu_load = np.zeros(N)
         ram_load = np.zeros(N)
         skipped: List[str] = []
+        notes: List[str] = []
+
+        if initial is not None:
+            warm, err = _warm_start_state(low, stat_feas, initial)
+            if warm is None:
+                notes.append(
+                    f"warm start rejected ({err}); rebuilt from scratch")
+            else:
+                placed, fcur, ncur, cpu_load, ram_load = warm
 
         # --- greedy construction: heaviest services first; all (f, n)
         # candidates of a service scored in one batched delta evaluation.
         for s in map(int, low.order):
+            if placed[s]:
+                continue
             feas = (stat_feas[s]
                     & (cpu_load[None, :] + low.cpu_req[s][:, None]
                        <= low.cpu_cap[None, :])
@@ -193,7 +388,8 @@ class GreenScheduler:
                     return DeploymentPlan(
                         placements=(),
                         feasible=False,
-                        notes=(f"no feasible node for {low.service_ids[s]}",),
+                        notes=tuple(notes)
+                        + (f"no feasible node for {low.service_ids[s]}",),
                     )
                 skipped.append(low.service_ids[s])
                 continue
@@ -244,14 +440,118 @@ class GreenScheduler:
         placements = tuple(
             Placement(sid, f, n) for sid, (f, n) in sorted(assign.items())
         )
+        # tensor-only callers (a cached lowering, no object model) get the
+        # array twin of plan_emissions — same semantics, lowered inputs
+        total_g = plan_emissions(
+            app, infra, assign, computation, communication
+        ) if app is not None else lowered_emissions(low, placed, fcur, ncur)
         return DeploymentPlan(
             placements=placements,
             skipped_services=tuple(skipped),
-            total_emissions_g=plan_emissions(
-                app, infra, assign, computation, communication
-            ),
+            total_emissions_g=total_g,
             feasible=True,
+            notes=tuple(notes),
         )
+
+    def plan_batch(
+        self,
+        app: Optional[Application],
+        infra: Optional[Infrastructure],
+        computation: Mapping[Tuple[str, str], float],
+        communication: Mapping[Tuple[str, str, str], float],
+        constraints: Sequence[Constraint] = (),
+        scenarios: Optional[ScenarioBatch] = None,
+        lowered: Optional[LoweredProblem] = None,
+        initial: Optional[Mapping[str, Tuple[str, str]]] = None,
+    ) -> List[DeploymentPlan]:
+        """Price B what-if branches of one problem in a single jit call.
+
+        ``scenarios`` stacks per-branch carbon intensities ``ci[B, N]``
+        (and optionally computation profiles ``E[B, S, F]``) into a leading
+        axis; the whole batch — greedy construction (``lax.scan`` over the
+        service order) plus best-improvement local search over the
+        ``[S, F, N]`` move grid (``lax.while_loop``) — runs as ONE
+        jit/vmap-compiled program, instead of B sequential ``plan`` calls.
+
+        The per-branch algorithm is the same as ``plan`` (same scoring
+        tensors, same row-major tie-breaks, same improvement threshold
+        under x64), so each returned plan matches a per-scenario ``plan``
+        call; ``total_emissions_g`` is evaluated under the branch's own
+        ci/E.  ``initial`` warm-starts every branch from one shared
+        assignment with the same verify-or-rebuild rule as ``plan``.
+        """
+        cfg = self.config
+        low = lowered if lowered is not None \
+            else lower(app, infra, computation, communication)
+        if scenarios is None:
+            scenarios = ScenarioBatch(ci=low.ci[None, :])
+        if not cfg.use_green_constraints:
+            constraints = ()
+        P, A = lower_constraints(low, constraints)
+        stat_feas = _static_feasibility(low)
+        ci_b, E_b, order_b = scenarios.materialize(low)
+        S, F, N = low.S, low.F, low.N
+
+        notes: List[str] = []
+        warm = None
+        if initial is not None:
+            warm, err = _warm_start_state(low, stat_feas, initial)
+            if warm is None:
+                notes.append(
+                    f"warm start rejected ({err}); rebuilt from scratch")
+        if warm is None:
+            warm = (np.zeros(S, dtype=bool), np.zeros(S, dtype=np.int64),
+                    np.zeros(S, dtype=np.int64), np.zeros(N), np.zeros(N))
+
+        from jax.experimental import enable_x64
+
+        planner = _batched_planner()
+        # x64 for the same reason as the scalar jax path: keeps the batch
+        # bit-comparable to per-scenario NumPy planning.
+        with enable_x64():
+            out = planner(
+                ci_b, E_b, order_b, *warm,
+                low.K, low.has_link, P, A, stat_feas,
+                low.cpu_req, low.ram_req, low.cpu_cap, low.ram_cap, low.must,
+                low.cost,
+                cfg.money_weight, cfg.pref_weight, cfg.emission_weight,
+                cfg.green_penalty,
+                cfg.local_search_rounds * max(1, S),
+            )
+        placed_b, fcur_b, ncur_b, skipped_b, infeas_b, fail_b = (
+            np.asarray(a) for a in out)
+        em_b = batched_lowered_emissions(
+            low, placed_b, fcur_b, ncur_b, ci=ci_b,
+            E=E_b if scenarios.E is not None else None)
+
+        plans: List[DeploymentPlan] = []
+        for b in range(scenarios.B):
+            if infeas_b[b]:
+                sid = low.service_ids[int(fail_b[b])]
+                plans.append(DeploymentPlan(
+                    placements=(),
+                    feasible=False,
+                    notes=tuple(notes) + (f"no feasible node for {sid}",),
+                ))
+                continue
+            assign = {
+                low.service_ids[s]: (
+                    low.flavour_names[s][int(fcur_b[b, s])],
+                    low.node_ids[int(ncur_b[b, s])])
+                for s in range(S) if placed_b[b, s]
+            }
+            plans.append(DeploymentPlan(
+                placements=tuple(
+                    Placement(sid, f, n)
+                    for sid, (f, n) in sorted(assign.items())),
+                skipped_services=tuple(
+                    low.service_ids[int(s)] for s in order_b[b]
+                    if skipped_b[b, s]),
+                total_emissions_g=float(em_b[b]),
+                feasible=True,
+                notes=tuple(notes),
+            ))
+        return plans
 
     def _delta_fn(self, static, W, stat_feas, low: LoweredProblem):
         """Bind the problem tensors into a move-grid evaluator."""

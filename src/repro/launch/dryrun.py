@@ -23,7 +23,7 @@ import jax
 
 from repro.configs.registry import ARCHS
 from repro.launch import hlo_analysis, hlo_cost
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.launch.plan import build_plan
 from repro.models.config import SHAPES, cell_is_supported
 
@@ -46,11 +46,13 @@ def run_cell(
     plan = build_plan(arch, shape, multi_pod=multi_pod,
                       tuning_overrides=tuning_overrides,
                       optimized=optimized)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = plan.lower()
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         xla_cost = compiled.cost_analysis() or {}
+        if isinstance(xla_cost, (list, tuple)):  # jax 0.4.x: one dict per
+            xla_cost = xla_cost[0] if xla_cost else {}  # executable
         # XLA's cost_analysis counts while bodies ONCE (scanned layers /
         # microbatches would be undercounted ~100x); use the loop-aware
         # HLO cost model instead.

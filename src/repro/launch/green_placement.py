@@ -221,7 +221,7 @@ class GreenPlacement:
         # lowering, cached across adaptive-loop iterations by the pipeline.
         app, infra_e = out.app, out.infra
         comp, comm = out.computation, out.communication
-        lowered = self.pipeline._lowered(out)
+        lowered = self.pipeline.lowered_for(out)
         plan = self.scheduler.plan(app, infra_e, comp, comm,
                                    out.constraints, lowered=lowered)
 
@@ -238,3 +238,70 @@ class GreenPlacement:
             stats["green_g_per_window"]
             / max(stats["baseline_g_per_window"], 1e-12))
         return plan, out, stats
+
+    def run_continuum(
+        self,
+        jobs: Sequence[JobSpec],
+        pods: Sequence[PodSpec],
+        traffic: Sequence[TrafficSpec] = (),
+        *,
+        carbon_trace=None,
+        start: int = 24,
+        ticks: int = 168,
+        runtime_config=None,
+    ):
+        """Drive the TPU fleet through the continuum adaptive loop.
+
+        Same job->service / pod->node mapping as :meth:`place`, but instead
+        of one static placement the :class:`ContinuumRuntime` replans each
+        tick against the pods' regional carbon traces — batched what-if
+        over forecast ensembles, warm-started local search, hysteresis
+        switching.  Returns the :class:`ContinuumResult`.
+        """
+        from repro.continuum import (
+            CarbonTrace, ContinuumRuntime, REGION_PRESETS, RuntimeConfig,
+            WhatIfPlanner, WorkloadTrace,
+        )
+
+        app = build_application(jobs, traffic)
+        # seed flavour energies from the compiled-artifact rooflines so the
+        # workload trace drifts around the REAL per-flavour profiles
+        # instead of a flat cpu-proportional default
+        app = app.with_services([
+            dataclasses.replace(svc, flavours=tuple(
+                fl.with_energy(job_energy_kwh(j.roofline[fl.name],
+                                              j.steps_per_h))
+                for fl in svc.flavours))
+            for j, svc in zip(jobs, app.services)
+        ])
+        infra = build_infrastructure(pods)
+        # a pinned PodSpec.carbon would freeze the Energy Mix Gatherer for
+        # the whole run (enrich skips nodes whose carbon is already set);
+        # in the continuum the TRACE is the carbon authority for every pod
+        infra = infra.with_nodes([
+            dataclasses.replace(n, carbon=None, carbon_forecast=())
+            for n in infra.nodes
+        ])
+        if carbon_trace is None:
+            regions = {p.region for p in pods}
+            missing = regions - set(REGION_PRESETS)
+            if missing:
+                raise ValueError(
+                    f"no carbon trace and no preset for regions {missing}")
+            carbon_trace = CarbonTrace(
+                {r: REGION_PRESETS[r] for r in regions},
+                hours=start + ticks + 24)
+        workload = WorkloadTrace(app, base_kwh_per_cpu=CHIP_IDLE_WATTS
+                                 * CHIPS_PER_POD / 1000.0)
+        # the green profile's objective is CI-blind; what-if branches only
+        # diverge when the emission term is priced, so ensure it is
+        cfg = dataclasses.replace(
+            self.scheduler.config,
+            emission_weight=max(self.scheduler.config.emission_weight, 1.0))
+        runtime = ContinuumRuntime(
+            app, infra, carbon_trace, workload,
+            config=runtime_config or RuntimeConfig(),
+            pipeline=self.pipeline,
+            planner=WhatIfPlanner(GreenScheduler(cfg)),
+        )
+        return runtime.run(start=start, ticks=ticks)

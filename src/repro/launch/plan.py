@@ -71,7 +71,9 @@ class CellPlan:
     opt_cfg: Optional[adamw.OptimizerConfig] = None
 
     def lower(self):
-        jitted = jax.jit(
+        from repro.launch.mesh import jit_sharded
+
+        jitted = jit_sharded(
             self.step_fn,
             in_shardings=self.in_specs,
             out_shardings=self.out_specs,

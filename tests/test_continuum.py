@@ -1,0 +1,267 @@
+"""Continuum runtime: traces, adaptive loop mechanics, KB memory decay."""
+import numpy as np
+import pytest
+
+from repro.continuum import (
+    CarbonTrace,
+    ContinuumRuntime,
+    REGION_PRESETS,
+    RegionProfile,
+    RuntimeConfig,
+    WhatIfPlanner,
+    WorkloadTrace,
+)
+from repro.core.energy import EnergyMixGatherer
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import GreenScheduler, SchedulerConfig
+from repro.core.types import (
+    Application,
+    CommunicationLink,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+)
+
+
+def _app(n_services=6):
+    services = tuple(
+        Service(f"svc{i}", flavours=(
+            Flavour("large", FlavourRequirements(cpu=2.0, ram_gb=4.0)),
+            Flavour("small", FlavourRequirements(cpu=1.0, ram_gb=2.0)),
+        )) for i in range(n_services))
+    links = (CommunicationLink("svc0", "svc1"),)
+    return Application("t", services, links)
+
+
+def _infra(regions=("solar-south", "wind-north", "coal-east"), per=2):
+    nodes = tuple(
+        Node(f"{r}-{k}", region=r, cost_per_cpu_hour=0.5,
+             capabilities=NodeCapabilities(cpu=6.0, ram_gb=24.0))
+        for r in regions for k in range(per))
+    return Infrastructure("t", nodes)
+
+
+def _runtime(app, infra, carbon, workload, config=None, pipeline=None):
+    return ContinuumRuntime(
+        app, infra, carbon, workload,
+        config=config or RuntimeConfig(scenarios=3),
+        pipeline=pipeline or GreenConstraintPipeline(),
+        planner=WhatIfPlanner(
+            GreenScheduler(SchedulerConfig(emission_weight=1.0))))
+
+
+# ---------------------------------------------------------------------------
+# traces
+# ---------------------------------------------------------------------------
+
+
+def test_carbon_trace_deterministic_and_prefix_stable():
+    a = CarbonTrace(REGION_PRESETS, hours=60, seed=5)
+    b = CarbonTrace(REGION_PRESETS, hours=60, seed=5)
+    longer = CarbonTrace(REGION_PRESETS, hours=120, seed=5)
+    for r in REGION_PRESETS:
+        np.testing.assert_array_equal(a.series(r), b.series(r))
+        # a longer trace shares its prefix (independent rng streams)
+        np.testing.assert_array_equal(a.series(r), longer.series(r)[:60])
+        assert (a.series(r) >= 5.0).all()
+
+
+def test_carbon_trace_diurnal_cycle():
+    flat = {"x": RegionProfile(400.0, 150.0, 13.0, 0.0)}
+    tr = CarbonTrace(flat, hours=48)
+    s = tr.series("x")
+    assert s[13] == pytest.approx(250.0)   # trough at the trough hour
+    assert s[1] > s[13] + 200.0            # night is much dirtier
+
+
+def test_signals_feed_energy_mix_gatherer():
+    tr = CarbonTrace(REGION_PRESETS, hours=60, seed=1)
+    gatherer = EnergyMixGatherer(signal=tr.history_signal(40),
+                                 forecast=tr.forecast_signal(40, 6))
+    infra = gatherer.enrich(_infra())
+    for node in infra.nodes:
+        assert node.carbon is not None and node.carbon > 0
+        assert len(node.carbon_forecast) == 6
+        # window mean of the last 24 observed hours
+        expect = np.mean(tr.series(node.region)[40 - 23: 41])
+        assert node.carbon == pytest.approx(expect)
+
+
+def test_scenario_matrix_shape_and_determinism():
+    tr = CarbonTrace(REGION_PRESETS, hours=80, seed=2)
+    regions = ["solar-south", "wind-north", "coal-east"] * 2
+    m1 = tr.scenario_matrix(regions, t=40, horizon=6, B=5)
+    m2 = tr.scenario_matrix(regions, t=40, horizon=6, B=5)
+    np.testing.assert_array_equal(m1, m2)
+    assert m1.shape == (5, 6)
+    # branch 0 is the unperturbed persistence forecast
+    fc = tr.forecast_signal(40, 6)
+    assert m1[0, 0] == pytest.approx(np.mean(fc("solar-south")))
+    assert (m1 >= 5.0).all()
+
+
+def test_workload_trace_deterministic_with_drift():
+    app = _app()
+    wl = WorkloadTrace(app, seed=9, drift_per_h=0.01, noise=0.0)
+    m1, m2 = wl.monitoring(30), wl.monitoring(30)
+    assert m1 == m2
+    keys = {(e.service, e.flavour) for e in m1.energy}
+    assert len(keys) == len(app.services) * 2   # every flavour observed
+    # same hour of day, one day later -> drift shows through
+    e0 = np.mean([e.energy_kwh for e in wl.monitoring(24).energy])
+    e1 = np.mean([e.energy_kwh for e in wl.monitoring(48).energy])
+    assert e1 > e0
+
+
+# ---------------------------------------------------------------------------
+# runtime mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_static_policy_never_migrates_after_rollout():
+    app, infra = _app(), _infra()
+    tr = CarbonTrace(REGION_PRESETS, hours=80, seed=0)
+    wl = WorkloadTrace(app, seed=0)
+    rt = _runtime(app, infra, tr, wl,
+                  config=RuntimeConfig(replan_every=10 ** 9))
+    res = rt.run(start=24, ticks=12)
+    assert res.ticks[0].replanned and res.ticks[0].switched
+    assert all(not r.replanned for r in res.ticks[1:])
+    assert res.summary()["migrations"] == len(res.final_assignment)
+
+
+def test_adaptive_loop_accounting_and_warm_starts():
+    app, infra = _app(), _infra()
+    tr = CarbonTrace(REGION_PRESETS, hours=80, seed=0)
+    wl = WorkloadTrace(app, seed=0)
+    rt = _runtime(app, infra, tr, wl)
+    res = rt.run(start=24, ticks=16)
+    s = res.summary()
+    assert s["ticks"] == 16
+    assert all(r.emissions_g > 0 for r in res.ticks)
+    assert res.total_emissions_g == pytest.approx(
+        sum(r.emissions_g + r.migration_g for r in res.ticks))
+    # warm starts come from the previous (feasible) assignment: never
+    # rejected in a stationary problem
+    assert not any(r.warm_start_rejected for r in res.ticks)
+    # every service stays deployed every tick
+    assert len(res.final_assignment) == len(app.services)
+    # hysteresis: a charged switch must have predicted savings above the
+    # migration cost plus threshold
+    cfg = rt.config
+    for r in res.ticks[1:]:
+        if r.switched and r.migrations:
+            assert r.expected_saving_g > \
+                cfg.migration_g * r.migrations + cfg.hysteresis_g
+
+
+def test_oracle_not_worse_than_static_on_divergent_trace():
+    """With one region ramping clean mid-run, replanning with true
+    knowledge must beat the frozen plan."""
+    regions = {
+        "steady": RegionProfile(300.0, 0.0, 0.0, 0.0),
+        "ramper": RegionProfile(500.0, 0.0, 0.0, 0.0),
+    }
+    tr = CarbonTrace(regions, hours=80)
+    # ramper drops far below steady halfway through
+    tr._series["ramper"][40:] = 60.0
+    app = _app(4)
+    infra = _infra(regions=("steady", "ramper"), per=2)
+    wl = WorkloadTrace(app, seed=1, noise=0.0)
+    static = _runtime(app, infra, tr, wl,
+                      config=RuntimeConfig(replan_every=10 ** 9))
+    oracle = _runtime(app, infra, tr, wl,
+                      config=RuntimeConfig(oracle=True, hysteresis_g=0.0,
+                                           horizon_h=1))
+    rs = static.run(start=24, ticks=30)
+    ro = oracle.run(start=24, ticks=30)
+    assert ro.total_emissions_g < rs.total_emissions_g
+    assert ro.total_migrations > len(app.services)  # it actually moved
+
+
+# ---------------------------------------------------------------------------
+# KB memory-weight decay (Eq. 10) exercised through runtime ticks
+# ---------------------------------------------------------------------------
+
+
+def test_kb_memory_decay_through_runtime_ticks():
+    """An AvoidNode constraint stops being regenerated once its node turns
+    clean: its mu must decay by the enricher's factor each tick, drop out
+    of the retrievable set below ``valid``, and be forgotten below
+    ``forget``."""
+    regions = {
+        "clean": RegionProfile(100.0, 0.0, 0.0, 0.0),
+        "dirty-then-clean": RegionProfile(900.0, 0.0, 0.0, 0.0),
+        "dirty-later": RegionProfile(150.0, 0.0, 0.0, 0.0),
+    }
+    switch_t = 40
+    tr = CarbonTrace(regions, hours=100)
+    tr._series["dirty-then-clean"][switch_t:] = 100.0
+    tr._series["dirty-later"][switch_t:] = 900.0
+
+    app = Application("t", (Service("svc", flavours=(
+        Flavour("f0", FlavourRequirements(cpu=1.0)),)),))
+    infra = _infra(regions=tuple(regions), per=1)
+    wl = WorkloadTrace(app, seed=0, noise=0.0)
+    # alpha=0.5 over 3 candidates -> only the worst node is constrained;
+    # window=1 makes the carbon switch crisp at switch_t
+    pipeline = GreenConstraintPipeline(alpha=0.5)
+    pipeline.gatherer.window = 1
+    rt = _runtime(app, infra, tr, wl, pipeline=pipeline)
+    enricher = pipeline.enricher
+
+    key = ("avoidNode", "svc", "f0", "dirty-then-clean-0")
+    new_key = ("avoidNode", "svc", "f0", "dirty-later-0")
+
+    rt.tick(switch_t - 2)
+    assert key in pipeline.kb.ck and pipeline.kb.ck[key].mu == 1.0
+    rt.tick(switch_t - 1)
+    assert pipeline.kb.ck[key].mu == 1.0  # regenerated -> refreshed
+
+    mus = []
+    dropped_at = None
+    for k, t in enumerate(range(switch_t, switch_t + 10)):
+        rec = rt.tick(t)
+        if key in pipeline.kb.ck:
+            mus.append(pipeline.kb.ck[key].mu)
+            # decayed geometrically, never refreshed again
+            assert pipeline.kb.ck[key].mu == pytest.approx(
+                enricher.decay ** (k + 1))
+            # while still valid, the ranker keeps surfacing it with its
+            # decayed memory weight
+            if pipeline.kb.ck[key].mu >= enricher.valid:
+                assert rec.n_constraints >= 2
+        elif dropped_at is None:
+            dropped_at = k + 1
+    assert mus, "constraint never decayed"
+    assert dropped_at is not None, "constraint never forgotten"
+    # dropped exactly when decay**k falls below the forget threshold
+    expect_drop = next(
+        i for i in range(1, 20) if enricher.decay ** i < enricher.forget)
+    assert dropped_at == expect_drop
+    # the newly-dirty node is constrained with full memory weight
+    assert new_key in pipeline.kb.ck
+    assert pipeline.kb.ck[new_key].mu == 1.0
+
+
+def test_green_placement_run_continuum_smoke():
+    from repro.launch.green_placement import (
+        GreenPlacement, JobSpec, PodSpec, TrafficSpec)
+
+    roof = {"tuned": {"compute_s": 1.0, "memory_s": 2.0,
+                      "collective_s": 0.5},
+            "default": {"compute_s": 1.3, "memory_s": 2.6,
+                        "collective_s": 0.6}}
+    jobs = [JobSpec(f"job{i}", "yi-9b", "train_4k", roofline=roof,
+                    flavours_order=("tuned", "default"), steps_per_h=100.0)
+            for i in range(3)]
+    pods = [PodSpec("pod-ss", "solar-south"),
+            PodSpec("pod-wn", "wind-north")]
+    res = GreenPlacement().run_continuum(
+        jobs, pods, [TrafficSpec("job0", "job1", gb_per_h=20.0)], ticks=6)
+    assert len(res.ticks) == 6
+    assert len(res.final_assignment) == 3
+    assert res.total_emissions_g > 0

@@ -89,9 +89,10 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, sys
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, {src!r})
+from repro.launch.mesh import jit_sharded, make_mesh_from_shape, mesh_context
 from repro.configs.registry import ARCHS
 from repro.models.testing import reduced
 from repro.models.model import cache_schema
@@ -103,8 +104,7 @@ from repro.models.ops import ShardCtx
 from repro.train.steps import make_serve_step, make_train_step
 from repro.optim import adamw
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh_from_shape((4, 2), ("data", "model"))
 results = {{}}
 for name in {archs!r}:
     cfg = reduced(ARCHS[name])
@@ -136,8 +136,8 @@ for name in {archs!r}:
             (8, cfg.enc_len, cfg.d_model), jnp.bfloat16)
         batch_specs["enc_embeds"] = P("data")
     step = make_train_step(cfg, opt_cfg, tuning, ctx)
-    with jax.set_mesh(mesh):
-        lowered = jax.jit(
+    with mesh_context(mesh):
+        lowered = jit_sharded(
             step,
             in_shardings=(specs, opt_specs, batch_specs),
             out_shardings=(specs, opt_specs, P()),
@@ -150,7 +150,7 @@ for name in {archs!r}:
         cache_specs = schema_to_pspecs(cs, rules)
         toks = jax.ShapeDtypeStruct((8, 1), jnp.int32)
         serve = make_serve_step(cfg, CellTuning(), ctx)
-        compiled2 = jax.jit(
+        compiled2 = jit_sharded(
             serve,
             in_shardings=(specs, cache_specs, P("data", None)),
             out_shardings=(P("data", "model"), cache_specs),

@@ -1,0 +1,232 @@
+"""Batched what-if planning: the scenario axis must price bit-identical
+objectives to per-scenario ``GreenScheduler.plan``, and warm starts must be
+verified-then-used or rejected-and-rebuilt."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from test_scheduler_equivalence import synth
+
+from repro.continuum.whatif import (
+    WhatIfPlanner,
+    assignment_arrays,
+    ensemble_emissions,
+    plan_assignment,
+)
+from repro.core.lowering import (
+    ScenarioBatch,
+    lower,
+    lowered_emissions,
+)
+from repro.core.scheduler import (
+    GreenScheduler,
+    SchedulerConfig,
+    reference_objective,
+)
+from repro.core.types import (
+    Flavour,
+    FlavourRequirements,
+    Application,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+    Subnet,
+    ServiceRequirements,
+)
+
+
+def _scenario_infra(infra, ci_row):
+    nodes = tuple(
+        dataclasses.replace(n, carbon=float(ci_row[j]))
+        for j, n in enumerate(infra.nodes))
+    return dataclasses.replace(infra, nodes=nodes)
+
+
+def _ci_batch(low, B, seed):
+    rng = np.random.default_rng(seed)
+    # exactly-representable values keep every float op order-independent,
+    # so "bit-identical" is meaningful across NumPy/XLA reduction orders
+    return rng.integers(64, 40000, size=(B, low.N)) / 64.0
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_batched_prices_bit_identical_objectives(seed):
+    """Acceptance: each batch branch == a per-scenario plan() call."""
+    app, infra, comp, comm, cs = synth(seed)
+    low = lower(app, infra, comp, comm)
+    cfg = SchedulerConfig(emission_weight=1.0)  # ci must matter
+    sched = GreenScheduler(cfg)
+    ci_b = _ci_batch(low, 4, seed)
+    batch = sched.plan_batch(app, infra, comp, comm, cs,
+                             scenarios=ScenarioBatch(ci=ci_b), lowered=low)
+    for b in range(ci_b.shape[0]):
+        infra_b = _scenario_infra(infra, ci_b[b])
+        ref = sched.plan(app, infra_b, comp, comm, cs)
+        assert batch[b].feasible == ref.feasible, (seed, b)
+        if not ref.feasible:
+            continue
+        a_batch = plan_assignment(batch[b])
+        a_ref = plan_assignment(ref)
+        j_batch = reference_objective(
+            app, infra_b, comp, comm, cs, cfg, a_batch)
+        j_ref = reference_objective(
+            app, infra_b, comp, comm, cs, cfg, a_ref)
+        assert j_batch == j_ref, (seed, b, j_batch, j_ref)
+        assert batch[b].skipped_services == ref.skipped_services
+        assert np.isclose(batch[b].total_emissions_g, ref.total_emissions_g)
+
+
+def test_batched_scenario_E_override():
+    """The optional E[b] axis reprices computation profiles per branch."""
+    app, infra, comp, comm, cs = synth(0)
+    low = lower(app, infra, comp, comm)
+    B = 3
+    rng = np.random.default_rng(1)
+    ci_b = _ci_batch(low, B, 1)
+    E_b = np.stack([low.E * (1.0 + 0.5 * b) for b in range(B)])
+    cfg = SchedulerConfig(emission_weight=1.0)
+    sched = GreenScheduler(cfg)
+    batch = sched.plan_batch(
+        app, infra, comp, comm, cs,
+        scenarios=ScenarioBatch(ci=ci_b, E=E_b), lowered=low)
+    for b in range(B):
+        # per-scenario reference: scale the computation map the same way
+        comp_b = {k: v * (1.0 + 0.5 * b) for k, v in comp.items()}
+        infra_b = _scenario_infra(infra, ci_b[b])
+        ref = sched.plan(app, infra_b, comp_b, comm, cs)
+        assert batch[b].feasible == ref.feasible
+        if ref.feasible:
+            assert plan_assignment(batch[b]) == plan_assignment(ref), b
+
+
+def test_whatif_batched_matches_sequential():
+    app, infra, comp, comm, cs = synth(3)
+    low = lower(app, infra, comp, comm)
+    scen = ScenarioBatch(ci=_ci_batch(low, 5, 3))
+    planner = WhatIfPlanner(GreenScheduler(
+        SchedulerConfig(emission_weight=1.0)))
+    rb = planner.evaluate(low, scen, tuple(cs))
+    rs = planner.evaluate_sequential(low, scen, tuple(cs))
+    assert rb.best_index == rs.best_index
+    np.testing.assert_allclose(rb.emissions_g, rs.emissions_g)
+    for pb, ps in zip(rb.plans, rs.plans):
+        assert plan_assignment(pb) == plan_assignment(ps)
+
+
+def test_ensemble_emissions_matches_scalar():
+    app, infra, comp, comm, cs, plan = _feasible_problem()
+    low = lower(app, infra, comp, comm)
+    scen = ScenarioBatch(ci=_ci_batch(low, 4, 2))
+    arrays = assignment_arrays(low, plan_assignment(plan))
+    em = ensemble_emissions(low, [arrays], scen)
+    ci_b, E_b, _ = scen.materialize(low)
+    for j in range(4):
+        np.testing.assert_allclose(
+            em[0, j], lowered_emissions(low, *arrays, ci=ci_b[j], E=E_b[j]))
+
+
+# ---------------------------------------------------------------------------
+# warm starts (satellite: verify-then-use, reject-and-rebuild)
+# ---------------------------------------------------------------------------
+
+
+def _feasible_problem():
+    for seed in range(10):
+        app, infra, comp, comm, cs = synth(seed)
+        plan = GreenScheduler(SchedulerConfig.green()).plan(
+            app, infra, comp, comm, cs)
+        if plan.feasible and len(plan.placements) >= 3:
+            return app, infra, comp, comm, cs, plan
+    raise AssertionError("no feasible synth problem found")
+
+
+def test_warm_start_accepted_reaches_same_plan():
+    app, infra, comp, comm, cs, plan = _feasible_problem()
+    sched = GreenScheduler(SchedulerConfig.green())
+    warm = sched.plan(app, infra, comp, comm, cs,
+                      initial=plan_assignment(plan))
+    assert not any("warm start rejected" in n for n in warm.notes)
+    assert warm.placements == plan.placements
+
+
+def test_warm_start_unknown_node_rejected_and_rebuilt():
+    app, infra, comp, comm, cs, plan = _feasible_problem()
+    init = plan_assignment(plan)
+    sid = next(iter(init))
+    init[sid] = (init[sid][0], "no-such-node")
+    sched = GreenScheduler(SchedulerConfig.green())
+    rebuilt = sched.plan(app, infra, comp, comm, cs, initial=init)
+    assert any("warm start rejected" in n for n in rebuilt.notes)
+    assert rebuilt.placements == plan.placements  # cold rebuild, same plan
+
+
+def test_warm_start_capacity_violation_rejected():
+    """Two services that individually fit a node but not together: a warm
+    start stacking both must be rejected as a whole."""
+    svc = lambda i: Service(f"s{i}", flavours=(
+        Flavour("f0", FlavourRequirements(cpu=2.0, ram_gb=1.0)),))
+    app = Application("a", (svc(0), svc(1)))
+    infra = Infrastructure("i", (
+        Node("n0", carbon=100.0,
+             capabilities=NodeCapabilities(cpu=3.0, ram_gb=8.0)),
+        Node("n1", carbon=100.0,
+             capabilities=NodeCapabilities(cpu=3.0, ram_gb=8.0)),
+    ))
+    comp = {("s0", "f0"): 1.0, ("s1", "f0"): 1.0}
+    sched = GreenScheduler(SchedulerConfig.green())
+    bad = {"s0": ("f0", "n0"), "s1": ("f0", "n0")}
+    plan = sched.plan(app, infra, comp, {}, initial=bad)
+    assert any("capacity exceeded" in n for n in plan.notes)
+    assert plan.feasible
+    nodes = {p.node for p in plan.placements}
+    assert nodes == {"n0", "n1"}  # rebuilt onto separate nodes
+
+
+def test_warm_start_subnet_mask_rejected():
+    """A warm start placing a private service on a public node violates the
+    static mask and is rejected."""
+    app = Application("a", (Service(
+        "s0",
+        flavours=(Flavour("f0", FlavourRequirements(cpu=1.0)),),
+        requirements=ServiceRequirements(subnet=Subnet.PRIVATE)),))
+    pub = Node("pub", carbon=50.0,
+               capabilities=NodeCapabilities(subnet=Subnet.PUBLIC))
+    prv = Node("prv", carbon=400.0,
+               capabilities=NodeCapabilities(subnet=Subnet.PRIVATE))
+    infra = Infrastructure("i", (pub, prv))
+    sched = GreenScheduler(SchedulerConfig.green())
+    plan = sched.plan(app, infra, {("s0", "f0"): 1.0}, {},
+                      initial={"s0": ("f0", "pub")})
+    assert any("warm start rejected" in n for n in plan.notes)
+    assert plan.node_of("s0") == "prv"
+
+
+def test_warm_start_partial_completes_remaining():
+    app, infra, comp, comm, cs, plan = _feasible_problem()
+    init = plan_assignment(plan)
+    sid = sorted(init)[0]
+    partial = {k: v for k, v in init.items() if k != sid}
+    sched = GreenScheduler(SchedulerConfig.green())
+    out = sched.plan(app, infra, comp, comm, cs, initial=partial)
+    assert not any("warm start rejected" in n for n in out.notes)
+    placed = {p.service for p in out.placements}
+    assert sid in placed  # greedy completed the uncovered service
+
+
+def test_plan_batch_shares_warm_start():
+    app, infra, comp, comm, cs, plan = _feasible_problem()
+    low = lower(app, infra, comp, comm)
+    sched = GreenScheduler(SchedulerConfig(emission_weight=1.0))
+    ci_b = _ci_batch(low, 3, 9)
+    init = plan_assignment(plan)
+    batch = sched.plan_batch(app, infra, comp, comm, cs,
+                             scenarios=ScenarioBatch(ci=ci_b), lowered=low,
+                             initial=init)
+    for b in range(3):
+        infra_b = _scenario_infra(infra, ci_b[b])
+        ref = sched.plan(app, infra_b, comp, comm, cs, initial=init)
+        assert batch[b].feasible == ref.feasible
+        if ref.feasible:
+            assert plan_assignment(batch[b]) == plan_assignment(ref), b
