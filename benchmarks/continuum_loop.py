@@ -88,22 +88,21 @@ def time_whatif(app, infra, carbon, workload, start, B, repeats=3):
     pipeline = GreenConstraintPipeline()
     pipeline.gatherer.signal = carbon.history_signal(start)
     out = pipeline.run(app, infra, workload.monitoring(start))
-    low = pipeline.lowered_for(out)
     regions = [n.region or n.node_id for n in infra.nodes]
     scen = ScenarioBatch(ci=carbon.scenario_matrix(regions, start, B=B))
+    problem = pipeline.problem_for(out).with_scenarios(scen)
     planner = _carbon_planner()
-    cs = tuple(out.constraints)
 
-    planner.evaluate(low, scen, cs)  # compile warmup
+    planner.evaluate(problem)  # compile warmup
     t_batched = min(
-        _timed(lambda: planner.evaluate(low, scen, cs))
+        _timed(lambda: planner.evaluate(problem))
         for _ in range(repeats))
     t_seq = min(
-        _timed(lambda: planner.evaluate_sequential(low, scen, cs))
+        _timed(lambda: planner.evaluate_sequential(problem))
         for _ in range(repeats))
     # same ensemble, same plans — selection must agree
-    rb = planner.evaluate(low, scen, cs)
-    rs = planner.evaluate_sequential(low, scen, cs)
+    rb = planner.evaluate(problem)
+    rs = planner.evaluate_sequential(problem)
     assert rb.best_index == rs.best_index
     return {"B": B, "t_batched_s": t_batched, "t_sequential_s": t_seq,
             "speedup": t_seq / max(t_batched, 1e-9)}

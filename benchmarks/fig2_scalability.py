@@ -102,8 +102,7 @@ def run(report=print, sweep=(100, 200, 400, 700, 1000)):
         out = pipe.run(app, infra, mon, use_kb=False)
         t0 = time.perf_counter()
         plan = GreenScheduler(SchedulerConfig.green()).plan(
-            out.app, out.infra, out.computation, out.communication,
-            out.constraints)
+            pipe.problem_for(out)).plan
         dt = time.perf_counter() - t0
         assert plan.feasible
         rows_plan.append((n_c, n_n, dt))

@@ -35,6 +35,7 @@ def main() -> None:
          # overwrite the tracked BENCH_scheduler.json with a partial sweep
          {"sweep": ((50, 25), (100, 50)),
           "vec_only_sweep": ((200, 100),),
+          "sparse_points": ((600, 100),),
           "out_json": None} if quick else {}),
         ("continuum_loop (adaptive loop, 7-day trace)", continuum_loop.run,
          # quick mode shortens the trace and must not overwrite the tracked

@@ -7,6 +7,7 @@ import time
 
 from repro.configs import boutique
 from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import (
     GreenScheduler,
     ReferenceScheduler,
@@ -69,8 +70,8 @@ def run(report=print):
         comp, comm = out.computation, out.communication
         ref = ReferenceScheduler(cfg).plan(app, infra, comp, comm,
                                            out.constraints)
-        vec = GreenScheduler(cfg).plan(app, infra, comp, comm,
-                                       out.constraints)
+        vec = GreenScheduler(cfg).plan(
+            PlacementProblem.from_generator_output(out)).plan
         j = {
             k: reference_objective(
                 app, infra, comp, comm, out.constraints, cfg,

@@ -11,6 +11,7 @@ import time
 
 from repro.configs import boutique
 from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import (
     GreenScheduler,
     ReferenceScheduler,
@@ -38,14 +39,14 @@ def run(report=print):
         app, infra = out.app, out.infra
         comp, comm = out.computation, out.communication
         cs = out.constraints
+        problem = PlacementProblem.from_generator_output(out)
         plans = {
             "baseline": GreenScheduler(SchedulerConfig.baseline()),
             "green": GreenScheduler(SchedulerConfig.green()),
             "oracle": GreenScheduler(SchedulerConfig.oracle()),
         }
         t0 = time.perf_counter()
-        solved = {k: s.plan(app, infra, comp, comm, cs)
-                  for k, s in plans.items()}
+        solved = {k: s.plan(problem).plan for k, s in plans.items()}
         t_vec_total += time.perf_counter() - t0
         ems = {
             k: _plan_emissions(p, app, infra, comp, comm)

@@ -1,20 +1,39 @@
 """Scheduler scalability: legacy object-walking vs array-native core.
 
-Sweeps (S services, N nodes) and times one full `plan()` call (greedy +
-local search) for the retained ``ReferenceScheduler`` and the vectorized
-``GreenScheduler`` on the same synthetic problem and the same config.
-Writes ``BENCH_scheduler.json`` so the perf trajectory is tracked from
-this PR onward; asserts the vectorized plan's objective never exceeds the
-legacy plan's and that the speedup at (S=200, N=100) is at least 10x.
+Sweeps (S services, N nodes) and times one full ``plan(problem)`` call
+(greedy + local search) for the retained ``ReferenceScheduler`` and the
+unified ``GreenScheduler`` on the same synthetic problem and the same
+config.  GreenScheduler timings EXCLUDE the one-time XLA compile (one
+warmup call per shape): the adaptive loop replans the same shapes every
+tick, so steady-state cost is what the trajectory tracks.
 
-The legacy path is O(S^2*F*N*(S+L)) per greedy pass, so the sweep keeps
-``local_search_rounds`` small and caps the legacy side at (200, 100);
-larger vectorized-only points show the array-native scaling headroom.
+Beyond the shared sweep, a sparse-backend frontier section plans an
+S=2000, N=200 problem through ``SparseCommLowering`` — a scale where the
+dense ``[S, F, S]`` communication tensors and the O(S^2*F*N) move-grid
+einsum are reported infeasible to materialize by the auto-selection
+policy (``SPARSE_AUTO_THRESHOLD``), and records what the dense backend
+WOULD have allocated.
+
+Writes ``BENCH_scheduler.json`` so the perf trajectory is tracked
+PR-over-PR; asserts the array-native plan's objective never exceeds the
+legacy plan's, that dense and sparse backends agree at a shared point,
+and that the speedup at (S=200, N=100) is at least 10x.
+
+CI runs ``--smoke --check BENCH_scheduler.json``: a small sweep whose
+measured speedup must stay within --tolerance (default 20%) of the
+committed baseline's at the same point.
+
+  PYTHONPATH=src python -m benchmarks.scheduler_scalability [--smoke]
+      [--check BENCH_scheduler.json] [--tolerance 0.2]
 """
+import argparse
 import json
 import random
+import sys
 import time
 
+from repro.core.lowering import SPARSE_AUTO_THRESHOLD, lower
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import (
     GreenScheduler,
     ReferenceScheduler,
@@ -35,9 +54,18 @@ from repro.core.types import (
 
 OUT_JSON = "BENCH_scheduler.json"
 REQUIRED_SPEEDUP = 10.0          # acceptance floor at (200, 100)
+# Absolute speedup a healthy host shows at the smoke point, regardless of
+# hardware (measured ~1000-2000x on dev machines): the relative >20%
+# check below tracks PR-over-PR drift on comparable hosts, but a pure
+# ratio of interpreter time to XLA time does not transfer across CPU
+# generations — a host that still clears this floor is not failed on the
+# relative check alone.
+SMOKE_SPEEDUP_FLOOR = 200.0
+FLAVOURS = 2
 
 
-def synth(n_services: int, n_nodes: int, seed: int = 0, flavours: int = 2):
+def synth(n_services: int, n_nodes: int, seed: int = 0,
+          flavours: int = FLAVOURS):
     """A dense-ish placement problem: F flavours per service, ring links,
     AvoidNode/Affinity soft constraints."""
     rnd = random.Random(seed)
@@ -82,24 +110,47 @@ def _objective(plan, app, infra, comp, comm, cs, cfg):
     return reference_objective(app, infra, comp, comm, cs, cfg, assign)
 
 
+def _timed_plan(cfg, problem, repeats: int = 1):
+    """Steady-state plan wall time (best of ``repeats``): one warmup call
+    compiles the shape first."""
+    sched = GreenScheduler(cfg)
+    sched.plan(problem)
+    best, result = None, None
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        result = sched.plan(problem)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
+    return best, result.plan
+
+
 def run(report=print, sweep=((50, 25), (100, 50), (200, 100)),
-        vec_only_sweep=((500, 200), (1000, 400)), rounds: int = 2,
-        out_json: str = OUT_JSON):
+        vec_only_sweep=((500, 200), (1000, 400)),
+        sparse_points=((2000, 200),), rounds: int = 2,
+        repeats: int = 3, out_json: str = OUT_JSON):
     cfg = SchedulerConfig.green()
     cfg.local_search_rounds = rounds
     rows = []
     report("# Scheduler wall time: legacy (ReferenceScheduler) vs "
-           "array-native (GreenScheduler)")
+           "array-native (GreenScheduler, post-compile)")
     report(f"{'S':>5} {'N':>5} {'t_ref_s':>9} {'t_vec_s':>9} "
            f"{'speedup':>8} {'J_ref':>12} {'J_vec':>12}")
     for S, N in sweep:
         app, infra, comp, comm, cs = synth(S, N)
-        t0 = time.perf_counter()
-        ref = ReferenceScheduler(cfg).plan(app, infra, comp, comm, cs)
-        t_ref = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        vec = GreenScheduler(cfg).plan(app, infra, comp, comm, cs)
-        t_vec = time.perf_counter() - t0
+        t_ref, ref, spent = None, None, 0.0
+        for r in range(max(repeats, 1)):
+            t0 = time.perf_counter()
+            ref = ReferenceScheduler(cfg).plan(app, infra, comp, comm, cs)
+            dt = time.perf_counter() - t0
+            t_ref = dt if t_ref is None else min(t_ref, dt)
+            spent += dt
+            # the legacy side is interpreter-bound and fairly stable: cap
+            # the CUMULATIVE time spent tightening it, only the fast jit
+            # side needs full best-of-N to beat dispatch jitter
+            if spent > 60.0:
+                break
+        problem = PlacementProblem.build(app, infra, comp, comm, cs)
+        t_vec, vec = _timed_plan(cfg, problem, repeats=repeats)
         j_ref = _objective(ref, app, infra, comp, comm, cs, cfg)
         j_vec = _objective(vec, app, infra, comp, comm, cs, cfg)
         assert vec.feasible == ref.feasible
@@ -112,16 +163,73 @@ def run(report=print, sweep=((50, 25), (100, 50), (200, 100)),
                f"{speedup:>7.1f}x {j_ref:>12.3f} {j_vec:>12.3f}")
 
     vec_rows = []
-    report("\n# Array-native only (legacy intractable at this scale)")
-    report(f"{'S':>5} {'N':>5} {'t_vec_s':>9}")
+    if vec_only_sweep:
+        report("\n# Array-native only (legacy intractable at this scale)")
+        report(f"{'S':>5} {'N':>5} {'t_vec_s':>9}")
     for S, N in vec_only_sweep:
         app, infra, comp, comm, cs = synth(S, N)
-        t0 = time.perf_counter()
-        plan = GreenScheduler(cfg).plan(app, infra, comp, comm, cs)
-        t_vec = time.perf_counter() - t0
+        problem = PlacementProblem.build(app, infra, comp, comm, cs)
+        # single-shot: these rows are informational headroom, not gated
+        t_vec, plan = _timed_plan(cfg, problem, repeats=1)
         assert plan.feasible
-        vec_rows.append({"S": S, "N": N, "t_vec_s": t_vec})
+        vec_rows.append({"S": S, "N": N, "t_vec_s": t_vec,
+                         "backend": problem.lowering.comm.kind})
         report(f"{S:>5} {N:>5} {t_vec:>9.3f}")
+
+    # dense vs sparse backends must agree where both are materializable
+    S, N = sweep[0]
+    app, infra, comp, comm, cs = synth(S, N)
+    p_d = PlacementProblem.build(app, infra, comp, comm, cs,
+                                 backend="dense")
+    p_s = PlacementProblem.build(app, infra, comp, comm, cs,
+                                 backend="sparse")
+    plan_d = GreenScheduler(cfg).plan(p_d).plan
+    plan_s = GreenScheduler(cfg).plan(p_s).plan
+    j_d = _objective(plan_d, app, infra, comp, comm, cs, cfg)
+    j_s = _objective(plan_s, app, infra, comp, comm, cs, cfg)
+    assert abs(j_d - j_s) <= 1e-9 * max(1.0, abs(j_d)), (j_d, j_s)
+    report(f"\n# backend parity at ({S}, {N}): "
+           f"dense J={j_d:.3f} == sparse J={j_s:.3f}")
+
+    sparse_rows = []
+    if sparse_points:
+        report("\n# Sparse-comm backend (COO edge list; see dense_reported "
+               "per row for whether dense was materializable)")
+        report(f"{'S':>5} {'N':>5} {'links':>7} {'t_plan_s':>9} "
+               f"{'dense_K_GB':>11}")
+    for S, N in sparse_points:
+        app, infra, comp, comm, cs = synth(S, N)
+        dense_elems = S * FLAVOURS * S
+        low = lower(app, infra, comp, comm, backend="sparse")
+        if dense_elems > SPARSE_AUTO_THRESHOLD:
+            auto = lower(app, infra, comp, comm, backend="auto")
+            assert auto.comm.kind == "sparse", \
+                (S, "auto-selection must pick sparse past the threshold")
+        problem = PlacementProblem.build(app, infra, comp, comm, cs,
+                                         lowered=low)
+        t_plan, plan = _timed_plan(cfg, problem, repeats=1)
+        assert plan.feasible
+        dense_gb = dense_elems * 17 / 1e9  # K + derived W (f64) + has_link
+        if dense_elems > SPARSE_AUTO_THRESHOLD:
+            dense_reported = (
+                f"infeasible to materialize: S*F*S = {dense_elems:.2e} "
+                f"elements per [S,F,S] tensor > auto threshold "
+                f"{SPARSE_AUTO_THRESHOLD:.2e} (K/W/has_link x B scenario "
+                f"branches, plus the O(S^2*F*N) move-grid einsum)")
+        else:
+            dense_reported = (
+                f"materializable at this size (S*F*S = {dense_elems:.2e} "
+                f"<= threshold {SPARSE_AUTO_THRESHOLD:.2e}); point "
+                f"exercises the sparse backend only")
+        sparse_rows.append({
+            "S": S, "N": N, "backend": "sparse",
+            "n_links": low.comm.n_links, "t_plan_s": t_plan,
+            "dense_K_elements": dense_elems,
+            "dense_tensors_gb_est": dense_gb,
+            "dense_reported": dense_reported,
+        })
+        report(f"{S:>5} {N:>5} {low.comm.n_links:>7} {t_plan:>9.3f} "
+               f"{dense_gb:>11.2f}")
 
     top = max(rows, key=lambda r: (r["S"], r["N"]))
     report(f"\n# speedup at S={top['S']}, N={top['N']}: "
@@ -134,8 +242,10 @@ def run(report=print, sweep=((50, 25), (100, 50), (200, 100)),
                f"(floor {REQUIRED_SPEEDUP:.0f}x)")
         assert gate[0]["speedup"] >= REQUIRED_SPEEDUP, gate[0]
 
-    out = {"config": {"local_search_rounds": rounds, "profile": "green"},
-           "old_vs_vectorized": rows, "vectorized_only": vec_rows}
+    out = {"config": {"local_search_rounds": rounds, "profile": "green",
+                      "timing": "post-compile (one warmup per shape)"},
+           "old_vs_vectorized": rows, "vectorized_only": vec_rows,
+           "sparse_backend": sparse_rows}
     if out_json:
         with open(out_json, "w") as fh:
             json.dump(out, fh, indent=2)
@@ -143,5 +253,63 @@ def run(report=print, sweep=((50, 25), (100, 50), (200, 100)),
     return out
 
 
+def check_regression(out, baseline_path, tolerance=0.2, report=print):
+    """Gate: the measured legacy-vs-array-native speedup must stay within
+    ``tolerance`` of the committed baseline at every shared sweep point
+    (speedup is a ratio of two runs on the SAME host, so it transfers
+    across machines far better than absolute wall time)."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    base_rows = {(r["S"], r["N"]): r for r in base.get("old_vs_vectorized",
+                                                       [])}
+    ok = True
+    for r in out["old_vs_vectorized"]:
+        b = base_rows.get((r["S"], r["N"]))
+        if b is None:
+            continue
+        # plan quality first: the planner is deterministic, so the
+        # objective at a committed sweep point must never regress at all
+        j_ok = r["J_vec"] <= b["J_vec"] + 1e-9 * max(1.0, abs(b["J_vec"]))
+        ratio = r["speedup"] / max(b["speedup"], 1e-9)
+        # perf: >tolerance below the committed baseline AND below the
+        # host-independent floor — a slower-but-healthy runner passes
+        perf_ok = (ratio >= 1.0 - tolerance
+                   or r["speedup"] >= SMOKE_SPEEDUP_FLOOR)
+        verdict = "ok" if (j_ok and perf_ok) else "REGRESSED"
+        report(f"# check ({r['S']}, {r['N']}): speedup {r['speedup']:.1f}x "
+               f"vs baseline {b['speedup']:.1f}x -> {ratio:.2f}, "
+               f"J_vec {r['J_vec']:.3f} vs {b['J_vec']:.3f} [{verdict}]")
+        ok &= j_ok and perf_ok
+    if ok:
+        report(f"# regression gate passed (tolerance {tolerance:.0%})")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sweep for CI; does not overwrite the "
+                         "tracked BENCH json")
+    ap.add_argument("--check", default=None, metavar="BASELINE_JSON",
+                    help="fail if speedup regresses vs this committed "
+                         "baseline by more than --tolerance")
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        # (100, 50) with best-of-5: at (50, 25) the array-native plan is
+        # ~2 ms and dispatch jitter swings the speedup ratio by 2x; at
+        # (100, 50) the ~15 ms plan is stable to a few percent while the
+        # legacy side still finishes in ~20 s
+        out = run(sweep=((100, 50),), vec_only_sweep=(),
+                  sparse_points=((600, 100),), repeats=5,
+                  out_json=args.out)
+    else:
+        out = run(out_json=args.out if args.out else OUT_JSON)
+    if args.check and not check_regression(out, args.check,
+                                           tolerance=args.tolerance):
+        sys.exit(1)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -13,7 +13,6 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import boutique
-from repro.core.energy import EnergyEstimator, EnergyMixGatherer
 from repro.core.pipeline import GreenConstraintPipeline
 from repro.core.scheduler import GreenScheduler, SchedulerConfig, plan_emissions
 
@@ -34,16 +33,15 @@ def main():
     print("\n=== Explainability Report (first entry) ===")
     print(out.report.entries[0])
 
-    est = EnergyEstimator()
-    infra_e = EnergyMixGatherer().enrich(infra)
-    comp = est.computation_profiles(mon)
-    comm = est.communication_profiles(mon)
-    green = GreenScheduler(SchedulerConfig.green()).plan(
-        app, infra_e, comp, comm, out.constraints)
-    base = GreenScheduler(SchedulerConfig.baseline()).plan(
-        app, infra_e, comp, comm, out.constraints)
-    e_g = emissions_of(green, app, infra_e, comp, comm)
-    e_b = emissions_of(base, app, infra_e, comp, comm)
+    # one PlacementProblem per iteration — the single planner input; both
+    # scheduler profiles share it (and its cached lowering)
+    problem = pipe.problem_for(out)
+    app_e, infra_e = out.app, out.infra
+    comp, comm = out.computation, out.communication
+    green = GreenScheduler(SchedulerConfig.green()).plan(problem).plan
+    base = GreenScheduler(SchedulerConfig.baseline()).plan(problem).plan
+    e_g = emissions_of(green, app_e, infra_e, comp, comm)
+    e_b = emissions_of(base, app_e, infra_e, comp, comm)
     print("\n=== Deployment plan (green) ===")
     for p in green.placements:
         print(f"  {p.service:<16} [{p.flavour:<6}] -> {p.node}")

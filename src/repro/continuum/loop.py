@@ -7,17 +7,24 @@ Each tick (= one observation window, one hour):
      hooks are re-pointed at the trace's state as of the tick;
   2. run the GreenConstraintPipeline: profiles are re-estimated, the KB is
      enriched (Eq. 10 memory weights decay for constraints that stop being
-     regenerated), constraints are re-ranked;
-  3. replan: a forecast ensemble is stacked into a ``ScenarioBatch`` and
-     priced in ONE jit/vmap call (``WhatIfPlanner.evaluate``); the search
-     is WARM-STARTED from the previous assignment (verified against the
-     capacity/subnet masks, reject-and-rebuild on infeasible), reusing the
-     pipeline's lowering cache;
+     regenerated), constraints are re-ranked, and the output is folded
+     into ONE :class:`~repro.core.problem.PlacementProblem` (the lowering
+     cached across ticks by the pipeline);
+  3. replan: a forecast ensemble is stacked onto the problem as a
+     ``ScenarioBatch`` and priced in ONE jit/vmap call
+     (``WhatIfPlanner.evaluate``); the search is WARM-STARTED from the
+     previous assignment (verified against the capacity/subnet masks,
+     reject-and-rebuild on infeasible);
   4. switch only when it pays: expected savings over the horizon must
-     exceed the migration cost (per moved service) plus a hysteresis
-     threshold — otherwise the incumbent assignment is kept;
+     exceed the switching cost — migration cost per relocated service
+     PLUS an in-place-restart cost per flavour-only change (damping: a
+     flavour flip restarts the service even when it stays on its node, so
+     near-tied flavours must justify the restart instead of oscillating
+     tick-to-tick) — plus a hysteresis threshold; otherwise the incumbent
+     assignment is kept;
   5. account: actual emissions of the ACTIVE assignment under the tick's
-     true carbon intensities, plus migration emissions when switching.
+     true carbon intensities, plus migration/restart emissions when
+     switching.
 """
 from __future__ import annotations
 
@@ -49,6 +56,10 @@ class RuntimeConfig:
     replan_every: int = 1      # ticks between replans (1 = every tick)
     hysteresis_g: float = 10.0  # extra expected saving required to switch
     migration_g: float = 2.0   # gCO2eq charged per relocated service
+    # gCO2eq charged per flavour-only change (in-place restart).  The
+    # migration model treats flavour flips on an unchanged node as free
+    # moves, so without this near-tied flavours oscillate tick-to-tick.
+    restart_g: float = 0.5
     warm_start: bool = True
     use_whatif: bool = True    # batched ensemble vs single-forecast plan
     oracle: bool = False       # price the TRUE future window (upper bound)
@@ -59,13 +70,14 @@ class RuntimeConfig:
 class TickRecord:
     t: int
     emissions_g: float          # active assignment under the tick's true CI
-    migration_g: float          # migration charge paid this tick
+    migration_g: float          # migration + restart charge paid this tick
     migrations: int             # services relocated this tick
     replanned: bool
     switched: bool
     expected_saving_g: float    # forecast saving that justified the switch
     n_constraints: int
     warm_start_rejected: bool
+    restarts: int = 0           # flavour-only (in-place) changes this tick
 
 
 @dataclass
@@ -88,6 +100,7 @@ class ContinuumResult:
             "operational_emissions_g": sum(r.emissions_g for r in self.ticks),
             "migration_emissions_g": sum(r.migration_g for r in self.ticks),
             "migrations": self.total_migrations,
+            "restarts": sum(r.restarts for r in self.ticks),
             "switches": sum(r.switched for r in self.ticks),
             "replans": sum(r.replanned for r in self.ticks),
         }
@@ -127,21 +140,23 @@ class ContinuumRuntime:
             t, cfg.horizon_h)
         mon = self.workload.monitoring(t)
 
-        # 2. constraints + enriched problem (KB decay happens inside)
+        # 2. constraints + enriched problem (KB decay happens inside); one
+        # PlacementProblem per tick, lowering cached by the pipeline
         out = self.pipeline.run(self.app, self.infra, mon,
                                 use_kb=cfg.use_kb)
-        low = self.pipeline.lowered_for(out)
+        problem = self.pipeline.problem_for(out)
+        low = problem.lowering
 
         replanned = (t % max(cfg.replan_every, 1) == 0) \
             or self.current is None
         switched = False
         migrations = 0
+        restarts = 0
         migration_g = 0.0
         expected_saving = 0.0
         warm_rejected = False
 
         if replanned:
-            initial = self.current if cfg.warm_start else None
             if cfg.oracle:
                 ci_b = self.carbon.future_matrix(
                     self._node_regions, t, cfg.horizon_h)
@@ -149,9 +164,10 @@ class ContinuumRuntime:
                 ci_b = self.carbon.scenario_matrix(
                     self._node_regions, t, cfg.horizon_h,
                     cfg.scenarios if cfg.use_whatif else 1)
-            scenarios = ScenarioBatch(ci=ci_b)
-            result = self.planner.evaluate(
-                low, scenarios, tuple(out.constraints), initial=initial)
+            tick_problem = problem.with_scenarios(ScenarioBatch(ci=ci_b))
+            if cfg.warm_start and self.current is not None:
+                tick_problem = tick_problem.with_warm_start(self.current)
+            result = self.planner.evaluate(tick_problem)
             self.last_result = result
             cand_plan = result.best_plan
             warm_rejected = any(
@@ -164,18 +180,20 @@ class ContinuumRuntime:
                     migrations = len(cand)  # initial rollout, not charged
                 elif cand != self.current:
                     moved = self._moved(self.current, cand)
-                    cost = cfg.migration_g * moved
+                    flapped = self._flapped(self.current, cand)
+                    cost = cfg.migration_g * moved + cfg.restart_g * flapped
                     saving = (self._expected_g(low, result, self.current)
                               - result.best_expected_g) * cfg.horizon_h
                     expected_saving = saving
                     # 4. hysteresis switching rule; the oracle skips the
                     # hysteresis margin (its forecast is exact) but still
-                    # pays — and must justify — migration cost
+                    # pays — and must justify — migration/restart cost
                     hyst = 0.0 if cfg.oracle else cfg.hysteresis_g
                     if saving > cost + hyst:
                         self.current = cand
                         switched = True
                         migrations = moved
+                        restarts = flapped
                         migration_g = cost
 
         # 5. accounting under the TRUE instantaneous carbon intensity
@@ -190,7 +208,8 @@ class ContinuumRuntime:
             migrations=migrations, replanned=replanned, switched=switched,
             expected_saving_g=expected_saving,
             n_constraints=len(out.constraints),
-            warm_start_rejected=warm_rejected)
+            warm_start_rejected=warm_rejected,
+            restarts=restarts)
 
     def run(self, start: int, ticks: int) -> ContinuumResult:
         gatherer = self.pipeline.gatherer
@@ -208,11 +227,22 @@ class ContinuumRuntime:
     def _moved(old: Dict[str, Tuple[str, str]],
                new: Dict[str, Tuple[str, str]]) -> int:
         """Services whose hosting node changes (flavour-only changes are
-        in-place restarts, not migrations)."""
+        in-place restarts, priced separately by ``_flapped``)."""
         return sum(
             1 for sid, (_, nid) in new.items()
             if sid not in old or old[sid][1] != nid
         ) + sum(1 for sid in old if sid not in new)
+
+    @staticmethod
+    def _flapped(old: Dict[str, Tuple[str, str]],
+                 new: Dict[str, Tuple[str, str]]) -> int:
+        """Services that stay on their node but change flavour — in-place
+        restarts, charged ``restart_g`` each so near-tied flavours don't
+        oscillate for free."""
+        return sum(
+            1 for sid, (fl, nid) in new.items()
+            if sid in old and old[sid][1] == nid and old[sid][0] != fl
+        )
 
     def _expected_g(self, low, result, assign) -> float:
         """Expected per-window emissions of an assignment across the

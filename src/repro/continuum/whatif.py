@@ -1,26 +1,29 @@
 """Batched what-if planning over carbon-forecast scenarios.
 
-Stacks B forecast branches into a ``ScenarioBatch`` leading axis and prices
-ALL of them in one jit/vmap call over the move-grid scheduler
-(:meth:`GreenScheduler.plan_batch`), then selects the plan with the lowest
+Stacks B forecast branches into a ``ScenarioBatch`` on a
+:class:`~repro.core.problem.PlacementProblem` and prices ALL of them in one
+jit/vmap call through the single scheduler entrypoint
+(``GreenScheduler.plan(problem)``), then selects the plan with the lowest
 EXPECTED emissions across the whole ensemble — branch b's plan is optimal
 for forecast b, but the selected plan must hedge against every branch, so
 each candidate is re-priced under all B forecasts (cheap host-side tensor
 work) before the argmin.
 
-``evaluate_sequential`` is the reference path — B separate
-``GreenScheduler.plan`` calls over per-scenario lowerings — kept for the
-equivalence tests and the batched-vs-sequential benchmark.
+``evaluate_sequential`` is the reference path — B separate single-branch
+``plan`` calls over per-scenario lowerings — kept for the equivalence
+tests and the batched-vs-sequential benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.lowering import LoweredProblem, ScenarioBatch
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import GreenScheduler, SchedulerConfig
 from repro.core.types import Constraint, DeploymentPlan
 
@@ -89,13 +92,9 @@ def ensemble_emissions(
     Esel = np.asarray(E_b)[:, s_ix[None, :], fcur]        # [B, P, S]
     cisel = ci_b[:, ncur]                                 # [B, P, S]
     comp = (placed[None] * Esel * cisel).sum(-1).T        # [P, B]
-    # communication: plan-dependent energy x branch mean CI
-    Ksel = low.K[s_ix[None, :, None], fcur[:, :, None], s_ix[None, None, :]]
-    linked = low.has_link[
-        s_ix[None, :, None], fcur[:, :, None], s_ix[None, None, :]]
-    pay = (linked & placed[:, :, None] & placed[:, None, :]
-           & (ncur[:, :, None] != ncur[:, None, :]))      # [P, S, S]
-    commE = (Ksel * pay).sum((1, 2))                      # [P]
+    # communication: plan-dependent energy x branch mean CI — the pairwise
+    # term comes from the lowering's comm backend (dense or COO)
+    commE = low.comm.pairwise_energy(placed, fcur, ncur)  # [P]
     return comp + commE[:, None] * ci_b.mean(axis=1)[None, :]
 
 
@@ -103,19 +102,42 @@ def _score(
     low: LoweredProblem,
     plans: List[DeploymentPlan],
     scenarios: ScenarioBatch,
+    arrays: Optional[Sequence[Tuple]] = None,
 ) -> WhatIfResult:
     feas = [i for i, p in enumerate(plans) if p.feasible]
     em = np.full((len(plans), scenarios.B), np.inf)
     if feas:
+        if arrays is None:
+            arrays = [assignment_arrays(low, plan_assignment(p))
+                      for p in plans]
         em[feas] = ensemble_emissions(
-            low,
-            [assignment_arrays(low, plan_assignment(plans[i]))
-             for i in feas],
-            scenarios)
+            low, [arrays[i] for i in feas], scenarios)
     expected = em.mean(axis=1)
     best = int(np.argmin(expected))
     return WhatIfResult(plans=plans, scenarios=scenarios, emissions_g=em,
                         expected_g=expected, best_index=best)
+
+
+def _coerce_problem(problem, scenarios, constraints, initial,
+                    stacklevel: int = 3) -> PlacementProblem:
+    """Accept either a PlacementProblem (new API; keyword overrides are
+    folded in) or a bare LoweredProblem (legacy, deprecated)."""
+    if isinstance(problem, LoweredProblem):
+        warnings.warn(
+            "WhatIfPlanner.evaluate(LoweredProblem, scenarios, ...) is "
+            "deprecated; pass a PlacementProblem "
+            "(problem.with_scenarios(batch)) instead",
+            DeprecationWarning, stacklevel=stacklevel)
+        return PlacementProblem(
+            lowering=problem, constraints=tuple(constraints or ()),
+            scenarios=scenarios, initial=initial)
+    if scenarios is not None:
+        problem = problem.with_scenarios(scenarios)
+    if constraints is not None:
+        problem = problem.with_constraints(constraints)
+    if initial is not None:
+        problem = problem.with_warm_start(initial)
+    return problem
 
 
 @dataclass
@@ -129,40 +151,52 @@ class WhatIfPlanner:
 
     def evaluate(
         self,
-        low: LoweredProblem,
-        scenarios: ScenarioBatch,
-        constraints: Tuple[Constraint, ...] = (),
+        problem: PlacementProblem,
+        scenarios: Optional[ScenarioBatch] = None,
+        constraints: Optional[Sequence[Constraint]] = None,
         initial: Optional[Dict[str, Tuple[str, str]]] = None,
     ) -> WhatIfResult:
-        """One jit/vmap call plans every branch; returns the scored result."""
-        plans = self.scheduler.plan_batch(
-            None, None, {}, {}, constraints,
-            scenarios=scenarios, lowered=low, initial=initial)
-        return self._finish(low, plans, scenarios)
+        """One jit/vmap call plans every branch; returns the scored result.
+
+        The problem must carry a ``ScenarioBatch`` (attach one with
+        ``problem.with_scenarios``; the keyword is a convenience override).
+        """
+        problem = _coerce_problem(problem, scenarios, constraints, initial)
+        if problem.scenarios is None:
+            raise ValueError(
+                "what-if evaluation needs problem.scenarios (a "
+                "ScenarioBatch of forecast branches)")
+        result = self.scheduler.plan(problem)
+        arrays = [result.arrays(b) for b in range(result.B)]
+        return _score(problem.lowering, result.plans, problem.scenarios,
+                      arrays=arrays)
 
     def evaluate_sequential(
         self,
-        low: LoweredProblem,
-        scenarios: ScenarioBatch,
-        constraints: Tuple[Constraint, ...] = (),
+        problem: PlacementProblem,
+        scenarios: Optional[ScenarioBatch] = None,
+        constraints: Optional[Sequence[Constraint]] = None,
         initial: Optional[Dict[str, Tuple[str, str]]] = None,
     ) -> WhatIfResult:
-        """Reference path: re-plan each branch separately (B ``plan`` calls
-        over per-scenario lowerings) — what the adaptive loop would have to
-        do without the scenario axis."""
-        ci_b, E_b, order_b = scenarios.materialize(low)
-        plans = []
-        for b in range(scenarios.B):
+        """Reference path: re-plan each branch separately (B single-branch
+        ``plan`` calls over per-scenario lowerings) — what the adaptive
+        loop would have to do without the scenario axis."""
+        problem = _coerce_problem(problem, scenarios, constraints, initial)
+        if problem.scenarios is None:
+            raise ValueError("what-if evaluation needs problem.scenarios")
+        low, scen = problem.lowering, problem.scenarios
+        ci_b, E_b, order_b = scen.materialize(low)
+        plans: List[DeploymentPlan] = []
+        arrays: List[Tuple] = []
+        for b in range(scen.B):
             # thread the branch's greedy order too: when E varies, the
             # base lowering's order (keyed on the base profiles) would
             # diverge from what the batched planner uses
             low_b = dataclasses.replace(
                 low, ci=ci_b[b], mean_ci=float(ci_b[b].mean()),
                 E=np.asarray(E_b[b]), order=np.asarray(order_b[b]))
-            plans.append(self.scheduler.plan(
-                None, None, {}, {}, constraints,
-                lowered=low_b, initial=initial))
-        return self._finish(low, plans, scenarios)
-
-    def _finish(self, low, plans, scenarios) -> WhatIfResult:
-        return _score(low, plans, scenarios)
+            res = self.scheduler.plan(
+                dataclasses.replace(problem, lowering=low_b, scenarios=None))
+            plans.append(res.plan)
+            arrays.append(res.arrays(0))
+        return _score(low, plans, scen, arrays=arrays)

@@ -15,8 +15,16 @@ from .library import (
     ConstraintLibrary,
     ConstraintModule,
 )
-from .lowering import LoweredProblem, lower, lower_constraints
+from .lowering import (
+    DenseLowering,
+    LoweredProblem,
+    ScenarioBatch,
+    SparseCommLowering,
+    lower,
+    lower_constraints,
+)
 from .pipeline import GeneratorOutput, GreenConstraintPipeline
+from .problem import PlacementProblem, PlanResult
 from .ranker import ConstraintRanker
 from .scheduler import (
     GreenScheduler,

@@ -1,7 +1,7 @@
-"""Lowering: Application/Infrastructure/constraints -> dense tensors.
+"""Lowering: Application/Infrastructure/constraints -> array tensors.
 
 The object model in :mod:`repro.core.types` mirrors the paper's Sect. 3.2
-artefacts; this module lowers them once into a dense array-native substrate
+artefacts; this module lowers them once into an array-native substrate
 (`LoweredProblem`) so the scheduler can score *all* candidate placements in
 batched array ops instead of re-walking Python objects per candidate.
 
@@ -33,13 +33,27 @@ Tensor <-> paper-symbol map (S services, F flavour slots, N nodes):
   ``order[s]``     greedy construction order (heaviest profile first,
                    stable — identical to the reference scheduler's).
 
+Communication storage is a pluggable backend (``LoweredProblem.comm``):
+
+* :class:`DenseLowering` — ``K``/``has_link`` as dense ``[S, F, S]``
+  tensors (the original layout; pairwise scoring is one einsum).
+* :class:`SparseCommLowering` — the same links as a COO edge list
+  ``(src, fidx, dst, k)`` with segment-sum pairwise scoring.  Real
+  communication graphs carry O(S) links, so this keeps memory *and* the
+  move-grid pairwise work O(L) instead of O(S^2 F) — the dense layout's
+  ``[S, F, S]`` tensors and its O(S^2 F N) move-grid einsum are the
+  scaling cliff at S >= ~2k (and the scenario axis multiplies both by B).
+
+``lower(..., backend="auto")`` picks the backend by the dense element
+count ``S * F * S`` against :data:`SPARSE_AUTO_THRESHOLD`.
+
 Everything is plain NumPy; the arrays are directly consumable by
 ``jax.numpy`` for the jit-compiled scheduler path.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Mapping, Optional, Sequence, Tuple
+from typing import ClassVar, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -52,10 +66,118 @@ from .types import (
     Infrastructure,
 )
 
+# Dense-element count of K[S, F, S] above which ``backend="auto"`` switches
+# to the COO edge-list storage.  The guard is not only the three [S, F, S]
+# tensors (K, has_link, and the scheduler's derived W — ~32 MB each in f64
+# at the threshold) but the O(S^2 * F * N) move-grid einsum they imply,
+# which the scenario axis multiplies by B.
+SPARSE_AUTO_THRESHOLD = 4_000_000
+
+
+def _as_batched(placed, fcur, ncur):
+    """Normalize assignment arrays to ``[B, S]``; returns (arrays, squeeze)."""
+    placed = np.asarray(placed, dtype=bool)
+    fcur = np.asarray(fcur)
+    ncur = np.asarray(ncur)
+    if placed.ndim == 1:
+        return placed[None], fcur[None], ncur[None], True
+    return placed, fcur, ncur, False
+
+
+@dataclass
+class DenseLowering:
+    """Dense ``[S, F, S]`` communication storage (the original layout)."""
+
+    K: np.ndarray          # [S, F, S] communication energy (kWh/window)
+    has_link: np.ndarray   # [S, F, S] bool — entry present in the comm map
+
+    kind: ClassVar[str] = "dense"
+
+    @property
+    def n_links(self) -> int:
+        return int(self.has_link.sum())
+
+    def planner_args(self) -> Tuple[np.ndarray, ...]:
+        """Tensors handed to the jit planner for this storage kind."""
+        return (self.K, self.has_link)
+
+    def densify(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.K, self.has_link
+
+    def pairwise_energy(self, placed, fcur, ncur):
+        """Cross-node communication energy (kWh) of assignment(s).
+
+        Accepts ``[S]`` arrays (returns a float) or ``[B, S]`` arrays
+        (returns ``[B]``): links pay iff both endpoints are placed, the
+        source runs the link's flavour, and the endpoints sit on
+        different nodes — exactly the reference scheduler's rule.
+        """
+        placed, fcur, ncur, squeeze = _as_batched(placed, fcur, ncur)
+        B, S = placed.shape
+        if S == 0:
+            out = np.zeros(B)
+            return float(out[0]) if squeeze else out
+        s_ix = np.arange(S)
+        Ksel = self.K[s_ix[None, :, None], fcur[:, :, None],
+                      s_ix[None, None, :]]
+        linked = self.has_link[s_ix[None, :, None], fcur[:, :, None],
+                               s_ix[None, None, :]]
+        pay = (linked & placed[:, :, None] & placed[:, None, :]
+               & (ncur[:, :, None] != ncur[:, None, :]))       # [B, S, S]
+        out = (Ksel * pay).sum((1, 2))
+        return float(out[0]) if squeeze else out
+
+
+@dataclass
+class SparseCommLowering:
+    """COO edge-list communication storage with segment-sum scoring.
+
+    One row per (source service, source flavour, target service) entry of
+    the communication profile, sorted by ``(src, fidx, dst)`` so segment
+    sums accumulate in a deterministic order.
+    """
+
+    S: int
+    F: int
+    src: np.ndarray        # [L] int — source service index
+    fidx: np.ndarray       # [L] int — source flavour slot
+    dst: np.ndarray        # [L] int — target service index
+    k: np.ndarray          # [L] float — link energy (kWh/window)
+
+    kind: ClassVar[str] = "sparse"
+
+    @property
+    def n_links(self) -> int:
+        return int(self.k.size)
+
+    def planner_args(self) -> Tuple[np.ndarray, ...]:
+        return (self.src, self.fidx, self.dst, self.k)
+
+    def densify(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize the dense ``(K, has_link)`` twin (debug/tests only —
+        defeats the point at the scales this backend exists for)."""
+        K = np.zeros((self.S, self.F, self.S))
+        has_link = np.zeros((self.S, self.F, self.S), dtype=bool)
+        K[self.src, self.fidx, self.dst] = self.k
+        has_link[self.src, self.fidx, self.dst] = True
+        return K, has_link
+
+    def pairwise_energy(self, placed, fcur, ncur):
+        placed, fcur, ncur, squeeze = _as_batched(placed, fcur, ncur)
+        B = placed.shape[0]
+        if self.k.size == 0 or placed.shape[1] == 0:
+            out = np.zeros(B)
+            return float(out[0]) if squeeze else out
+        pay = (placed[:, self.src] & placed[:, self.dst]
+               & (fcur[:, self.src] == self.fidx[None, :])
+               & (ncur[:, self.src] != ncur[:, self.dst]))     # [B, L]
+        out = (self.k[None, :] * pay).sum(1)
+        return float(out[0]) if squeeze else out
+
 
 @dataclass
 class LoweredProblem:
-    """Dense-tensor form of one placement problem (constraints excluded —
+    """Array-native form of one placement problem (constraints excluded —
     lower those separately with :func:`lower_constraints` so a cached
     lowering can be reused across adaptive-loop iterations)."""
 
@@ -65,8 +187,7 @@ class LoweredProblem:
 
     # application-side tensors
     E: np.ndarray          # [S, F] computation energy (kWh/window)
-    K: np.ndarray          # [S, F, S] communication energy (kWh/window)
-    has_link: np.ndarray   # [S, F, S] bool — entry present in the comm map
+    comm: object           # DenseLowering | SparseCommLowering
     cpu_req: np.ndarray    # [S, F]
     ram_req: np.ndarray    # [S, F]
     avail_req: np.ndarray  # [S, F]
@@ -95,6 +216,17 @@ class LoweredProblem:
     def N(self) -> int:
         return len(self.node_ids)
 
+    # Dense views of the communication profile, whatever the backend —
+    # cheap passthrough for DenseLowering, an explicit materialization for
+    # SparseCommLowering (debug/equivalence-test use only at scale).
+    @property
+    def K(self) -> np.ndarray:
+        return self.comm.densify()[0]
+
+    @property
+    def has_link(self) -> np.ndarray:
+        return self.comm.densify()[1]
+
     def service_index(self) -> Dict[str, int]:
         return {sid: i for i, sid in enumerate(self.service_ids)}
 
@@ -107,8 +239,13 @@ def lower(
     infra: Infrastructure,
     computation: Mapping[Tuple[str, str], float],
     communication: Mapping[Tuple[str, str, str], float],
+    backend: str = "auto",
 ) -> LoweredProblem:
-    """Lower the object-model problem into dense tensors.
+    """Lower the object-model problem into array tensors.
+
+    ``backend`` selects the communication storage: ``"dense"``,
+    ``"sparse"``, or ``"auto"`` (sparse when ``S * F * S`` exceeds
+    :data:`SPARSE_AUTO_THRESHOLD`).
 
     Communication entries whose source/target is not an application service,
     or whose flavour is not in the source's ``flavours_order``, can never
@@ -157,8 +294,9 @@ def lower(
     # stable sort, heaviest first — matches sorted(key=-max_energy)
     order = np.argsort(-max_profile, kind="stable")
 
-    K = np.zeros((S, F, S))
-    has_link = np.zeros((S, F, S), dtype=bool)
+    # one filtering pass over the communication map; sorted so both
+    # backends see the links in the same deterministic order
+    edges: List[Tuple[int, int, int, float]] = []
     for (s, fname, z), e in communication.items():
         i, j = sidx.get(s), sidx.get(z)
         if i is None or j is None or i == j:
@@ -167,8 +305,9 @@ def lower(
             f = services[i].flavours_order.index(fname)
         except ValueError:
             continue
-        K[i, f, j] = e
-        has_link[i, f, j] = True
+        edges.append((i, f, j, float(e)))
+    edges.sort()
+    comm = _build_comm(S, F, edges, backend)
 
     cis = [n.carbon for n in nodes if n.carbon is not None]
     mean_ci = float(sum(cis) / len(cis)) if cis else 0.0
@@ -191,13 +330,36 @@ def lower(
         service_ids=service_ids,
         node_ids=node_ids,
         flavour_names=flavour_names,
-        E=E, K=K, has_link=has_link,
+        E=E, comm=comm,
         cpu_req=cpu_req, ram_req=ram_req, avail_req=avail_req,
         valid=valid, must=must, order=order,
         ci=ci, mean_ci=mean_ci, cost=cost,
         cpu_cap=cpu_cap, ram_cap=ram_cap, avail_cap=avail_cap,
         compat=compat,
     )
+
+
+def _build_comm(S: int, F: int, edges: Sequence[Tuple[int, int, int, float]],
+                backend: str):
+    if backend == "auto":
+        backend = "sparse" if S * F * S > SPARSE_AUTO_THRESHOLD else "dense"
+    if backend == "sparse":
+        if edges:
+            src, fidx, dst, k = (np.array(col) for col in zip(*edges))
+        else:
+            src = fidx = dst = np.zeros(0, dtype=np.int64)
+            k = np.zeros(0)
+        return SparseCommLowering(
+            S=S, F=F, src=src.astype(np.int64), fidx=fidx.astype(np.int64),
+            dst=dst.astype(np.int64), k=k.astype(float))
+    if backend != "dense":
+        raise ValueError(f"unknown lowering backend {backend!r}")
+    K = np.zeros((S, F, S))
+    has_link = np.zeros((S, F, S), dtype=bool)
+    for i, f, j, e in edges:
+        K[i, f, j] = e
+        has_link[i, f, j] = True
+    return DenseLowering(K=K, has_link=has_link)
 
 
 @dataclass
@@ -210,7 +372,7 @@ class ScenarioBatch:
     inputs the adaptive loop's forecasts actually vary.  Everything else
     (requirements, capacities, constraint penalties) is shared, so the
     whole batch can be priced in one jit/vmap call over the move-grid
-    scheduler (``GreenScheduler.plan_batch``).
+    scheduler (``GreenScheduler.plan``).
 
     When ``E`` varies, the greedy construction order is recomputed per
     branch exactly as :func:`lower` does; this assumes ``flavours_order``
@@ -266,13 +428,7 @@ def lowered_emissions(
     mean_ci = float(ci.mean()) if ci.size else 0.0
     sel_E = np.take_along_axis(E, fcur[:, None], axis=1)[:, 0]
     comp = float((placed * sel_E * ci[ncur]).sum())
-    Ksel = np.take_along_axis(
-        low.K, fcur[:, None, None], axis=1)[:, 0, :]          # [S, S]
-    linked = np.take_along_axis(
-        low.has_link, fcur[:, None, None], axis=1)[:, 0, :]
-    pay = (linked & placed[:, None] & placed[None, :]
-           & (ncur[:, None] != ncur[None, :]))
-    return comp + float((Ksel * pay).sum()) * mean_ci
+    return comp + low.comm.pairwise_energy(placed, fcur, ncur) * mean_ci
 
 
 def batched_lowered_emissions(
@@ -294,13 +450,8 @@ def batched_lowered_emissions(
     Esel = np.take_along_axis(E, fcur[:, :, None], axis=2)[:, :, 0]
     cisel = np.take_along_axis(ci, ncur, axis=1)              # [B, S]
     comp = (placed * Esel * cisel).sum(axis=1)
-    s_ix = np.arange(S)
-    Ksel = low.K[s_ix[None, :, None], fcur[:, :, None], s_ix[None, None, :]]
-    linked = low.has_link[
-        s_ix[None, :, None], fcur[:, :, None], s_ix[None, None, :]]
-    pay = (linked & placed[:, :, None] & placed[:, None, :]
-           & (ncur[:, :, None] != ncur[:, None, :]))          # [B, S, S]
-    return comp + (Ksel * pay).sum((1, 2)) * ci.mean(axis=1)
+    commE = low.comm.pairwise_energy(placed, fcur, ncur)      # [B]
+    return comp + commE * ci.mean(axis=1)
 
 
 def lower_constraints(

@@ -5,15 +5,17 @@ Generator -> KB Enricher -> Constraints Ranker -> Explainability Generator
 -> Constraint Adapter.  One call = one iteration of the adaptive loop.
 
 ``run`` also surfaces the enriched descriptions and the Eq. 1/2 energy
-profiles on its output, and ``plan`` closes the loop: constraints ->
-array-native scheduler -> deployment plan, reusing one dense lowering
-(:mod:`repro.core.lowering`) across iterations of the adaptive loop when
-the application/infrastructure shape is unchanged.
+profiles on its output; ``problem_for`` folds a run's output into the one
+artefact the planner consumes (:class:`~repro.core.problem.
+PlacementProblem`), reusing one lowering across iterations of the adaptive
+loop when the application/infrastructure shape is unchanged; and ``plan``
+closes the loop: constraints -> array-native scheduler -> deployment plan.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from . import adapter
 from .energy import EnergyEstimator, EnergyMixGatherer
@@ -22,6 +24,7 @@ from .generator import ConstraintGenerator
 from .kb import KBEnricher, KnowledgeBase
 from .library import ConstraintLibrary
 from .lowering import LoweredProblem, lower
+from .problem import PlacementProblem
 from .ranker import ConstraintRanker
 from .scheduler import GreenScheduler, SchedulerConfig
 from .types import (
@@ -63,6 +66,14 @@ class GreenConstraintPipeline:
     flavour_scope: str = "current"
     tau_scope: str = "candidates"
     iteration: int = 0
+    # One-slot lowering cache, keyed on the PlacementProblem's lowering
+    # identity (PlacementProblem.cache_key): profiles drift every iteration
+    # so the key covers the profile values too — the cache saves the
+    # O(S*F*(S+N)) re-lowering when the loop replans on an unchanged
+    # window (e.g. multi-config what-ifs).  Constraints are NOT part of the
+    # key: they ride on the problem, not the lowering.
+    _lowering_cache: Optional[Tuple[tuple, LoweredProblem]] = field(
+        default=None, repr=False, compare=False)
 
     def run(
         self,
@@ -118,39 +129,39 @@ class GreenConstraintPipeline:
     ) -> Tuple[DeploymentPlan, GeneratorOutput]:
         """One full adaptive-loop iteration: constraints + deployment plan.
 
-        The dense lowering is rebuilt only when the enriched problem
-        changes (profiles drift every iteration, so the lowering is keyed
-        on the profile values too — the cache saves work when the loop
-        replans on an unchanged window, e.g. for multi-config what-ifs).
         ``initial`` warm-starts the scheduler's local search from a
         previous assignment (verified, reject-and-rebuild on infeasible).
         """
         scheduler = scheduler or GreenScheduler(SchedulerConfig.green())
         out = self.run(app, infra, monitoring, use_kb=use_kb)
-        lowered = self.lowered_for(out)
-        plan = scheduler.plan(
-            out.app, out.infra, out.computation, out.communication,
-            out.constraints, lowered=lowered, initial=initial,
-        )
-        return plan, out
+        problem = self.problem_for(out)
+        if initial is not None:
+            problem = problem.with_warm_start(initial)
+        return scheduler.plan(problem).plan, out
 
-    _lowering_cache: Optional[Tuple[tuple, LoweredProblem]] = field(
-        default=None, repr=False, compare=False)
-
-    def lowered_for(self, out: GeneratorOutput) -> LoweredProblem:
-        # Application/Infrastructure are frozen dataclasses: value equality
-        # covers every lowered input (capacities, costs, subnets, flavour
-        # requirements, carbon), so a stale lowering can never be reused.
-        key = (
-            out.app,
-            out.infra,
-            tuple(sorted(out.computation.items())),
-            tuple(sorted(out.communication.items())),
-        )
+    def problem_for(self, out: GeneratorOutput,
+                    backend: str = "auto") -> PlacementProblem:
+        """Fold one pipeline iteration into a :class:`PlacementProblem`,
+        reusing the cached lowering when the lowering inputs are unchanged
+        (the problem's constraints always come fresh from ``out`` — KB
+        memory decay re-weights them every tick without touching the
+        lowering)."""
+        key = (backend, PlacementProblem.cache_key(out))
         if self._lowering_cache is not None \
                 and self._lowering_cache[0] == key:
-            return self._lowering_cache[1]
-        lowered = lower(out.app, out.infra, out.computation,
-                        out.communication)
-        self._lowering_cache = (key, lowered)
-        return lowered
+            low = self._lowering_cache[1]
+        else:
+            low = lower(out.app, out.infra, out.computation,
+                        out.communication, backend=backend)
+            self._lowering_cache = (key, low)
+        return PlacementProblem(lowering=low,
+                                constraints=tuple(out.constraints))
+
+    def lowered_for(self, out: GeneratorOutput) -> LoweredProblem:
+        """Deprecated: use ``problem_for(out)`` (the scheduler now takes a
+        PlacementProblem; its ``.lowering`` is what this used to return)."""
+        warnings.warn(
+            "GreenConstraintPipeline.lowered_for is deprecated; use "
+            "problem_for(out) and pass the PlacementProblem to "
+            "GreenScheduler.plan", DeprecationWarning, stacklevel=2)
+        return self.problem_for(out).lowering

@@ -1,0 +1,283 @@
+"""PlacementProblem: the one artefact the planner consumes.
+
+The paper's adaptive loop (Fig. 1) replans every observation window, which
+only scales when the planner's input is a cheap-to-rebuild, cheap-to-batch
+value.  ``PlacementProblem`` is that value: an immutable, pytree-registered
+bundle of the enriched app/infra lowering (Eq. 1/2 profiles, capacities,
+masks — any :class:`~repro.core.lowering.LoweredProblem`, dense or sparse
+communication backend), the ranked green constraints, an optional
+``ScenarioBatch`` of what-if forecast branches, and an optional warm-start
+assignment.  Built once per tick via :meth:`PlacementProblem.
+from_generator_output` and handed to the single scheduler entrypoint
+``GreenScheduler.plan(problem) -> PlanResult``.
+
+Being a pytree, a problem can flow through ``jax.tree_util`` transforms
+(donation, device placement, serialization helpers) like any other bundle
+of arrays; being content-hashable (:attr:`fingerprint`), it is its own
+cache key for lowering reuse across adaptive-loop iterations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .lowering import (
+    DenseLowering,
+    LoweredProblem,
+    ScenarioBatch,
+    SparseCommLowering,
+    lower,
+)
+from .types import Application, Constraint, DeploymentPlan, Infrastructure
+
+Assignment = Mapping[str, Tuple[str, str]]
+FrozenAssignment = Tuple[Tuple[str, Tuple[str, str]], ...]
+
+
+def _freeze_initial(initial) -> Optional[FrozenAssignment]:
+    if initial is None:
+        return None
+    if isinstance(initial, tuple):
+        return initial
+    return tuple(sorted((sid, (str(f), str(n)))
+                        for sid, (f, n) in dict(initial).items()))
+
+
+@dataclass(frozen=True, eq=False)
+class PlacementProblem:
+    """One immutable placement problem: lowering + constraints
+    (+ optional scenario batch and warm start)."""
+
+    lowering: LoweredProblem
+    constraints: Tuple[Constraint, ...] = ()
+    scenarios: Optional[ScenarioBatch] = None
+    initial: Optional[FrozenAssignment] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "constraints", tuple(self.constraints))
+        object.__setattr__(self, "initial", _freeze_initial(self.initial))
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        app: Optional[Application],
+        infra: Optional[Infrastructure],
+        computation: Mapping[Tuple[str, str], float],
+        communication: Mapping[Tuple[str, str, str], float],
+        constraints: Sequence[Constraint] = (),
+        *,
+        scenarios: Optional[ScenarioBatch] = None,
+        initial: Optional[Assignment] = None,
+        backend: str = "auto",
+        lowered: Optional[LoweredProblem] = None,
+    ) -> "PlacementProblem":
+        """Lower an object-model problem (or wrap an existing lowering)."""
+        low = lowered if lowered is not None else lower(
+            app, infra, computation, communication, backend=backend)
+        return cls(lowering=low, constraints=tuple(constraints),
+                   scenarios=scenarios, initial=initial)
+
+    @classmethod
+    def from_generator_output(
+        cls,
+        out,
+        *,
+        scenarios: Optional[ScenarioBatch] = None,
+        initial: Optional[Assignment] = None,
+        backend: str = "auto",
+        lowered: Optional[LoweredProblem] = None,
+    ) -> "PlacementProblem":
+        """One pipeline tick -> one problem (the Fig. 1 hand-off): the
+        enriched app/infra and Eq. 1/2 profiles threaded through a
+        :class:`~repro.core.pipeline.GeneratorOutput` plus its ranked
+        constraints."""
+        return cls.build(
+            out.app, out.infra, out.computation, out.communication,
+            out.constraints, scenarios=scenarios, initial=initial,
+            backend=backend, lowered=lowered)
+
+    @staticmethod
+    def cache_key(out) -> Tuple:
+        """Hashable identity of the *lowering inputs* of a
+        ``GeneratorOutput`` — what :meth:`from_generator_output` would
+        lower.  Application/Infrastructure are frozen dataclasses, so value
+        equality covers every lowered tensor (capacities, costs, subnets,
+        flavour requirements, carbon) and a stale lowering can never be
+        reused.  Constraints are deliberately excluded: they drift with KB
+        memory decay every tick without invalidating the lowering."""
+        return (
+            out.app,
+            out.infra,
+            tuple(sorted(out.computation.items())),
+            tuple(sorted(out.communication.items())),
+        )
+
+    # -- derived views ------------------------------------------------------
+
+    @property
+    def B(self) -> int:
+        """Scenario-branch count priced by one ``plan`` call (1 when no
+        scenario batch is attached)."""
+        return 1 if self.scenarios is None else self.scenarios.B
+
+    @property
+    def initial_assignment(self) -> Optional[Dict[str, Tuple[str, str]]]:
+        return None if self.initial is None else dict(self.initial)
+
+    def with_scenarios(
+        self, scenarios: Optional[ScenarioBatch]
+    ) -> "PlacementProblem":
+        return dataclasses.replace(self, scenarios=scenarios)
+
+    def with_warm_start(
+        self, initial: Optional[Assignment]
+    ) -> "PlacementProblem":
+        return dataclasses.replace(self, initial=_freeze_initial(initial))
+
+    def with_constraints(
+        self, constraints: Sequence[Constraint]
+    ) -> "PlacementProblem":
+        return dataclasses.replace(self, constraints=tuple(constraints))
+
+    # -- identity -----------------------------------------------------------
+
+    @property
+    def fingerprint(self) -> str:
+        """Content hash over every tensor and static field — the problem's
+        identity for caches (computed lazily, memoised; problems are
+        immutable so it never goes stale)."""
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.sha256()
+            _hash_dataclass(h, self.lowering)
+            for c in self.constraints:
+                h.update(repr(c).encode())
+            if self.scenarios is not None:
+                _hash_dataclass(h, self.scenarios)
+            h.update(repr(self.initial).encode())
+            fp = h.hexdigest()
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
+    def __hash__(self) -> int:
+        return hash(self.fingerprint)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, PlacementProblem)
+                and self.fingerprint == other.fingerprint)
+
+
+def _hash_dataclass(h, obj) -> None:
+    h.update(type(obj).__name__.encode())
+    for f in dataclasses.fields(obj):
+        v = getattr(obj, f.name)
+        h.update(f.name.encode())
+        if v is None:
+            h.update(b"\x00")
+        elif isinstance(v, np.ndarray):
+            h.update(str(v.shape).encode())
+            h.update(str(v.dtype).encode())
+            h.update(np.ascontiguousarray(v).tobytes())
+        elif dataclasses.is_dataclass(v):
+            _hash_dataclass(h, v)
+        else:
+            h.update(repr(v).encode())
+
+
+@dataclass
+class PlanResult:
+    """What ``GreenScheduler.plan(problem)`` returns: one deployment plan
+    per scenario branch plus the tensor-form assignments (reusable for
+    pricing without re-walking the plan objects)."""
+
+    problem: PlacementProblem
+    plans: List[DeploymentPlan]
+    placed: np.ndarray       # [B, S] bool
+    fcur: np.ndarray         # [B, S] flavour slot per service
+    ncur: np.ndarray         # [B, S] node index per service
+    emissions_g: np.ndarray  # [B] branch emissions (inf where infeasible)
+
+    @property
+    def B(self) -> int:
+        return len(self.plans)
+
+    @property
+    def plan(self) -> DeploymentPlan:
+        """The single plan of an unbatched problem (B must be 1)."""
+        if len(self.plans) != 1:
+            raise ValueError(
+                f"PlanResult holds {len(self.plans)} scenario-branch plans; "
+                "use .plans (or index a branch) instead of .plan")
+        return self.plans[0]
+
+    def assignment(self, b: int = 0) -> Dict[str, Tuple[str, str]]:
+        low = self.problem.lowering
+        return {
+            low.service_ids[s]: (
+                low.flavour_names[s][int(self.fcur[b, s])],
+                low.node_ids[int(self.ncur[b, s])])
+            for s in range(low.S) if self.placed[b, s]
+        }
+
+    def arrays(self, b: int = 0) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        return self.placed[b], self.fcur[b], self.ncur[b]
+
+    def __len__(self) -> int:
+        return len(self.plans)
+
+    def __iter__(self) -> Iterator[DeploymentPlan]:
+        return iter(self.plans)
+
+
+# ---------------------------------------------------------------------------
+# pytree registration: a PlacementProblem (and everything inside it) flows
+# through jax.tree_util like any other bundle of arrays.  Array fields are
+# leaves; ids/names/constraints are static aux data.
+# ---------------------------------------------------------------------------
+
+
+def _register_pytree(cls, array_fields: Tuple[str, ...],
+                     static_fields: Tuple[str, ...]) -> None:
+    from jax import tree_util
+
+    def flatten(x):
+        return (tuple(getattr(x, f) for f in array_fields),
+                tuple(getattr(x, f) for f in static_fields))
+
+    def unflatten(aux, children):
+        kwargs = dict(zip(array_fields, children))
+        kwargs.update(zip(static_fields, aux))
+        return cls(**kwargs)
+
+    tree_util.register_pytree_node(cls, flatten, unflatten)
+
+
+def _register_all() -> None:
+    try:
+        import jax  # noqa: F401
+    except Exception:  # pragma: no cover — jax is a hard dep in practice
+        return
+    try:
+        _register_pytree(DenseLowering, ("K", "has_link"), ())
+        _register_pytree(SparseCommLowering,
+                         ("src", "fidx", "dst", "k"), ("S", "F"))
+        _register_pytree(ScenarioBatch, ("ci", "E"), ())
+        _register_pytree(
+            LoweredProblem,
+            ("E", "comm", "cpu_req", "ram_req", "avail_req", "valid",
+             "must", "order", "ci", "cost", "cpu_cap", "ram_cap",
+             "avail_cap", "compat"),
+            ("service_ids", "node_ids", "flavour_names", "mean_ci"))
+        _register_pytree(PlacementProblem, ("lowering", "scenarios"),
+                         ("constraints", "initial"))
+    except ValueError:  # pragma: no cover — already registered (reload)
+        pass
+
+
+_register_all()

@@ -16,13 +16,17 @@ placement exists.
 
 Two implementations share the objective:
 
-* ``GreenScheduler`` — the array-native core.  The problem is lowered once
-  to dense tensors (:mod:`repro.core.lowering`); greedy construction scores
-  every (flavour, node) candidate for a service in one batched incremental
-  delta-objective evaluation, and local search scores the entire
-  single-relocation move grid ``[S, F, N]`` per step as one vectorized op
-  (NumPy baseline; ``SchedulerConfig.use_jax`` switches the move grid to a
-  ``jax.jit``-compiled path).
+* ``GreenScheduler`` — the array-native core with ONE public entrypoint:
+  ``plan(problem: PlacementProblem) -> PlanResult``.  Greedy construction
+  runs as a ``lax.scan`` over the service order and best-improvement local
+  search as a ``lax.while_loop`` over the ``[S, F, N]`` single-relocation
+  move grid, vmapped over the problem's scenario branches and compiled
+  once per problem shape — an unbatched problem is simply B=1 on the same
+  program.  Pairwise communication terms come from the lowering's
+  pluggable backend: dense ``[S, F, S]`` einsums (``DenseLowering``) or
+  COO segment sums (``SparseCommLowering``).  The pre-PlacementProblem
+  positional signatures (``plan(app, infra, computation, ...)`` and
+  ``plan_batch``) survive as deprecation shims for one release.
 * ``ReferenceScheduler`` — the legacy object-walking greedy +
   first-improvement local search, retained verbatim for equivalence testing
   and old-vs-new benchmarking.  ``reference_objective`` exposes its
@@ -36,6 +40,7 @@ Three standard profiles:
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -46,10 +51,9 @@ from .lowering import (
     LoweredProblem,
     ScenarioBatch,
     batched_lowered_emissions,
-    lower,
     lower_constraints,
-    lowered_emissions,
 )
+from .problem import PlacementProblem, PlanResult
 from .types import (
     Affinity,
     Application,
@@ -65,6 +69,12 @@ from .types import (
 # incumbent by more than this to be taken).
 _EPS = 1e-12
 
+_DEPRECATED_PLAN = (
+    "GreenScheduler.{name}(app, infra, computation, communication, ...) is "
+    "deprecated; build a PlacementProblem (PlacementProblem.build(...), "
+    "PlacementProblem.from_generator_output(out), or "
+    "pipeline.problem_for(out)) and call plan(problem) instead")
+
 
 @dataclass
 class SchedulerConfig:
@@ -74,9 +84,16 @@ class SchedulerConfig:
     green_penalty: float = 5.0
     use_green_constraints: bool = True
     local_search_rounds: int = 50
-    # Evaluate the local-search move grid with jax.jit instead of NumPy.
-    # Same tensors, same semantics; pays one compile per problem shape.
+    # Deprecated and ignored: the unified planner always runs the
+    # jit-compiled path (kept so old configs keep constructing).
     use_jax: bool = False
+
+    def __post_init__(self) -> None:
+        if self.use_jax:
+            warnings.warn(
+                "SchedulerConfig.use_jax is deprecated and ignored: the "
+                "unified planner always runs the jit-compiled path",
+                DeprecationWarning, stacklevel=3)
 
     @classmethod
     def baseline(cls) -> "SchedulerConfig":
@@ -97,15 +114,36 @@ class SchedulerConfig:
 # ---------------------------------------------------------------------------
 
 
-def _move_deltas(xp, static, W, stat_feas, cpu_req, ram_req, cpu_cap,
-                 ram_cap, placed, fcur, ncur, cpu_load, ram_load):
-    """Delta objective of every single-relocation move, as one batched op.
+def _finish_move_deltas(xp, score, onehot, stat_feas, cpu_req, ram_req,
+                        cpu_cap, ram_cap, placed, fcur, ncur,
+                        cpu_load, ram_load):
+    """Backend-independent tail of the move-grid evaluation: subtract the
+    incumbent's score, mask capacity-infeasible cells (with the service's
+    own load removed), unplaced services, and the incumbent cell."""
+    S, F, N = score.shape
+    cur = xp.take_along_axis(
+        xp.take_along_axis(score, fcur[:, None, None], axis=1)[:, 0, :],
+        ncur[:, None], axis=1)[:, 0]
+    delta = score - cur[:, None, None]
 
-    Returns ``delta[s, f, n]`` = J(after moving s to (f, n)) - J(current),
-    with +inf at infeasible moves, unplaced services, and the incumbent
-    cell.  ``xp`` is ``numpy`` or ``jax.numpy`` — the function is pure and
-    shape-static, so the jax path can wrap it in ``jax.jit``.
-    """
+    own_cpu = xp.take_along_axis(cpu_req, fcur[:, None], axis=1)[:, 0]
+    own_ram = xp.take_along_axis(ram_req, fcur[:, None], axis=1)[:, 0]
+    cpu_wo = cpu_load[None, :] - own_cpu[:, None] * onehot
+    ram_wo = ram_load[None, :] - own_ram[:, None] * onehot
+    feas = (stat_feas
+            & (cpu_wo[:, None, :] + cpu_req[:, :, None]
+               <= cpu_cap[None, None, :])
+            & (ram_wo[:, None, :] + ram_req[:, :, None]
+               <= ram_cap[None, None, :]))
+    mask = feas & placed[:, None, None]
+    incumbent = ((xp.arange(F)[None, :, None] == fcur[:, None, None])
+                 & (xp.arange(N)[None, None, :] == ncur[:, None, None]))
+    mask = mask & ~incumbent
+    return xp.where(mask, delta, xp.inf)
+
+
+def _dense_move_score(xp, static, W, placed, fcur, ncur):
+    """Move-grid score[s, f, n] = J-contribution of s at (f, n), dense W."""
     S, F, N = static.shape
     placed_f = placed.astype(static.dtype)
     # onehot[z, n] = 1 iff service z is placed on node n
@@ -118,65 +156,118 @@ def _move_deltas(xp, static, W, stat_feas, cpu_req, ram_req, cpu_cap,
     Wf = xp.take_along_axis(W, fcur[:, None, None], axis=1)[:, 0, :]
     Wf = Wf * placed_f[:, None]                                 # [Z, S]
     inn = Wf.sum(0)[:, None] - xp.einsum("zs,zn->sn", Wf, onehot)
+    return static + out + inn[:, None, :], onehot               # [S, F, N]
 
-    score = static + out + inn[:, None, :]                      # [S, F, N]
-    cur = xp.take_along_axis(
-        xp.take_along_axis(score, fcur[:, None, None], axis=1)[:, 0, :],
-        ncur[:, None], axis=1)[:, 0]
-    delta = score - cur[:, None, None]
 
-    # capacity feasibility with the service's own load removed
-    own_cpu = xp.take_along_axis(cpu_req, fcur[:, None], axis=1)[:, 0]
-    own_ram = xp.take_along_axis(ram_req, fcur[:, None], axis=1)[:, 0]
-    cpu_wo = cpu_load[None, :] - own_cpu[:, None] * onehot
-    ram_wo = ram_load[None, :] - own_ram[:, None] * onehot
-    feas = (stat_feas
-            & (cpu_wo[:, None, :] + cpu_req[:, :, None]
-               <= cpu_cap[None, None, :])
-            & (ram_wo[:, None, :] + ram_req[:, :, None]
-               <= ram_cap[None, None, :]))
-    mask = feas & placed[:, None, None]
-    # exclude the incumbent (f, n) cell
-    incumbent = ((xp.arange(F)[None, :, None] == fcur[:, None, None])
-                 & (xp.arange(N)[None, None, :] == ncur[:, None, None]))
-    mask = mask & ~incumbent
-    return xp.where(mask, delta, xp.inf)
+def _sparse_move_score(xp, static, esrc, ef, edst, w, placed, fcur, ncur):
+    """Same score as :func:`_dense_move_score` from a COO edge list — all
+    pairwise terms are O(L) segment sums instead of O(S^2 F N) einsums."""
+    S, F, N = static.shape
+    dt = static.dtype
+    placed_f = placed.astype(dt)
+    onehot = (ncur[:, None] == xp.arange(N)[None, :]) * placed_f[:, None]
+
+    w_out = w * placed_f[edst]                                  # [L]
+    flat_sf = esrc * F + ef
+    t_out = xp.zeros(S * F, dt).at[flat_sf].add(w_out).reshape(S, F)
+    colloc = xp.zeros(S * F * N, dt).at[
+        flat_sf * N + ncur[edst]].add(w_out).reshape(S, F, N)
+    out = t_out[:, :, None] - colloc
+
+    w_in = w * placed_f[esrc] * (ef == fcur[esrc])              # [L]
+    inn_sum = xp.zeros(S, dt).at[edst].add(w_in)
+    in_colloc = xp.zeros(S * N, dt).at[
+        edst * N + ncur[esrc]].add(w_in).reshape(S, N)
+    inn = inn_sum[:, None] - in_colloc
+    return static + out + inn[:, None, :], onehot
+
+
+def _move_deltas(xp, static, W, stat_feas, cpu_req, ram_req, cpu_cap,
+                 ram_cap, placed, fcur, ncur, cpu_load, ram_load):
+    """Delta objective of every single-relocation move, as one batched op
+    (dense-W composition kept for external use and the dense jit path).
+
+    Returns ``delta[s, f, n]`` = J(after moving s to (f, n)) - J(current),
+    with +inf at infeasible moves, unplaced services, and the incumbent
+    cell.  ``xp`` is ``numpy`` or ``jax.numpy`` — pure and shape-static.
+    """
+    score, onehot = _dense_move_score(xp, static, W, placed, fcur, ncur)
+    return _finish_move_deltas(xp, score, onehot, stat_feas, cpu_req,
+                               ram_req, cpu_cap, ram_cap, placed, fcur,
+                               ncur, cpu_load, ram_load)
 
 
 _PLAN_BATCH_CACHE: Dict[str, object] = {}
 
 
-def _batched_planner():
-    """One jit-compiled program planning B scenarios at once.
+def _batched_planner(kind: str):
+    """One jit-compiled program planning B scenario branches at once.
 
-    Built lazily (jax import deferred) and cached at module level so every
-    adaptive-loop tick with unchanged problem shapes reuses the compiled
-    executable — the problem tensors are ARGUMENTS, not closed-over
-    constants, so drifting profiles/forecasts never retrace.
+    Built lazily (jax import deferred) and cached per communication-storage
+    ``kind`` ("dense" | "sparse") so every adaptive-loop tick with
+    unchanged problem shapes reuses the compiled executable — the problem
+    tensors are ARGUMENTS, not closed-over constants, so drifting
+    profiles/forecasts never retrace.
 
-    Per scenario (vmapped leading axis): greedy construction is a
+    Per branch (vmapped leading axis): greedy construction is a
     ``lax.scan`` over the service order and local search a
-    ``lax.while_loop`` over the same ``_move_deltas`` move grid as the
-    scalar path — semantics (scoring, row-major tie-breaks, improvement
-    threshold, must-deploy bailout) match ``GreenScheduler.plan`` exactly.
+    ``lax.while_loop`` over the single-relocation move grid.  The two
+    kinds differ ONLY in how pairwise communication terms are scored
+    (dense einsum vs COO segment sums); scoring values, row-major
+    tie-breaks, improvement threshold, and must-deploy bailout are
+    identical.
     """
-    if "fn" in _PLAN_BATCH_CACHE:
-        return _PLAN_BATCH_CACHE["fn"]
+    if kind in _PLAN_BATCH_CACHE:
+        return _PLAN_BATCH_CACHE[kind]
     import jax
     import jax.numpy as jnp
 
-    def single(ci, E, order, w_placed, w_fcur, w_ncur, w_cpu, w_ram,
-               K, has_link, P, A, stat_feas, cpu_req, ram_req,
-               cpu_cap, ram_cap, must, cost,
-               money_w, pref_w, emission_w, green_pen, max_steps):
+    comm_argc = {"dense": 2, "sparse": 4}[kind]
+
+    def single(ci, E, order, w_placed, w_fcur, w_ncur, w_cpu, w_ram, *rest):
+        comm_args = rest[:comm_argc]
+        (P, A, stat_feas, cpu_req, ram_req, cpu_cap, ram_cap, must, cost,
+         money_w, pref_w, emission_w, green_pen, max_steps) = rest[comm_argc:]
         S, F, N = stat_feas.shape
         dt = ci.dtype
         static = (money_w * cost[None, None, :] * cpu_req[:, :, None]
                   + pref_w * jnp.arange(F, dtype=dt)[None, :, None]
                   + emission_w * E[:, :, None] * ci[None, None, :]
                   + green_pen * P)
-        W = (emission_w * ci.mean() * K
-             + green_pen * A[:, None, :] * has_link)
+        wK = emission_w * ci.mean()
+        if kind == "dense":
+            K, has_link = comm_args
+            W = wK * K + green_pen * A[:, None, :] * has_link
+
+            def greedy_comm(s, placed_f, fcur, ncur, onehot):
+                w_out = W[s] * placed_f[None, :]                # [F, S]
+                colloc = w_out @ onehot                         # [F, N]
+                v_in = jnp.take_along_axis(
+                    W[:, :, s], fcur[:, None], axis=1)[:, 0] * placed_f
+                in_colloc = v_in @ onehot                       # [N]
+                return ((w_out.sum(1)[:, None] - colloc)
+                        + (v_in.sum() - in_colloc)[None, :])
+
+            def move_score(placed, fcur, ncur):
+                return _dense_move_score(jnp, static, W, placed, fcur, ncur)
+        else:
+            esrc, ef, edst, ek = comm_args
+            w = wK * ek + green_pen * A[esrc, edst]
+
+            def greedy_comm(s, placed_f, fcur, ncur, onehot):
+                w_eff = w * (esrc == s) * placed_f[edst]        # [L]
+                t_out = jnp.zeros(F, dt).at[ef].add(w_eff)
+                colloc = jnp.zeros(F * N, dt).at[
+                    ef * N + ncur[edst]].add(w_eff).reshape(F, N)
+                w_in = (w * ((edst == s) & (ef == fcur[esrc]))
+                        * placed_f[esrc])                       # [L]
+                in_colloc = jnp.zeros(N, dt).at[ncur[esrc]].add(w_in)
+                return ((t_out[:, None] - colloc)
+                        + (w_in.sum() - in_colloc)[None, :])
+
+            def move_score(placed, fcur, ncur):
+                return _sparse_move_score(jnp, static, esrc, ef, edst, w,
+                                          placed, fcur, ncur)
 
         def greedy_step(state, k):
             placed, fcur, ncur, cpu_load, ram_load, skipped, infeas, fail_s \
@@ -190,13 +281,7 @@ def _batched_planner():
             placed_f = placed.astype(dt)
             onehot = ((ncur[:, None] == jnp.arange(N)[None, :])
                       * placed_f[:, None])                      # [S, N]
-            w_out = W[s] * placed_f[None, :]                    # [F, S]
-            colloc = w_out @ onehot                             # [F, N]
-            v_in = jnp.take_along_axis(
-                W[:, :, s], fcur[:, None], axis=1)[:, 0] * placed_f
-            in_colloc = v_in @ onehot                           # [N]
-            score = (static[s] + (w_out.sum(1)[:, None] - colloc)
-                     + (v_in.sum() - in_colloc)[None, :])
+            score = static[s] + greedy_comm(s, placed_f, fcur, ncur, onehot)
             score = jnp.where(feas, score, jnp.inf)
             any_feas = feas.any()
             kk = jnp.argmin(score)   # row-major: flavour rank, node index
@@ -229,8 +314,9 @@ def _batched_planner():
 
         def ls_body(st):
             placed, fcur, ncur, cpu_load, ram_load, t, done = st
-            delta = _move_deltas(
-                jnp, static, W, stat_feas, cpu_req, ram_req, cpu_cap,
+            score, onehot = move_score(placed, fcur, ncur)
+            delta = _finish_move_deltas(
+                jnp, score, onehot, stat_feas, cpu_req, ram_req, cpu_cap,
                 ram_cap, placed, fcur, ncur, cpu_load, ram_load)
             kk = jnp.argmin(delta)
             improve = delta.reshape(-1)[kk] < -_EPS
@@ -250,16 +336,17 @@ def _batched_planner():
             return (placed, fcur, ncur, cpu_load, ram_load, t + 1,
                     done | ~improve)
 
-        # infeasible scenarios skip local search (scalar path bails out
-        # before it); under vmap the while body no-ops once done is set.
+        # infeasible branches skip local search; under vmap the while body
+        # no-ops once done is set.
         placed, fcur, ncur, cpu_load, ram_load, _, _ = jax.lax.while_loop(
             ls_cond, ls_body,
             (placed, fcur, ncur, cpu_load, ram_load, jnp.asarray(0),
              infeas))
         return placed, fcur, ncur, skipped, infeas, fail_s
 
-    fn = jax.jit(jax.vmap(single, in_axes=(0, 0, 0) + (None,) * 21))
-    _PLAN_BATCH_CACHE["fn"] = fn
+    fn = jax.jit(jax.vmap(
+        single, in_axes=(0, 0, 0) + (None,) * (5 + comm_argc + 14)))
+    _PLAN_BATCH_CACHE[kind] = fn
     return fn
 
 
@@ -311,189 +398,91 @@ def _warm_start_state(
 
 @dataclass
 class GreenScheduler:
-    """Array-native greedy + vectorized best-improvement local search."""
+    """Array-native greedy + vectorized best-improvement local search.
+
+    One public entrypoint: ``plan(problem: PlacementProblem)`` returns a
+    :class:`~repro.core.problem.PlanResult` with one plan per scenario
+    branch (B=1 when the problem carries no scenario batch).  The problem
+    object bundles everything the planner needs — lowering (dense or
+    sparse communication backend), constraints, optional what-if
+    scenarios, optional warm start.
+    """
 
     config: SchedulerConfig = field(default_factory=SchedulerConfig)
 
     def plan(
         self,
-        app: Optional[Application],
-        infra: Optional[Infrastructure],
-        computation: Mapping[Tuple[str, str], float],
-        communication: Mapping[Tuple[str, str, str], float],
+        app,
+        infra: Optional[Infrastructure] = None,
+        computation: Optional[Mapping[Tuple[str, str], float]] = None,
+        communication: Optional[Mapping[Tuple[str, str, str], float]] = None,
         constraints: Sequence[Constraint] = (),
         lowered: Optional[LoweredProblem] = None,
         initial: Optional[Mapping[str, Tuple[str, str]]] = None,
-    ) -> DeploymentPlan:
-        """Plan a deployment; ``initial`` warm-starts the search.
+    ):
+        """Plan a deployment.
 
-        ``app``/``infra`` may be ``None`` when a cached ``lowered`` problem
-        is supplied (tensor-only adaptive-loop callers).
+        New API: ``plan(problem: PlacementProblem) -> PlanResult`` — every
+        other argument must be omitted; scenarios and warm start travel on
+        the problem (``problem.with_scenarios(...)`` /
+        ``problem.with_warm_start(...)``).
 
-        A warm start maps service -> (flavour, node), e.g. the previous
-        adaptive-loop assignment.  It is verified against the capacity /
-        subnet / availability masks first: an infeasible warm start is
-        rejected as a whole and the plan is rebuilt greedily from scratch
-        (noted on the returned plan).  A valid warm start skips greedy
-        construction for its services, so replanning cost is dominated by
-        the local-search repair steps.
+        Legacy API (deprecated, one release): ``plan(app, infra,
+        computation, communication, constraints, lowered=..., initial=...)
+        -> DeploymentPlan``.  A warm start maps service -> (flavour, node);
+        it is verified against the capacity / subnet / availability masks
+        first, rejected as a whole on any violation, and the plan rebuilt
+        greedily from scratch (noted on the returned plan).
         """
-        cfg = self.config
-        low = lowered if lowered is not None \
-            else lower(app, infra, computation, communication)
-        if not cfg.use_green_constraints:
-            constraints = ()
-        P, A = lower_constraints(low, constraints)
-        S, F, N = low.S, low.F, low.N
-
-        # config-weighted scoring tensors
-        static = (cfg.money_weight * low.cost[None, None, :]
-                  * low.cpu_req[:, :, None]
-                  + cfg.pref_weight * np.arange(F)[None, :, None]
-                  + cfg.emission_weight * low.E[:, :, None]
-                  * low.ci[None, None, :]
-                  + cfg.green_penalty * P)
-        W = (cfg.emission_weight * low.mean_ci * low.K
-             + cfg.green_penalty * A[:, None, :] * low.has_link)
-        stat_feas = _static_feasibility(low)
-
-        placed = np.zeros(S, dtype=bool)
-        fcur = np.zeros(S, dtype=np.int64)
-        ncur = np.zeros(S, dtype=np.int64)
-        cpu_load = np.zeros(N)
-        ram_load = np.zeros(N)
-        skipped: List[str] = []
-        notes: List[str] = []
-
-        if initial is not None:
-            warm, err = _warm_start_state(low, stat_feas, initial)
-            if warm is None:
-                notes.append(
-                    f"warm start rejected ({err}); rebuilt from scratch")
-            else:
-                placed, fcur, ncur, cpu_load, ram_load = warm
-
-        # --- greedy construction: heaviest services first; all (f, n)
-        # candidates of a service scored in one batched delta evaluation.
-        for s in map(int, low.order):
-            if placed[s]:
-                continue
-            feas = (stat_feas[s]
-                    & (cpu_load[None, :] + low.cpu_req[s][:, None]
-                       <= low.cpu_cap[None, :])
-                    & (ram_load[None, :] + low.ram_req[s][:, None]
-                       <= low.ram_cap[None, :]))
-            if not feas.any():
-                if low.must[s]:
-                    return DeploymentPlan(
-                        placements=(),
-                        feasible=False,
-                        notes=tuple(notes)
-                        + (f"no feasible node for {low.service_ids[s]}",),
-                    )
-                skipped.append(low.service_ids[s])
-                continue
-            score = static[s].copy()
-            if placed.any():
-                pl = np.nonzero(placed)[0]
-                n_pl = ncur[pl]
-                w_out = W[s][:, pl]                              # [F, P]
-                colloc = np.zeros((F, N))
-                for f in range(F):
-                    colloc[f] = np.bincount(n_pl, weights=w_out[f],
-                                            minlength=N)
-                v_in = W[pl, fcur[pl], s]                        # [P]
-                in_colloc = np.bincount(n_pl, weights=v_in, minlength=N)
-                score += (w_out.sum(1)[:, None] - colloc
-                          + (v_in.sum() - in_colloc)[None, :])
-            score = np.where(feas, score, np.inf)
-            # row-major argmin == legacy tie-break: flavoursOrder rank,
-            # then node index
-            f, n = divmod(int(np.argmin(score)), N)
-            placed[s] = True
-            fcur[s], ncur[s] = f, n
-            cpu_load[n] += low.cpu_req[s, f]
-            ram_load[n] += low.ram_req[s, f]
-
-        # --- local search: the whole [S, F, N] single-relocation move grid
-        # is scored per step; best improving move applied until convergence.
-        deltas = self._delta_fn(static, W, stat_feas, low) \
-            if placed.any() else None
-        for _ in range(cfg.local_search_rounds * max(1, S) if deltas else 0):
-            delta = deltas(placed, fcur, ncur, cpu_load, ram_load)
-            k = int(np.argmin(delta))
-            s, r = divmod(k, F * N)
-            f, n = divmod(r, N)
-            if not np.asarray(delta).flat[k] < -_EPS:
-                break
-            cpu_load[ncur[s]] -= low.cpu_req[s, fcur[s]]
-            ram_load[ncur[s]] -= low.ram_req[s, fcur[s]]
-            fcur[s], ncur[s] = f, n
-            cpu_load[n] += low.cpu_req[s, f]
-            ram_load[n] += low.ram_req[s, f]
-
-        assign = {
-            low.service_ids[s]: (low.flavour_names[s][int(fcur[s])],
-                                 low.node_ids[int(ncur[s])])
-            for s in range(S) if placed[s]
-        }
-        placements = tuple(
-            Placement(sid, f, n) for sid, (f, n) in sorted(assign.items())
-        )
-        # tensor-only callers (a cached lowering, no object model) get the
-        # array twin of plan_emissions — same semantics, lowered inputs
-        total_g = plan_emissions(
-            app, infra, assign, computation, communication
-        ) if app is not None else lowered_emissions(low, placed, fcur, ncur)
-        return DeploymentPlan(
-            placements=placements,
-            skipped_services=tuple(skipped),
-            total_emissions_g=total_g,
-            feasible=True,
-            notes=tuple(notes),
-        )
+        if isinstance(app, PlacementProblem):
+            return self._plan_problem(app)
+        warnings.warn(_DEPRECATED_PLAN.format(name="plan"),
+                      DeprecationWarning, stacklevel=2)
+        problem = PlacementProblem.build(
+            app, infra, computation or {}, communication or {},
+            constraints=constraints, lowered=lowered, initial=initial)
+        return self._plan_problem(problem).plan
 
     def plan_batch(
         self,
-        app: Optional[Application],
-        infra: Optional[Infrastructure],
-        computation: Mapping[Tuple[str, str], float],
-        communication: Mapping[Tuple[str, str, str], float],
+        app,
+        infra: Optional[Infrastructure] = None,
+        computation: Optional[Mapping[Tuple[str, str], float]] = None,
+        communication: Optional[Mapping[Tuple[str, str, str], float]] = None,
         constraints: Sequence[Constraint] = (),
         scenarios: Optional[ScenarioBatch] = None,
         lowered: Optional[LoweredProblem] = None,
         initial: Optional[Mapping[str, Tuple[str, str]]] = None,
     ) -> List[DeploymentPlan]:
-        """Price B what-if branches of one problem in a single jit call.
+        """Deprecated shim: attach the scenario batch to a
+        ``PlacementProblem`` and call ``plan(problem)`` instead; this
+        forwards there and unwraps ``PlanResult.plans``."""
+        warnings.warn(_DEPRECATED_PLAN.format(name="plan_batch"),
+                      DeprecationWarning, stacklevel=2)
+        problem = PlacementProblem.build(
+            app, infra, computation or {}, communication or {},
+            constraints=constraints, scenarios=scenarios, lowered=lowered,
+            initial=initial)
+        return self._plan_problem(problem).plans
 
-        ``scenarios`` stacks per-branch carbon intensities ``ci[B, N]``
-        (and optionally computation profiles ``E[B, S, F]``) into a leading
-        axis; the whole batch — greedy construction (``lax.scan`` over the
-        service order) plus best-improvement local search over the
-        ``[S, F, N]`` move grid (``lax.while_loop``) — runs as ONE
-        jit/vmap-compiled program, instead of B sequential ``plan`` calls.
+    # -- the one real planning path ----------------------------------------
 
-        The per-branch algorithm is the same as ``plan`` (same scoring
-        tensors, same row-major tie-breaks, same improvement threshold
-        under x64), so each returned plan matches a per-scenario ``plan``
-        call; ``total_emissions_g`` is evaluated under the branch's own
-        ci/E.  ``initial`` warm-starts every branch from one shared
-        assignment with the same verify-or-rebuild rule as ``plan``.
-        """
+    def _plan_problem(self, problem: PlacementProblem) -> PlanResult:
         cfg = self.config
-        low = lowered if lowered is not None \
-            else lower(app, infra, computation, communication)
-        if scenarios is None:
-            scenarios = ScenarioBatch(ci=low.ci[None, :])
-        if not cfg.use_green_constraints:
-            constraints = ()
+        low = problem.lowering
+        constraints = problem.constraints if cfg.use_green_constraints \
+            else ()
         P, A = lower_constraints(low, constraints)
         stat_feas = _static_feasibility(low)
-        ci_b, E_b, order_b = scenarios.materialize(low)
-        S, F, N = low.S, low.F, low.N
+        scenarios = problem.scenarios
+        if scenarios is None:
+            scenarios = ScenarioBatch(
+                ci=np.asarray(low.ci, dtype=float)[None, :])
+        S, N = low.S, low.N
 
         notes: List[str] = []
         warm = None
+        initial = problem.initial_assignment
         if initial is not None:
             warm, err = _warm_start_state(low, stat_feas, initial)
             if warm is None:
@@ -503,15 +492,21 @@ class GreenScheduler:
             warm = (np.zeros(S, dtype=bool), np.zeros(S, dtype=np.int64),
                     np.zeros(S, dtype=np.int64), np.zeros(N), np.zeros(N))
 
+        if S == 0 or N == 0:
+            return self._degenerate_result(problem, low, scenarios, notes)
+        ci_b, E_b, order_b = scenarios.materialize(low)
+
         from jax.experimental import enable_x64
 
-        planner = _batched_planner()
-        # x64 for the same reason as the scalar jax path: keeps the batch
-        # bit-comparable to per-scenario NumPy planning.
+        planner = _batched_planner(low.comm.kind)
+        # x64 keeps branch plans bit-comparable across batch sizes and
+        # backends: a float32 downcast would drown the _EPS improvement
+        # threshold in rounding noise and let the local search ping-pong
+        # on near-ties.
         with enable_x64():
             out = planner(
                 ci_b, E_b, order_b, *warm,
-                low.K, low.has_link, P, A, stat_feas,
+                *low.comm.planner_args(), P, A, stat_feas,
                 low.cpu_req, low.ram_req, low.cpu_cap, low.ram_cap, low.must,
                 low.cost,
                 cfg.money_weight, cfg.pref_weight, cfg.emission_weight,
@@ -551,38 +546,41 @@ class GreenScheduler:
                 feasible=True,
                 notes=tuple(notes),
             ))
-        return plans
+        feas_mask = np.array([p.feasible for p in plans])
+        return PlanResult(
+            problem=problem, plans=plans, placed=placed_b, fcur=fcur_b,
+            ncur=ncur_b,
+            emissions_g=np.where(feas_mask, em_b, np.inf))
 
-    def _delta_fn(self, static, W, stat_feas, low: LoweredProblem):
-        """Bind the problem tensors into a move-grid evaluator."""
-        if not self.config.use_jax:
-            return lambda placed, fcur, ncur, cpu_load, ram_load: \
-                _move_deltas(np, static, W, stat_feas, low.cpu_req,
-                             low.ram_req, low.cpu_cap, low.ram_cap,
-                             placed, fcur, ncur, cpu_load, ram_load)
-        import jax
-        import jax.numpy as jnp
-        from jax.experimental import enable_x64
-
-        # x64 keeps the jax path bit-comparable to the NumPy baseline; a
-        # float32 downcast would drown the _EPS improvement threshold in
-        # rounding noise and let the local search ping-pong on near-ties.
-        with enable_x64():
-            consts = tuple(jnp.asarray(a) for a in (
-                static, W, stat_feas, low.cpu_req, low.ram_req,
-                low.cpu_cap, low.ram_cap))
-
-        @jax.jit
-        def jitted(placed, fcur, ncur, cpu_load, ram_load):
-            return _move_deltas(jnp, *consts, placed, fcur, ncur,
-                                cpu_load, ram_load)
-
-        def call(placed, fcur, ncur, cpu_load, ram_load):
-            with enable_x64():
-                return np.asarray(
-                    jitted(placed, fcur, ncur, cpu_load, ram_load))
-
-        return call
+    def _degenerate_result(self, problem, low, scenarios, notes) -> PlanResult:
+        """Host-side path for shape-degenerate problems (no services or no
+        nodes) — mirrors the greedy semantics with an empty candidate set:
+        optional services are skipped in construction order, the first
+        mandatory service makes the whole plan infeasible."""
+        skipped: List[str] = []
+        fail_sid: Optional[str] = None
+        if low.N == 0:
+            for s in map(int, low.order):
+                if low.must[s]:
+                    fail_sid = low.service_ids[s]
+                    break
+                skipped.append(low.service_ids[s])
+        if fail_sid is not None:
+            plan = DeploymentPlan(
+                placements=(), feasible=False,
+                notes=tuple(notes) + (f"no feasible node for {fail_sid}",))
+        else:
+            plan = DeploymentPlan(
+                placements=(), skipped_services=tuple(skipped),
+                total_emissions_g=0.0, feasible=True, notes=tuple(notes))
+        B, S = scenarios.B, low.S
+        return PlanResult(
+            problem=problem, plans=[plan] * B,
+            placed=np.zeros((B, S), dtype=bool),
+            fcur=np.zeros((B, S), dtype=np.int64),
+            ncur=np.zeros((B, S), dtype=np.int64),
+            emissions_g=np.zeros(B) if plan.feasible
+            else np.full(B, np.inf))
 
 
 # ---------------------------------------------------------------------------

@@ -216,17 +216,16 @@ class GreenPlacement:
 
         out = self.pipeline.run(app, infra, mon)
 
-        # The pipeline threads the enriched descriptions and Eq. 1/2
-        # profiles through its output; both schedulers share one dense
-        # lowering, cached across adaptive-loop iterations by the pipeline.
+        # The pipeline folds the enriched descriptions and Eq. 1/2
+        # profiles into ONE PlacementProblem; both schedulers share it (and
+        # its lowering, cached across adaptive-loop iterations).
         app, infra_e = out.app, out.infra
         comp, comm = out.computation, out.communication
-        lowered = self.pipeline.lowered_for(out)
-        plan = self.scheduler.plan(app, infra_e, comp, comm,
-                                   out.constraints, lowered=lowered)
+        problem = self.pipeline.problem_for(out)
+        plan = self.scheduler.plan(problem).plan
 
         baseline = GreenScheduler(SchedulerConfig.baseline()).plan(
-            app, infra_e, comp, comm, out.constraints, lowered=lowered)
+            problem).plan
         a_g = {p.service: (p.flavour, p.node) for p in plan.placements}
         a_b = {p.service: (p.flavour, p.node) for p in baseline.placements}
         stats = {

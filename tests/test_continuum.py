@@ -247,6 +247,87 @@ def test_kb_memory_decay_through_runtime_ticks():
     assert pipeline.kb.ck[new_key].mu == 1.0
 
 
+# ---------------------------------------------------------------------------
+# flavour-flap damping: in-place restarts must be charged (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+
+class _TieBreakerTrace:
+    """Workload whose two flavours are near-tied on energy: the cheaper
+    flavour alternates every tick, so an undamped runtime flip-flops the
+    flavour tick-to-tick (the node never changes — flavour flips are free
+    under a migration-only cost model)."""
+
+    def __init__(self, app, base=0.05, delta=0.002):
+        self.app = app
+        self.base, self.delta = base, delta
+
+    def monitoring(self, t):
+        from repro.core.types import EnergySample, MonitoringData
+
+        # f0 oscillates around f1: even ticks f1 is cheaper by delta,
+        # odd ticks f0 is — each flip promises a ~2*delta*ci/window saving
+        eps = self.delta if t % 2 == 0 else -self.delta
+        return MonitoringData(energy=tuple(
+            EnergySample(svc.component_id, fl, kwh, t=t)
+            for svc in self.app.services
+            for fl, kwh in (("f0", self.base + eps), ("f1", self.base))
+        ), traffic=())
+
+
+def _run_flap(restart_g, ticks=10):
+    app = Application("flap", (Service("svc", flavours=(
+        Flavour("f0", FlavourRequirements(cpu=1.0)),
+        Flavour("f1", FlavourRequirements(cpu=1.0)),
+    )),))
+    infra = Infrastructure("flap", (Node(
+        "only", region="flat", cost_per_cpu_hour=0.5,
+        capabilities=NodeCapabilities(cpu=4.0)),))
+    tr = CarbonTrace({"flat": RegionProfile(100.0, 0.0, 12.0, 0.0)},
+                     hours=60)
+    # emissions-only objective (pref/constraints off) so the flavour choice
+    # tracks the oscillating energy profile exactly
+    rt = ContinuumRuntime(
+        app, infra, tr, _TieBreakerTrace(app),
+        config=RuntimeConfig(scenarios=1, hysteresis_g=0.0,
+                             migration_g=0.0, restart_g=restart_g),
+        pipeline=GreenConstraintPipeline(),
+        planner=WhatIfPlanner(GreenScheduler(SchedulerConfig(
+            emission_weight=1.0, pref_weight=0.0,
+            use_green_constraints=False))))
+    return rt.run(start=24, ticks=ticks)
+
+
+def test_flavour_flap_damped_by_restart_cost():
+    undamped = _run_flap(restart_g=0.0)
+    # the tie really flaps without damping: flavour-only switches nearly
+    # every tick after the initial rollout, zero node migrations
+    flaps = sum(r.restarts for r in undamped.ticks[1:])
+    assert sum(r.switched for r in undamped.ticks[1:]) >= 3
+    assert flaps >= 3
+    assert all(r.migrations == 0 for r in undamped.ticks[1:])
+
+    damped = _run_flap(restart_g=50.0)
+    # restart cost far above the tiny tie-break saving: the incumbent
+    # flavour sticks for the whole run
+    assert sum(r.switched for r in damped.ticks[1:]) == 0
+    assert sum(r.restarts for r in damped.ticks) == 0
+    # damping must not change what is deployed, only how often it flips
+    assert set(damped.final_assignment) == set(undamped.final_assignment)
+
+
+def test_restart_cost_charged_on_switch():
+    undamped = _run_flap(restart_g=0.25)
+    # 0.25 g per restart is far below the ~0.4 g/window * 6 h saving, so
+    # flips still happen — but now each one pays the restart charge
+    charged = [r for r in undamped.ticks[1:] if r.switched]
+    assert charged, "expected at least one damped-but-paying switch"
+    for r in charged:
+        assert r.restarts >= 1
+        assert r.migration_g == pytest.approx(0.25 * r.restarts)
+        assert r.expected_saving_g > 0.25 * r.restarts  # hysteresis rule
+
+
 def test_green_placement_run_continuum_smoke():
     from repro.launch.green_placement import (
         GreenPlacement, JobSpec, PodSpec, TrafficSpec)

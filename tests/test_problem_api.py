@@ -1,0 +1,182 @@
+"""PlacementProblem-centric planner API: one problem pytree, one
+``plan(problem) -> PlanResult`` entrypoint, deprecation shims for the old
+positional signatures, and the pipeline's problem-keyed lowering cache."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import boutique
+from repro.core.lowering import ScenarioBatch
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.problem import PlacementProblem, PlanResult
+from repro.core.scheduler import GreenScheduler, SchedulerConfig
+
+from test_sparse_lowering import synth_dyadic
+
+
+@pytest.fixture(scope="module")
+def problem_and_inputs():
+    app, infra, comp, comm, cs = synth_dyadic(1)
+    return PlacementProblem.build(app, infra, comp, comm, cs), \
+        (app, infra, comp, comm, cs)
+
+
+# ---------------------------------------------------------------------------
+# single entrypoint
+# ---------------------------------------------------------------------------
+
+
+def test_plan_problem_returns_plan_result(problem_and_inputs):
+    problem, _ = problem_and_inputs
+    result = GreenScheduler(SchedulerConfig.green()).plan(problem)
+    assert isinstance(result, PlanResult)
+    assert result.B == 1 and len(result) == 1
+    assert result.plan.feasible
+    assert result.plan is result.plans[0]
+    # tensor-form assignment mirrors the plan objects
+    assert result.assignment(0) == {
+        p.service: (p.flavour, p.node) for p in result.plan.placements}
+
+
+def test_plan_result_plan_requires_single_branch(problem_and_inputs):
+    problem, _ = problem_and_inputs
+    low = problem.lowering
+    scen = ScenarioBatch(ci=np.tile(low.ci, (3, 1)))
+    result = GreenScheduler(SchedulerConfig.green()).plan(
+        problem.with_scenarios(scen))
+    assert result.B == 3
+    with pytest.raises(ValueError):
+        _ = result.plan
+    # identical branches -> identical plans
+    assert all(p.placements == result.plans[0].placements
+               for p in result.plans)
+
+
+def test_with_helpers_are_immutable(problem_and_inputs):
+    problem, _ = problem_and_inputs
+    low = problem.lowering
+    scen = ScenarioBatch(ci=low.ci[None, :] * 2.0)
+    p2 = problem.with_scenarios(scen).with_warm_start({})
+    assert problem.scenarios is None and problem.initial is None
+    assert p2.scenarios is scen and p2.initial == ()
+    assert p2.lowering is problem.lowering  # lowering shared, not copied
+
+
+def test_b_is_just_batched_path(problem_and_inputs):
+    """B=1 through a ScenarioBatch must equal the unbatched problem."""
+    problem, _ = problem_and_inputs
+    sched = GreenScheduler(SchedulerConfig(emission_weight=1.0))
+    unbatched = sched.plan(problem)
+    batched = sched.plan(problem.with_scenarios(
+        ScenarioBatch(ci=problem.lowering.ci[None, :])))
+    assert unbatched.plan.placements == batched.plans[0].placements
+    assert unbatched.plan.total_emissions_g \
+        == batched.plans[0].total_emissions_g
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_positional_plan_shim_warns_and_matches(problem_and_inputs):
+    problem, (app, infra, comp, comm, cs) = problem_and_inputs
+    sched = GreenScheduler(SchedulerConfig.green())
+    new = sched.plan(problem).plan
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        old = sched.plan(app, infra, comp, comm, cs)
+    assert old.placements == new.placements
+    assert old.total_emissions_g == new.total_emissions_g
+
+
+def test_plan_batch_shim_warns_and_matches(problem_and_inputs):
+    problem, (app, infra, comp, comm, cs) = problem_and_inputs
+    low = problem.lowering
+    ci_b = np.tile(low.ci, (2, 1)) * np.array([[1.0], [2.0]])
+    scen = ScenarioBatch(ci=ci_b)
+    sched = GreenScheduler(SchedulerConfig(emission_weight=1.0))
+    new = sched.plan(problem.with_scenarios(scen)).plans
+    with pytest.warns(DeprecationWarning, match="plan_batch"):
+        old = sched.plan_batch(app, infra, comp, comm, cs, scenarios=scen)
+    assert [p.placements for p in old] == [p.placements for p in new]
+
+
+def test_lowered_for_shim_warns():
+    app, infra, mon = boutique.scenario(1)
+    pipe = GreenConstraintPipeline()
+    out = pipe.run(app, infra, mon, use_kb=False)
+    with pytest.warns(DeprecationWarning, match="problem_for"):
+        low = pipe.lowered_for(out)
+    assert low is pipe.problem_for(out).lowering
+
+
+def test_new_entrypoints_do_not_warn(problem_and_inputs):
+    problem, _ = problem_and_inputs
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        GreenScheduler(SchedulerConfig.green()).plan(problem)
+
+
+# ---------------------------------------------------------------------------
+# pipeline: problem construction + lowering cache
+# ---------------------------------------------------------------------------
+
+
+def test_from_generator_output_carries_constraints():
+    app, infra, mon = boutique.scenario(1)
+    pipe = GreenConstraintPipeline()
+    out = pipe.run(app, infra, mon, use_kb=False)
+    problem = PlacementProblem.from_generator_output(out)
+    assert problem.constraints == tuple(out.constraints)
+    assert problem.lowering.S == len(out.app.services)
+
+
+def test_problem_for_reuses_cached_lowering():
+    app, infra, mon = boutique.scenario(1)
+    pipe = GreenConstraintPipeline()
+    out = pipe.run(app, infra, mon, use_kb=False)
+    p1 = pipe.problem_for(out)
+    p2 = pipe.problem_for(out)
+    assert p2.lowering is p1.lowering      # cache hit: same lowering object
+    assert p1 == p2                        # same content hash
+    # a different window invalidates the cache (profiles moved)
+    app3, infra3, mon3 = boutique.scenario(3)
+    out3 = pipe.run(app3, infra3, mon3, use_kb=False)
+    p3 = pipe.problem_for(out3)
+    assert p3.lowering is not p1.lowering
+    assert p3 != p1
+
+
+def test_fingerprint_tracks_content(problem_and_inputs):
+    problem, _ = problem_and_inputs
+    same = dataclasses.replace(problem)
+    assert problem == same and hash(problem) == hash(same)
+    low2 = dataclasses.replace(problem.lowering,
+                               ci=problem.lowering.ci * 2.0)
+    assert dataclasses.replace(problem, lowering=low2) != problem
+    assert problem.with_warm_start({}) != problem
+
+
+# ---------------------------------------------------------------------------
+# pytree
+# ---------------------------------------------------------------------------
+
+
+def test_problem_is_a_pytree(problem_and_inputs):
+    import jax
+
+    problem, _ = problem_and_inputs
+    leaves, tree = jax.tree_util.tree_flatten(problem)
+    assert all(isinstance(x, np.ndarray) for x in leaves)
+    rebuilt = jax.tree_util.tree_unflatten(tree, leaves)
+    assert rebuilt == problem
+    # a mapped problem keeps its structure (static fields intact)
+    doubled = jax.tree_util.tree_map(lambda x: x, problem)
+    assert doubled.lowering.service_ids == problem.lowering.service_ids
+    assert doubled.constraints == problem.constraints
+    # plans from the rebuilt problem are identical
+    sched = GreenScheduler(SchedulerConfig.green())
+    assert sched.plan(rebuilt).plan.placements \
+        == sched.plan(problem).plan.placements

@@ -146,16 +146,36 @@ def test_boutique_scenarios_match_or_beat_reference():
 
 
 @pytest.mark.parametrize("seed", range(5))
-def test_jax_path_matches_numpy_path(seed):
-    # the jax path runs under x64, so plans are bit-identical to NumPy's
+def test_lowering_backends_agree(seed):
+    # dense and sparse comm backends share one jit planner skeleton; on
+    # this (non-dyadic) synth distribution their plans must be equally
+    # good by the legacy objective (bit-exact equality is asserted on the
+    # dyadic suite in test_sparse_lowering.py)
+    from repro.core.problem import PlacementProblem
+
     app, infra, comp, comm, cs = synth(seed)
+    cfg = SchedulerConfig.green()
     plans = {}
-    for use_jax in (False, True):
-        cfg = SchedulerConfig.green()
-        cfg.use_jax = use_jax
-        plans[use_jax] = GreenScheduler(cfg).plan(app, infra, comp, comm, cs)
-    assert plans[True].placements == plans[False].placements
-    assert plans[True].skipped_services == plans[False].skipped_services
+    for backend in ("dense", "sparse"):
+        problem = PlacementProblem.build(app, infra, comp, comm, cs,
+                                         backend=backend)
+        plans[backend] = GreenScheduler(cfg).plan(problem).plan
+    assert plans["dense"].feasible == plans["sparse"].feasible
+    if not plans["dense"].feasible:
+        return
+    assert plans["dense"].skipped_services == plans["sparse"].skipped_services
+    j = {
+        k: reference_objective(
+            app, infra, comp, comm, cs, cfg,
+            {p.service: (p.flavour, p.node) for p in plan.placements})
+        for k, plan in plans.items()
+    }
+    assert j["dense"] == pytest.approx(j["sparse"], rel=1e-9, abs=1e-9)
+
+
+def test_use_jax_knob_warns_deprecated():
+    with pytest.warns(DeprecationWarning, match="use_jax"):
+        SchedulerConfig(use_jax=True)
 
 
 def test_pipeline_plan_threads_lowering():

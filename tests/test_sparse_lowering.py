@@ -1,0 +1,241 @@
+"""SparseCommLowering must bit-match DenseLowering.
+
+Randomized (seeded, deterministic) problems with exactly-representable
+(dyadic) values and power-of-two node counts, so every float product and
+sum the two backends compute is exact and therefore order-independent —
+"bit-match" is then a meaningful cross-backend assertion, not a tolerance.
+Covers all scheduler profiles, scenario batches, warm starts, and the
+degenerate comm shapes (empty communication, single service).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.lowering import (
+    DenseLowering,
+    SPARSE_AUTO_THRESHOLD,
+    SparseCommLowering,
+    ScenarioBatch,
+    lower,
+    lowered_emissions,
+)
+from repro.core.problem import PlacementProblem
+from repro.core.scheduler import (
+    GreenScheduler,
+    SchedulerConfig,
+    reference_objective,
+)
+from repro.core.types import (
+    Affinity,
+    Application,
+    AvoidNode,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+    ServiceRequirements,
+    Subnet,
+)
+
+
+def _dy(rnd, lo, hi, q=64):
+    """A dyadic rational in [lo, hi) with denominator q (power of two)."""
+    return rnd.randrange(int(lo * q), int(hi * q)) / q
+
+
+def synth_dyadic(seed, n_services=9, n_nodes=8, max_flavours=3, n_links=12):
+    """Same shape-space as the scheduler equivalence synth, but every float
+    is dyadic and ``n_nodes`` is a power of two (so ``ci.mean()`` is dyadic
+    too)."""
+    rnd = random.Random(seed)
+    services = []
+    for i in range(n_services):
+        fls = tuple(
+            Flavour(f"f{k}", requirements=FlavourRequirements(
+                cpu=rnd.choice([0.5, 1.0, 2.0]),
+                ram_gb=rnd.choice([1.0, 2.0, 4.0]),
+                availability=rnd.choice([0.0, 0.875])))
+            for k in range(rnd.randint(1, max_flavours)))
+        services.append(Service(
+            f"s{i}", must_deploy=rnd.random() < 0.8, flavours=fls,
+            requirements=ServiceRequirements(subnet=rnd.choice(list(Subnet)))))
+    nodes = tuple(
+        Node(f"n{j}",
+             carbon=_dy(rnd, 10, 600) if rnd.random() < 0.9 else None,
+             cost_per_cpu_hour=_dy(rnd, 0, 2),
+             capabilities=NodeCapabilities(
+                 cpu=rnd.choice([2.0, 4.0, 8.0]),
+                 ram_gb=rnd.choice([4.0, 16.0]),
+                 availability=rnd.choice([0.5, 0.9375]),
+                 subnet=rnd.choice([Subnet.PUBLIC, Subnet.PRIVATE])))
+        for j in range(n_nodes))
+    app = Application("a", tuple(services))
+    infra = Infrastructure("i", nodes)
+    comp = {(f"s{i}", f.name): _dy(rnd, 1, 100)
+            for i in range(n_services)
+            for f in services[i].flavours if rnd.random() < 0.8}
+    comm = {}
+    for _ in range(n_links):
+        i, j = rnd.randrange(n_services), rnd.randrange(n_services)
+        f = rnd.choice(services[i].flavours).name
+        comm[(f"s{i}", f, f"s{j}")] = _dy(rnd, 0.125, 50)
+    cs = []
+    for _ in range(6):
+        i, j = rnd.randrange(n_services), rnd.randrange(n_nodes)
+        f = rnd.choice(services[i].flavours).name
+        cs.append(AvoidNode(service=f"s{i}", flavour=f, node=f"n{j}",
+                            weight=_dy(rnd, 0.125, 1),
+                            memory_weight=_dy(rnd, 0.5, 1)))
+    for _ in range(3):
+        i, j = rnd.randrange(n_services), rnd.randrange(n_services)
+        cs.append(Affinity(service=f"s{i}", other=f"s{j}",
+                           weight=_dy(rnd, 0.125, 1)))
+    return app, infra, comp, comm, cs
+
+
+PROFILES = {
+    "green": SchedulerConfig.green,
+    "oracle": SchedulerConfig.oracle,
+    # dyadic emission weight: keeps every objective term exact
+    "mixed": lambda: SchedulerConfig(emission_weight=0.25),
+}
+
+
+def _problems(app, infra, comp, comm, cs):
+    dense = PlacementProblem.build(app, infra, comp, comm, cs,
+                                   backend="dense")
+    sparse = PlacementProblem.build(app, infra, comp, comm, cs,
+                                    backend="sparse")
+    assert isinstance(dense.lowering.comm, DenseLowering)
+    assert isinstance(sparse.lowering.comm, SparseCommLowering)
+    return dense, sparse
+
+
+def _assert_bit_match(app, infra, comp, comm, cs, cfg, p_dense, p_sparse):
+    sched = GreenScheduler(cfg)
+    rd = sched.plan(p_dense)
+    rs = sched.plan(p_sparse)
+    for b, (pd, ps) in enumerate(zip(rd.plans, rs.plans)):
+        assert pd.feasible == ps.feasible, b
+        assert pd.notes == ps.notes, b
+        if not pd.feasible:
+            continue
+        assert pd.placements == ps.placements, b
+        assert pd.skipped_services == ps.skipped_services, b
+        # exact equality, not a tolerance: all sums are dyadic-exact
+        assert pd.total_emissions_g == ps.total_emissions_g, b
+        a = {p.service: (p.flavour, p.node) for p in pd.placements}
+        j_d = reference_objective(app, infra, comp, comm, cs, cfg, a)
+        a = {p.service: (p.flavour, p.node) for p in ps.placements}
+        j_s = reference_objective(app, infra, comp, comm, cs, cfg, a)
+        assert j_d == j_s, (b, j_d, j_s)
+    return rd, rs
+
+
+@pytest.mark.parametrize("profile", sorted(PROFILES))
+@pytest.mark.parametrize("seed", range(10))
+def test_sparse_matches_dense_randomized(seed, profile):
+    app, infra, comp, comm, cs = synth_dyadic(seed)
+    p_dense, p_sparse = _problems(app, infra, comp, comm, cs)
+    _assert_bit_match(app, infra, comp, comm, cs, PROFILES[profile](),
+                      p_dense, p_sparse)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_sparse_matches_dense_scenario_batch(seed):
+    app, infra, comp, comm, cs = synth_dyadic(seed)
+    p_dense, p_sparse = _problems(app, infra, comp, comm, cs)
+    low = p_dense.lowering
+    rng = np.random.default_rng(seed)
+    ci_b = rng.integers(64, 40000, size=(4, low.N)) / 64.0
+    scen = ScenarioBatch(ci=ci_b)
+    _assert_bit_match(app, infra, comp, comm, cs,
+                      SchedulerConfig(emission_weight=1.0),
+                      p_dense.with_scenarios(scen),
+                      p_sparse.with_scenarios(scen))
+
+
+def test_sparse_matches_dense_warm_start():
+    app, infra, comp, comm, cs = synth_dyadic(2)
+    p_dense, p_sparse = _problems(app, infra, comp, comm, cs)
+    sched = GreenScheduler(SchedulerConfig.green())
+    init = {p.service: (p.flavour, p.node)
+            for p in sched.plan(p_dense).plan.placements}
+    rd = sched.plan(p_dense.with_warm_start(init))
+    rs = sched.plan(p_sparse.with_warm_start(init))
+    assert rd.plan.placements == rs.plan.placements
+    assert rd.plan.notes == rs.plan.notes == ()
+
+
+def test_empty_communication():
+    app, infra, comp, _, cs = synth_dyadic(3)
+    p_dense, p_sparse = _problems(app, infra, comp, {}, cs)
+    assert p_sparse.lowering.comm.n_links == 0
+    _assert_bit_match(app, infra, comp, {}, cs, SchedulerConfig.green(),
+                      p_dense, p_sparse)
+
+
+def test_single_service():
+    svc = Service("solo", flavours=(
+        Flavour("f0", FlavourRequirements(cpu=1.0)),
+        Flavour("f1", FlavourRequirements(cpu=0.5)),
+    ))
+    app = Application("a", (svc,))
+    infra = Infrastructure("i", (
+        Node("n0", carbon=128.0, capabilities=NodeCapabilities(cpu=4.0)),
+        Node("n1", carbon=64.0, capabilities=NodeCapabilities(cpu=4.0)),
+    ))
+    comp = {("solo", "f0"): 2.0, ("solo", "f1"): 4.0}
+    # self-links are dropped by lowering: sparse edge list must be empty
+    comm = {("solo", "f0", "solo"): 8.0}
+    p_dense, p_sparse = _problems(app, infra, comp, comm, ())
+    assert p_sparse.lowering.comm.n_links == 0
+    _assert_bit_match(app, infra, comp, comm, (),
+                      SchedulerConfig(emission_weight=1.0),
+                      p_dense, p_sparse)
+
+
+def test_densify_roundtrip():
+    app, infra, comp, comm, cs = synth_dyadic(4)
+    low_d = lower(app, infra, comp, comm, backend="dense")
+    low_s = lower(app, infra, comp, comm, backend="sparse")
+    np.testing.assert_array_equal(low_s.K, low_d.K)
+    np.testing.assert_array_equal(low_s.has_link, low_d.has_link)
+    assert low_s.comm.n_links == low_d.comm.n_links
+
+
+def test_pairwise_energy_matches_dense_gather():
+    app, infra, comp, comm, cs = synth_dyadic(5)
+    low_d = lower(app, infra, comp, comm, backend="dense")
+    low_s = lower(app, infra, comp, comm, backend="sparse")
+    rng = np.random.default_rng(0)
+    S = low_d.S
+    for _ in range(5):
+        placed = rng.random(S) < 0.8
+        fcur = np.array([rng.integers(0, max(len(f), 1))
+                         for f in low_d.flavour_names])
+        ncur = rng.integers(0, low_d.N, size=S)
+        assert (low_s.comm.pairwise_energy(placed, fcur, ncur)
+                == low_d.comm.pairwise_energy(placed, fcur, ncur))
+        assert lowered_emissions(low_s, placed, fcur, ncur) \
+            == lowered_emissions(low_d, placed, fcur, ncur)
+
+
+def test_auto_backend_threshold(monkeypatch):
+    app, infra, comp, comm, cs = synth_dyadic(0)
+    low = lower(app, infra, comp, comm, backend="auto")
+    assert isinstance(low.comm, DenseLowering)   # tiny problem stays dense
+    import repro.core.lowering as L
+    monkeypatch.setattr(L, "SPARSE_AUTO_THRESHOLD", 1)
+    low = lower(app, infra, comp, comm, backend="auto")
+    assert isinstance(low.comm, SparseCommLowering)
+    assert SPARSE_AUTO_THRESHOLD > 1  # module constant untouched
+
+
+def test_unknown_backend_rejected():
+    app, infra, comp, comm, cs = synth_dyadic(0)
+    with pytest.raises(ValueError):
+        lower(app, infra, comp, comm, backend="banana")
