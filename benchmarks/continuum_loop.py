@@ -10,15 +10,24 @@ Three policies on identical carbon/workload traces:
     with no hysteresis (upper bound on temporal savings).
 
 Also times batched (one jit/vmap call) vs sequential (B separate ``plan``
-calls) what-if evaluation of the same scenario ensemble.  Writes
-``BENCH_continuum.json``; asserts adaptive <= static and the batched
-speedup floor.
+calls) what-if evaluation of the same scenario ensemble, and — on a
+larger continuum (more services/nodes, where re-lowering costs real
+time) — runs the adaptive loop twice over the same 7-day trace with the
+per-tick delta fast path ON vs OFF: per-tick rebuild/replan wall-time
+percentiles (p50/p95) and XLA compile counts land in the
+``delta_replanning`` block, tick decisions must bit-match, and the
+problem-rebuild p50 must drop by >= 2x.  Writes ``BENCH_continuum.json``;
+asserts adaptive <= static and the batched speedup floor.
 
   PYTHONPATH=src python -m benchmarks.continuum_loop [--smoke]
 """
 import argparse
 import json
 import time
+
+import numpy as np
+
+from benchmarks.jax_cache import enable_persistent_cache
 
 from repro.continuum import (
     CarbonTrace,
@@ -44,6 +53,9 @@ from repro.core.types import (
 
 OUT_JSON = "BENCH_continuum.json"
 REQUIRED_SPEEDUP = 5.0  # batched vs sequential what-if, acceptance floor
+# Per-tick problem-rebuild p50 must drop by at least this factor when the
+# delta fast path replaces full re-lowering (gated on the full trace).
+DELTA_REBUILD_SPEEDUP = 2.0
 
 
 def build_scenario(n_services=12, nodes_per_region=2,
@@ -114,6 +126,99 @@ def _timed(fn):
     return time.perf_counter() - t0
 
 
+def time_replan_paths(report, ticks, seed=0, n_services=96,
+                      nodes_per_region=16, B=4, gate=True):
+    """The adaptive loop twice over the SAME trace: per-tick delta fast
+    path (ci/E/K array substitution into the cached lowering) vs full
+    re-lowering every tick.
+
+    Run on a larger continuum than the emissions policies — at this
+    scale the full re-lower's O(S*N) object walk costs real per-tick
+    time, which is exactly what the delta path deletes.  Decisions must
+    BIT-MATCH (same plans, same switches, same emissions: the
+    substituted lowering is value-identical to a fresh one); the delta
+    path must cut the per-tick problem-rebuild p50 by >=
+    :data:`DELTA_REBUILD_SPEEDUP`.  Whole-replan (rebuild + batched
+    what-if pricing) percentiles and XLA compile counts are reported for
+    the same ticks.
+    """
+    start = 24
+    app, infra = build_scenario(n_services=n_services,
+                                nodes_per_region=nodes_per_region)
+    carbon = CarbonTrace(REGION_PRESETS, hours=start + ticks + 25,
+                         seed=seed)
+    workload = WorkloadTrace(app, seed=seed)
+    report(f"\n# Delta replanning: {ticks} ticks, "
+           f"{len(app.services)} services, {len(infra.nodes)} nodes, "
+           f"B={B} (adaptive loop, same trace, fast path on/off)")
+    report(f"{'mode':>16} {'rebuild_p50':>12} {'rebuild_p95':>12} "
+           f"{'replan_p50':>11} {'replan_p95':>11} {'compiles':>9}")
+    # warm the jit cache for this problem shape BEFORE timing either
+    # mode: otherwise whichever mode runs first pays every in-process
+    # XLA compile and the cross-mode percentiles/compile counts compare
+    # cache warmth, not the delta path
+    warmup = ContinuumRuntime(
+        app, infra, carbon, workload,
+        config=RuntimeConfig(scenarios=B, hysteresis_g=30.0),
+        pipeline=GreenConstraintPipeline(), planner=_carbon_planner())
+    warmup.run(start=start, ticks=1)
+    modes, decisions = {}, {}
+    for name, delta in (("full_relower", False), ("delta_fast_path", True)):
+        runtime = ContinuumRuntime(
+            app, infra, carbon, workload,
+            config=RuntimeConfig(scenarios=B, hysteresis_g=30.0,
+                                 delta_replanning=delta),
+            pipeline=GreenConstraintPipeline(), planner=_carbon_planner())
+        t0 = time.perf_counter()
+        result = runtime.run(start=start, ticks=ticks)
+        wall = time.perf_counter() - t0
+        recs = result.ticks
+        rebuild = np.array([r.rebuild_s for r in recs])
+        replan = np.array([r.replan_s for r in recs])
+        paths = {}
+        for r in recs:
+            paths[r.lowering_path] = paths.get(r.lowering_path, 0) + 1
+        modes[name] = {
+            "ticks": len(recs),
+            "rebuild_p50_ms": float(np.percentile(rebuild, 50)) * 1e3,
+            "rebuild_p95_ms": float(np.percentile(rebuild, 95)) * 1e3,
+            "replan_p50_ms": float(np.percentile(replan, 50)) * 1e3,
+            "replan_p95_ms": float(np.percentile(replan, 95)) * 1e3,
+            "xla_compiles": int(sum(r.compiles for r in recs)),
+            "lowering_paths": paths,
+            "wall_s": wall,
+        }
+        decisions[name] = [
+            (r.emissions_g, r.migration_g, r.switched, r.migrations,
+             r.restarts, r.expected_saving_g) for r in recs]
+        m = modes[name]
+        report(f"{name:>16} {m['rebuild_p50_ms']:>10.2f}ms "
+               f"{m['rebuild_p95_ms']:>10.2f}ms {m['replan_p50_ms']:>9.1f}ms "
+               f"{m['replan_p95_ms']:>9.1f}ms {m['xla_compiles']:>9d}")
+    # identical emissions/switch decisions, tick for tick, bit for bit
+    assert decisions["full_relower"] == decisions["delta_fast_path"], \
+        "delta fast path changed the loop's decisions"
+    speedup = (modes["full_relower"]["rebuild_p50_ms"]
+               / max(modes["delta_fast_path"]["rebuild_p50_ms"], 1e-9))
+    replan_speedup = (modes["full_relower"]["replan_p50_ms"]
+                      / max(modes["delta_fast_path"]["replan_p50_ms"],
+                            1e-9))
+    report(f"# rebuild p50 speedup {speedup:.1f}x "
+           f"(floor {DELTA_REBUILD_SPEEDUP:.0f}x); whole-replan p50 "
+           f"{replan_speedup:.2f}x; decisions bit-matched")
+    if gate:
+        assert speedup >= DELTA_REBUILD_SPEEDUP, modes
+    return {
+        "scenario": {"ticks": ticks, "services": n_services,
+                     "nodes": nodes_per_region * 3, "scenarios_B": B,
+                     "seed": seed},
+        "modes": modes,
+        "rebuild_p50_speedup": speedup,
+        "replan_p50_speedup": replan_speedup,
+        "decisions_bit_match": True,
+    }
+
+
 def run(report=print, days=7, smoke=False, out_json=OUT_JSON, seed=0):
     start = 24
     ticks = 48 if smoke else days * 24
@@ -161,6 +266,11 @@ def run(report=print, days=7, smoke=False, out_json=OUT_JSON, seed=0):
     if not smoke:
         assert timing["speedup"] >= REQUIRED_SPEEDUP, timing
 
+    # delta fast path vs full re-lowering (the >= 2x rebuild gate only on
+    # the full 7-day trace: short smoke traces are jitter-dominated)
+    delta = time_replan_paths(report, ticks=24 if smoke else ticks,
+                              seed=seed, gate=not smoke)
+
     out = {
         "scenario": {"ticks": ticks, "services": len(app.services),
                      "nodes": len(infra.nodes), "scenarios_B": B,
@@ -169,6 +279,7 @@ def run(report=print, days=7, smoke=False, out_json=OUT_JSON, seed=0):
         "adaptive_vs_static_saved_frac": saved,
         "oracle_headroom_captured_frac": captured,
         "whatif_timing": timing,
+        "delta_replanning": delta,
     }
     if out_json:
         with open(out_json, "w") as fh:
@@ -184,6 +295,7 @@ def main():
                          "tracked BENCH json")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    enable_persistent_cache()
     run(smoke=args.smoke,
         out_json=args.out if args.out else (None if args.smoke else OUT_JSON))
 

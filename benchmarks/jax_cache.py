@@ -1,0 +1,39 @@
+"""Opt-in persistent XLA compilation cache for benchmarks and CI.
+
+When ``JAX_COMPILATION_CACHE_DIR`` is set, compiled planner programs are
+serialized there and reloaded on the next process start — so CI (and any
+repeated local benchmarking) stops paying the multi-second cold compile
+for shapes it has already built.  Pairs with the shape-bucketed planner
+cache: bucketing keeps the number of DISTINCT programs small, persistence
+keeps them warm across processes.
+"""
+import os
+
+
+def enable_persistent_cache(report=print) -> bool:
+    """Point jax's compilation cache at ``$JAX_COMPILATION_CACHE_DIR``.
+
+    Returns True when enabled.  No-op (False) when the variable is unset
+    or this jax build lacks the config knobs.
+    """
+    cache_dir = os.environ.get("JAX_COMPILATION_CACHE_DIR")
+    if not cache_dir:
+        return False
+    import jax
+
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+    except Exception as exc:  # pragma: no cover — very old jax
+        report(f"# persistent compilation cache unavailable: {exc}")
+        return False
+    # cache every program, however small/fast-compiling (defaults skip
+    # sub-second compiles — most of the smoke-suite programs)
+    for knob, value in (
+            ("jax_persistent_cache_min_compile_time_secs", 0.0),
+            ("jax_persistent_cache_min_entry_size_bytes", -1)):
+        try:
+            jax.config.update(knob, value)
+        except Exception:  # knob name drift across jax versions
+            pass
+    report(f"# persistent XLA compilation cache: {cache_dir}")
+    return True

@@ -36,6 +36,8 @@ def main() -> None:
          {"sweep": ((50, 25), (100, 50)),
           "vec_only_sweep": ((200, 100),),
           "sparse_points": ((600, 100),),
+          "cache_shapes": scheduler_scalability.CACHE_SWEEP_SMOKE,
+          "overhead_point": (100, 50),
           "out_json": None} if quick else {}),
         ("continuum_loop (adaptive loop, 7-day trace)", continuum_loop.run,
          # quick mode shortens the trace and must not overwrite the tracked

@@ -14,6 +14,13 @@ einsum are reported infeasible to materialize by the auto-selection
 policy (``SPARSE_AUTO_THRESHOLD``), and records what the dense backend
 WOULD have allocated.
 
+A compile-cache section (run FIRST, against a cold planner cache) plans a
+mixed-shape sweep through the shape-bucketed planner (``BucketSpec`` grid
+with the acceptance point (200, 100) as a boundary): every shape rounds
+up to one bucket, so >= 8 shapes must cost >= 4x fewer XLA compiles than
+shapes, and bucketed steady-state plan time at the boundary must stay
+within 1.25x of the exact-shape time.
+
 Writes ``BENCH_scheduler.json`` so the perf trajectory is tracked
 PR-over-PR; asserts the array-native plan's objective never exceeds the
 legacy plan's, that dense and sparse backends agree at a shared point,
@@ -21,7 +28,10 @@ and that the speedup at (S=200, N=100) is at least 10x.
 
 CI runs ``--smoke --check BENCH_scheduler.json``: a small sweep whose
 measured speedup must stay within --tolerance (default 20%) of the
-committed baseline's at the same point.
+committed baseline's at the same point, plus the compile-cache hit-rate
+gate over the mixed-shape smoke sweep.  Set
+``JAX_COMPILATION_CACHE_DIR`` to persist compiled programs across runs
+(CI caches it so cold compiles are paid once per toolchain bump).
 
   PYTHONPATH=src python -m benchmarks.scheduler_scalability [--smoke]
       [--check BENCH_scheduler.json] [--tolerance 0.2]
@@ -32,13 +42,17 @@ import random
 import sys
 import time
 
+from benchmarks.jax_cache import enable_persistent_cache
+
 from repro.core.lowering import SPARSE_AUTO_THRESHOLD, lower
-from repro.core.problem import PlacementProblem
+from repro.core.problem import BucketSpec, PlacementProblem
 from repro.core.scheduler import (
     GreenScheduler,
     ReferenceScheduler,
     SchedulerConfig,
+    compile_cache_stats,
     reference_objective,
+    reset_compile_cache_counters,
 )
 from repro.core.types import (
     Affinity,
@@ -62,6 +76,24 @@ REQUIRED_SPEEDUP = 10.0          # acceptance floor at (200, 100)
 # relative check alone.
 SMOKE_SPEEDUP_FLOOR = 200.0
 FLAVOURS = 2
+
+# Bucket boundaries for the compile-cache sweep: an explicit grid tuned
+# to the sweep envelope (the acceptance point (200, 100) is a boundary,
+# so bucketed planning there pays no padding overhead).
+BUCKET_GRID = BucketSpec.grid(
+    s=(25, 50, 100, 200, 400, 800, 1600),
+    f=(2, 4),
+    n=(25, 50, 100, 200, 400),
+    b=(1, 2, 4, 8, 16),
+)
+# Mixed shapes that all round up to the (200, 100) bucket (full mode) /
+# the (100, 50) bucket (smoke): >= 4x fewer XLA compiles than shapes.
+CACHE_SWEEP = ((110, 60), (120, 70), (130, 80), (140, 90),
+               (150, 100), (160, 60), (180, 80), (200, 100))
+CACHE_SWEEP_SMOKE = ((60, 30), (70, 35), (80, 40), (100, 50))
+# Bucketed steady-state time at the acceptance point must stay within
+# this factor of the exact-shape time (the point IS a bucket boundary).
+BUCKET_OVERHEAD_CEILING = 1.25
 
 
 def synth(n_services: int, n_nodes: int, seed: int = 0,
@@ -124,10 +156,113 @@ def _timed_plan(cfg, problem, repeats: int = 1):
     return best, result.plan
 
 
+def compile_cache_sweep(report, shapes, rounds: int, repeats: int,
+                        overhead_point=None):
+    """Plan a mixed-shape sweep through the shape-bucketed planner cache.
+
+    Every shape in ``shapes`` rounds up to ONE bucket of
+    :data:`BUCKET_GRID`, so the whole sweep should trigger at most one
+    XLA compile (asserted at >= 4x fewer compiles than shapes — the CI
+    hit-rate gate).  When ``overhead_point`` is given (a bucket-boundary
+    shape), also measures bucketed vs exact-shape steady-state plan time
+    there and asserts the ratio stays under
+    :data:`BUCKET_OVERHEAD_CEILING`.  MUST run before anything else
+    compiles planner programs, or the compile count is understated.
+    """
+    cfg = SchedulerConfig.green()
+    cfg.local_search_rounds = rounds
+    cfg.bucket = BUCKET_GRID
+    sched = GreenScheduler(cfg)
+    reset_compile_cache_counters()
+    rows = []
+    report("\n# Compile cache: mixed shapes, one bucket, one XLA program")
+    report(f"{'S':>5} {'N':>5} {'bucket':>12} {'compiled':>9} "
+           f"{'t_plan_s':>9}")
+    for S, N in shapes:
+        app, infra, comp, comm, cs = synth(S, N)
+        problem = PlacementProblem.build(app, infra, comp, comm, cs)
+        t0 = time.perf_counter()
+        result = sched.plan(problem)
+        dt = time.perf_counter() - t0
+        assert result.plan.feasible
+        st = result.stats
+        rows.append({"S": S, "N": N, "bucket": list(st.padded_shape[1:4]),
+                     "compiled": st.compiled, "t_plan_s": dt})
+        report(f"{S:>5} {N:>5} {str(st.padded_shape[1:4]):>12} "
+               f"{str(st.compiled):>9} {dt:>9.3f}")
+    stats = compile_cache_stats()
+    compiles, hits = stats["misses"], stats["hits"]
+    expected_hits = len(shapes) - max(1, len(shapes) // 4)
+    report(f"# {len(shapes)} shapes -> {compiles} XLA compile(s), "
+           f"{hits} cache hits ({stats['compile_time_s']:.1f}s compiling)")
+    assert compiles * 4 <= len(shapes), (
+        f"compile-cache gate: {compiles} compiles for {len(shapes)} "
+        f"shapes (need >= 4x fewer)")
+    assert hits >= expected_hits, (hits, expected_hits)
+
+    out = {"bucket_grid": {"s": BUCKET_GRID.s, "f": BUCKET_GRID.f,
+                           "n": BUCKET_GRID.n, "b": BUCKET_GRID.b},
+           "shapes": len(shapes), "compiles": compiles, "hits": hits,
+           "expected_hits": expected_hits,
+           "compile_time_s": stats["compile_time_s"], "sweep": rows}
+
+    if overhead_point is not None:
+        cfg_exact = SchedulerConfig.green()
+        cfg_exact.local_search_rounds = rounds
+        S, N = overhead_point
+        t_exact, t_bucketed = _interleaved_times(
+            cfg_exact, cfg, synth(S, N), repeats)
+        ratio = t_bucketed / max(t_exact, 1e-9)
+        report(f"# bucketed steady-state at ({S}, {N}): "
+               f"{t_bucketed*1e3:.1f}ms vs exact {t_exact*1e3:.1f}ms "
+               f"-> {ratio:.2f}x (ceiling {BUCKET_OVERHEAD_CEILING}x)")
+        assert ratio <= BUCKET_OVERHEAD_CEILING, (t_bucketed, t_exact)
+        out["overhead"] = {"S": S, "N": N, "t_exact_s": t_exact,
+                           "t_bucketed_s": t_bucketed, "ratio": ratio}
+        # interior point: padding overhead when the shape is strictly
+        # inside the bucket (informational, not gated — you pay for the
+        # bucket you round up to)
+        S_i, N_i = shapes[len(shapes) // 2]
+        t_exact_i, t_bucket_i = _interleaved_times(
+            cfg_exact, cfg, synth(S_i, N_i), repeats)
+        out["interior_overhead"] = {
+            "S": S_i, "N": N_i, "t_exact_s": t_exact_i,
+            "t_bucketed_s": t_bucket_i,
+            "ratio": t_bucket_i / max(t_exact_i, 1e-9)}
+        report(f"# interior ({S_i}, {N_i}): bucketed "
+               f"{t_bucket_i*1e3:.1f}ms vs exact {t_exact_i*1e3:.1f}ms "
+               f"(informational)")
+    return out
+
+
+def _interleaved_times(cfg_a, cfg_b, scenario, repeats: int):
+    """Best-of-``repeats`` steady-state plan time for two configs on one
+    problem, ALTERNATING a/b per round so slow host drift (frequency
+    scaling, background load over a long benchmark run) biases neither
+    side — the overhead gate compares their ratio."""
+    app, infra, comp, comm, cs = scenario
+    problem = PlacementProblem.build(app, infra, comp, comm, cs)
+    scheds = (GreenScheduler(cfg_a), GreenScheduler(cfg_b))
+    for s in scheds:
+        s.plan(problem)  # warmup: compile / prime the program cache
+    best = [None, None]
+    for _ in range(max(repeats, 3)):
+        for i, s in enumerate(scheds):
+            t0 = time.perf_counter()
+            s.plan(problem)
+            dt = time.perf_counter() - t0
+            best[i] = dt if best[i] is None else min(best[i], dt)
+    return best[0], best[1]
+
+
 def run(report=print, sweep=((50, 25), (100, 50), (200, 100)),
         vec_only_sweep=((500, 200), (1000, 400)),
         sparse_points=((2000, 200),), rounds: int = 2,
-        repeats: int = 3, out_json: str = OUT_JSON):
+        repeats: int = 3, out_json: str = OUT_JSON,
+        cache_shapes=CACHE_SWEEP, overhead_point=(200, 100)):
+    # the compile-cache sweep must see a cold planner cache: run it first
+    cache_out = compile_cache_sweep(report, cache_shapes, rounds, repeats,
+                                    overhead_point=overhead_point)
     cfg = SchedulerConfig.green()
     cfg.local_search_rounds = rounds
     rows = []
@@ -245,7 +380,7 @@ def run(report=print, sweep=((50, 25), (100, 50), (200, 100)),
     out = {"config": {"local_search_rounds": rounds, "profile": "green",
                       "timing": "post-compile (one warmup per shape)"},
            "old_vs_vectorized": rows, "vectorized_only": vec_rows,
-           "sparse_backend": sparse_rows}
+           "sparse_backend": sparse_rows, "compile_cache": cache_out}
     if out_json:
         with open(out_json, "w") as fh:
             json.dump(out, fh, indent=2)
@@ -280,6 +415,14 @@ def check_regression(out, baseline_path, tolerance=0.2, report=print):
                f"vs baseline {b['speedup']:.1f}x -> {ratio:.2f}, "
                f"J_vec {r['J_vec']:.3f} vs {b['J_vec']:.3f} [{verdict}]")
         ok &= j_ok and perf_ok
+    # compile-cache hit rate: hard-gated by the asserts inside
+    # compile_cache_sweep (which runs before this on every --smoke /
+    # full invocation); reported here so the --check log shows it
+    cc = out.get("compile_cache")
+    if cc:
+        report(f"# compile cache (gated in-sweep): {cc['compiles']} "
+               f"compile(s) / {cc['shapes']} shapes, {cc['hits']} hits "
+               f"(expect >= {cc['expected_hits']})")
     if ok:
         report(f"# regression gate passed (tolerance {tolerance:.0%})")
     return ok
@@ -296,6 +439,7 @@ def main():
     ap.add_argument("--tolerance", type=float, default=0.2)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    enable_persistent_cache()
     if args.smoke:
         # (100, 50) with best-of-5: at (50, 25) the array-native plan is
         # ~2 ms and dispatch jitter swings the speedup ratio by 2x; at
@@ -303,7 +447,8 @@ def main():
         # legacy side still finishes in ~20 s
         out = run(sweep=((100, 50),), vec_only_sweep=(),
                   sparse_points=((600, 100),), repeats=5,
-                  out_json=args.out)
+                  out_json=args.out, cache_shapes=CACHE_SWEEP_SMOKE,
+                  overhead_point=(100, 50))
     else:
         out = run(out_json=args.out if args.out else OUT_JSON)
     if args.check and not check_regression(out, args.check,

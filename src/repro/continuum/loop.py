@@ -28,12 +28,18 @@ Each tick (= one observation window, one hour):
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.lowering import ScenarioBatch, lowered_emissions
 from repro.core.pipeline import GreenConstraintPipeline
-from repro.core.scheduler import GreenScheduler, SchedulerConfig
+from repro.core.problem import BucketSpec
+from repro.core.scheduler import (
+    COMPILE_CACHE,
+    GreenScheduler,
+    SchedulerConfig,
+)
 from repro.core.types import Application, Infrastructure
 
 from .traces import CarbonTrace, WorkloadTrace
@@ -64,6 +70,14 @@ class RuntimeConfig:
     use_whatif: bool = True    # batched ensemble vs single-forecast plan
     oracle: bool = False       # price the TRUE future window (upper bound)
     use_kb: bool = True
+    # Per-tick delta fast path: rebuild the lowering by ci/E array
+    # substitution when only profiles drifted (False = full re-lowering
+    # every tick — the benchmark baseline).
+    delta_replanning: bool = True
+    # Shape-bucketed compile cache for the what-if planner: pad problem
+    # shapes to bucket boundaries so drifting shapes (services appearing /
+    # leaving, ensembles resizing) reuse one compiled XLA program.
+    bucket: Optional[BucketSpec] = None
 
 
 @dataclass
@@ -78,6 +92,15 @@ class TickRecord:
     n_constraints: int
     warm_start_rejected: bool
     restarts: int = 0           # flavour-only (in-place) changes this tick
+    # Replanning telemetry: wall time of the problem REBUILD alone
+    # (``problem_for`` — what the delta fast path accelerates), of the
+    # whole replan (rebuild + what-if pricing), how the lowering was
+    # obtained ("cache_hit" | "delta" | "full"), and XLA programs
+    # compiled during this tick's replan.
+    rebuild_s: float = 0.0
+    replan_s: float = 0.0
+    lowering_path: str = "none"
+    compiles: int = 0
 
 
 @dataclass
@@ -124,8 +147,23 @@ class ContinuumRuntime:
     last_result: Optional[object] = field(default=None, repr=False)
 
     def __post_init__(self) -> None:
+        import dataclasses
+
         self._node_regions = [
             n.region or n.node_id for n in self.infra.nodes]
+        # the runtime drives the pipeline tick-to-tick (it already owns
+        # the gatherer's signal/forecast hooks), so the delta knob is
+        # applied directly; the PLANNER may be shared/injected, so a
+        # bucket override swaps in a fresh scheduler+config instead of
+        # mutating the caller's (bucket=None leaves the planner's own
+        # configuration untouched)
+        self.pipeline.delta_substitution = self.config.delta_replanning
+        if self.config.bucket is not None:
+            sched = self.planner.scheduler
+            self.planner = dataclasses.replace(
+                self.planner,
+                scheduler=GreenScheduler(dataclasses.replace(
+                    sched.config, bucket=self.config.bucket)))
 
     def tick(self, t: int) -> TickRecord:
         """One adaptive-loop iteration.  Repoints the pipeline gatherer's
@@ -141,11 +179,23 @@ class ContinuumRuntime:
         mon = self.workload.monitoring(t)
 
         # 2. constraints + enriched problem (KB decay happens inside); one
-        # PlacementProblem per tick, lowering cached by the pipeline
+        # PlacementProblem per tick, lowering cached by the pipeline (the
+        # delta fast path array-substitutes ci/E when only profiles moved)
         out = self.pipeline.run(self.app, self.infra, mon,
                                 use_kb=cfg.use_kb)
+        stats0 = dict(self.pipeline.lowering_stats)
+        misses0 = COMPILE_CACHE.misses
+        t_replan0 = time.perf_counter()
         problem = self.pipeline.problem_for(out)
+        rebuild_s = time.perf_counter() - t_replan0
         low = problem.lowering
+        stats1 = self.pipeline.lowering_stats
+        if stats1["delta_substitutions"] > stats0["delta_substitutions"]:
+            lowering_path = "delta"
+        elif stats1["cache_hits"] > stats0["cache_hits"]:
+            lowering_path = "cache_hit"
+        else:
+            lowering_path = "full"
 
         replanned = (t % max(cfg.replan_every, 1) == 0) \
             or self.current is None
@@ -195,6 +245,8 @@ class ContinuumRuntime:
                         migrations = moved
                         restarts = flapped
                         migration_g = cost
+        replan_s = time.perf_counter() - t_replan0
+        compiles = COMPILE_CACHE.misses - misses0
 
         # 5. accounting under the TRUE instantaneous carbon intensity
         emissions = 0.0
@@ -209,7 +261,8 @@ class ContinuumRuntime:
             expected_saving_g=expected_saving,
             n_constraints=len(out.constraints),
             warm_start_rejected=warm_rejected,
-            restarts=restarts)
+            restarts=restarts, rebuild_s=rebuild_s, replan_s=replan_s,
+            lowering_path=lowering_path, compiles=compiles)
 
     def run(self, start: int, ticks: int) -> ContinuumResult:
         gatherer = self.pipeline.gatherer

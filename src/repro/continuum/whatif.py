@@ -16,14 +16,13 @@ tests and the batched-vs-sequential benchmark.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.lowering import LoweredProblem, ScenarioBatch
-from repro.core.problem import PlacementProblem
+from repro.core.problem import PlacementProblem, PlanStats
 from repro.core.scheduler import GreenScheduler, SchedulerConfig
 from repro.core.types import Constraint, DeploymentPlan
 
@@ -61,6 +60,9 @@ class WhatIfResult:
     # expected_g[i] — mean over forecast branches (inf for infeasible plans)
     expected_g: np.ndarray
     best_index: int
+    # compile-cache / timing telemetry of the one batched plan call (None
+    # on the sequential reference path, which makes B separate calls)
+    plan_stats: Optional[PlanStats] = None
 
     @property
     def best_plan(self) -> DeploymentPlan:
@@ -103,6 +105,7 @@ def _score(
     plans: List[DeploymentPlan],
     scenarios: ScenarioBatch,
     arrays: Optional[Sequence[Tuple]] = None,
+    plan_stats: Optional[PlanStats] = None,
 ) -> WhatIfResult:
     feas = [i for i, p in enumerate(plans) if p.feasible]
     em = np.full((len(plans), scenarios.B), np.inf)
@@ -115,22 +118,21 @@ def _score(
     expected = em.mean(axis=1)
     best = int(np.argmin(expected))
     return WhatIfResult(plans=plans, scenarios=scenarios, emissions_g=em,
-                        expected_g=expected, best_index=best)
+                        expected_g=expected, best_index=best,
+                        plan_stats=plan_stats)
 
 
-def _coerce_problem(problem, scenarios, constraints, initial,
-                    stacklevel: int = 3) -> PlacementProblem:
-    """Accept either a PlacementProblem (new API; keyword overrides are
-    folded in) or a bare LoweredProblem (legacy, deprecated)."""
+def _coerce_problem(problem: PlacementProblem, scenarios, constraints,
+                    initial) -> PlacementProblem:
+    """Fold the keyword convenience overrides into the problem.  (The
+    pre-PlacementProblem ``evaluate(LoweredProblem, ...)`` form was
+    removed; pass a problem and attach the batch with
+    ``problem.with_scenarios``.)"""
     if isinstance(problem, LoweredProblem):
-        warnings.warn(
-            "WhatIfPlanner.evaluate(LoweredProblem, scenarios, ...) is "
-            "deprecated; pass a PlacementProblem "
-            "(problem.with_scenarios(batch)) instead",
-            DeprecationWarning, stacklevel=stacklevel)
-        return PlacementProblem(
-            lowering=problem, constraints=tuple(constraints or ()),
-            scenarios=scenarios, initial=initial)
+        raise TypeError(
+            "WhatIfPlanner.evaluate takes a PlacementProblem (wrap the "
+            "lowering: PlacementProblem(lowering=low).with_scenarios("
+            "batch)); the bare-LoweredProblem form was removed")
     if scenarios is not None:
         problem = problem.with_scenarios(scenarios)
     if constraints is not None:
@@ -169,7 +171,7 @@ class WhatIfPlanner:
         result = self.scheduler.plan(problem)
         arrays = [result.arrays(b) for b in range(result.B)]
         return _score(problem.lowering, result.plans, problem.scenarios,
-                      arrays=arrays)
+                      arrays=arrays, plan_stats=result.stats)
 
     def evaluate_sequential(
         self,

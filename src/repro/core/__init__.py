@@ -22,15 +22,19 @@ from .lowering import (
     SparseCommLowering,
     lower,
     lower_constraints,
+    pad_lowering,
+    substitute_profiles,
 )
 from .pipeline import GeneratorOutput, GreenConstraintPipeline
-from .problem import PlacementProblem, PlanResult
+from .problem import BucketSpec, PlacementProblem, PlanResult, PlanStats
 from .ranker import ConstraintRanker
 from .scheduler import (
     GreenScheduler,
     ReferenceScheduler,
     SchedulerConfig,
+    compile_cache_stats,
     reference_objective,
+    reset_compile_cache_counters,
 )
 from .types import (
     Affinity,

@@ -52,7 +52,7 @@ Everything is plain NumPy; the arrays are directly consumable by
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import ClassVar, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -262,59 +262,24 @@ def lower(
     service_ids = tuple(s.component_id for s in services)
     node_ids = tuple(n.node_id for n in nodes)
     flavour_names = tuple(s.flavours_order for s in services)
-    sidx = {sid: i for i, sid in enumerate(service_ids)}
 
-    E = np.zeros((S, F))
     cpu_req = np.zeros((S, F))
     ram_req = np.zeros((S, F))
     avail_req = np.zeros((S, F))
     valid = np.zeros((S, F), dtype=bool)
     must = np.array([s.must_deploy for s in services], dtype=bool)
 
-    max_profile = np.zeros(S)  # greedy-order key: max energy over flavours
     for i, svc in enumerate(services):
         for f, fname in enumerate(svc.flavours_order):
             fl = svc.flavour(fname)
-            e = computation.get((svc.component_id, fname))
-            if e is None:
-                e = fl.energy_kwh if fl.energy_kwh is not None else 0.0
-            E[i, f] = e
             cpu_req[i, f] = fl.requirements.cpu
             ram_req[i, f] = fl.requirements.ram_gb
             avail_req[i, f] = fl.requirements.availability
             valid[i, f] = True
-        # the reference greedy keys on *all* flavours, not just ordered ones
-        profiles = []
-        for fl in svc.flavours:
-            e = computation.get((svc.component_id, fl.name))
-            if e is None:
-                e = fl.energy_kwh if fl.energy_kwh is not None else 0.0
-            profiles.append(e)
-        max_profile[i] = max(profiles, default=0.0)
-    # stable sort, heaviest first — matches sorted(key=-max_energy)
-    order = np.argsort(-max_profile, kind="stable")
+    E, order = _profile_tensors(services, computation, F)
+    comm = _build_comm(S, F, _comm_edges(services, communication), backend)
 
-    # one filtering pass over the communication map; sorted so both
-    # backends see the links in the same deterministic order
-    edges: List[Tuple[int, int, int, float]] = []
-    for (s, fname, z), e in communication.items():
-        i, j = sidx.get(s), sidx.get(z)
-        if i is None or j is None or i == j:
-            continue
-        try:
-            f = services[i].flavours_order.index(fname)
-        except ValueError:
-            continue
-        edges.append((i, f, j, float(e)))
-    edges.sort()
-    comm = _build_comm(S, F, edges, backend)
-
-    cis = [n.carbon for n in nodes if n.carbon is not None]
-    mean_ci = float(sum(cis) / len(cis)) if cis else 0.0
-    ci = np.array(
-        [n.carbon if n.carbon is not None else mean_ci for n in nodes],
-        dtype=float,
-    ) if N else np.zeros(0)
+    ci, mean_ci = _carbon_tensors(nodes)
     cost = np.array([n.cost_per_cpu_hour for n in nodes], dtype=float)
     cpu_cap = np.array([n.capabilities.cpu for n in nodes], dtype=float)
     ram_cap = np.array([n.capabilities.ram_gb for n in nodes], dtype=float)
@@ -360,6 +325,200 @@ def _build_comm(S: int, F: int, edges: Sequence[Tuple[int, int, int, float]],
         K[i, f, j] = e
         has_link[i, f, j] = True
     return DenseLowering(K=K, has_link=has_link)
+
+
+def _comm_edges(
+    services, communication: Mapping[Tuple[str, str, str], float],
+) -> List[Tuple[int, int, int, float]]:
+    """One filtering pass over the communication map -> sorted COO edges;
+    sorted so both backends see the links in the same deterministic
+    order.  Entries with unknown endpoints, unknown source flavours, or
+    self-links can never contribute to the objective and are dropped."""
+    sidx = {s.component_id: i for i, s in enumerate(services)}
+    edges: List[Tuple[int, int, int, float]] = []
+    for (s, fname, z), e in communication.items():
+        i, j = sidx.get(s), sidx.get(z)
+        if i is None or j is None or i == j:
+            continue
+        try:
+            f = services[i].flavours_order.index(fname)
+        except ValueError:
+            continue
+        edges.append((i, f, j, float(e)))
+    edges.sort()
+    return edges
+
+
+def _profile_tensors(
+    services, computation: Mapping[Tuple[str, str], float], F: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """``(E[S, F], order[S])`` — the per-tick drifting application tensors
+    (shared by :func:`lower` and :func:`substitute_profiles` so the delta
+    fast path is bit-identical to a full re-lowering)."""
+    S = len(services)
+    E = np.zeros((S, F))
+    max_profile = np.zeros(S)  # greedy-order key: max energy over flavours
+    for i, svc in enumerate(services):
+        for f, fname in enumerate(svc.flavours_order):
+            fl = svc.flavour(fname)
+            e = computation.get((svc.component_id, fname))
+            if e is None:
+                e = fl.energy_kwh if fl.energy_kwh is not None else 0.0
+            E[i, f] = e
+        # the reference greedy keys on *all* flavours, not just ordered ones
+        profiles = []
+        for fl in svc.flavours:
+            e = computation.get((svc.component_id, fl.name))
+            if e is None:
+                e = fl.energy_kwh if fl.energy_kwh is not None else 0.0
+            profiles.append(e)
+        max_profile[i] = max(profiles, default=0.0)
+    # stable sort, heaviest first — matches sorted(key=-max_energy)
+    order = np.argsort(-max_profile, kind="stable")
+    return E, order
+
+
+def _carbon_tensors(nodes) -> Tuple[np.ndarray, float]:
+    """``(ci[N], mean_ci)`` — mean-filled carbon intensities."""
+    cis = [n.carbon for n in nodes if n.carbon is not None]
+    mean_ci = float(sum(cis) / len(cis)) if cis else 0.0
+    ci = np.array(
+        [n.carbon if n.carbon is not None else mean_ci for n in nodes],
+        dtype=float,
+    ) if len(nodes) else np.zeros(0)
+    return ci, mean_ci
+
+
+def substitute_profiles(
+    low: LoweredProblem,
+    app: Application,
+    infra: Infrastructure,
+    computation: Mapping[Tuple[str, str], float],
+    communication: Optional[Mapping[Tuple[str, str, str], float]] = None,
+) -> LoweredProblem:
+    """Delta fast path: rebuild ONLY the per-tick drifting VALUE tensors —
+    ``E``/``order`` (computation profiles), ``ci``/``mean_ci`` (carbon
+    intensities), and optionally the communication energies ``K``/``k``
+    (same edge structure, new values) — into an existing lowering.
+
+    Every structural tensor (requirements, capacities, subnet/validity
+    masks) is shared by reference with ``low``, so this is
+    O(S*F + N + L) instead of the full O(S*(F + N) + S*N) object walk of
+    :func:`lower` (the subnet-compatibility matrix alone is S*N Python
+    calls).  The caller is responsible for structural identity: same
+    services, flavours, requirements, nodes (up to their carbon values),
+    subnets, and communication KEYS as the run that produced ``low`` —
+    the pipeline's delta cache checks exactly that before calling here.
+    The result is bit-identical to a full re-lowering of the same inputs
+    (:func:`_profile_tensors` / :func:`_carbon_tensors` /
+    :func:`_comm_edges` are shared with :func:`lower`).
+    """
+    E, order = _profile_tensors(app.services, computation, low.F)
+    ci, mean_ci = _carbon_tensors(infra.nodes)
+    fields = dict(E=E, order=order, ci=ci, mean_ci=mean_ci)
+    if communication is not None:
+        fields["comm"] = _build_comm(
+            low.S, low.F, _comm_edges(app.services, communication),
+            low.comm.kind)
+    return replace(low, **fields)
+
+
+def pad_lowering(
+    low: LoweredProblem, S_pad: int, F_pad: int, N_pad: int,
+    L_pad: Optional[int] = None,
+) -> LoweredProblem:
+    """Pad a lowering to bucket dimensions with masked-out phantom
+    services/flavours/nodes/edges.
+
+    Phantom entries are inert by construction, so the padded problem plans
+    identically to the unpadded one (then slice the planner outputs back
+    to the real ``[B, :S]``):
+
+    * phantom services: zero energy, ``valid``/``must`` False, zero
+      requirements — statically infeasible everywhere, optional, skipped
+      by the greedy with no effect on loads; appended to the END of the
+      construction ``order`` so real services keep their relative order;
+    * phantom flavour slots: ``valid`` False — masked in every candidate
+      grid;
+    * phantom nodes: ``compat`` False for every service, zero capacity,
+      zero cost/CI — never feasible, never loaded, and the pairwise mean
+      CI stays the REAL mean (``mean_ci`` is threaded through unchanged;
+      the planner takes the branch mean as an explicit argument rather
+      than averaging the padded ``ci``);
+    * phantom edges (sparse backend): zero weight, endpoints at the last
+      (phantom) service index so the affinity gather ``A[src, dst]`` is
+      provably zero — requires ``S_pad > S`` whenever ``L_pad > L``
+      (``BucketSpec.pad_dims`` guarantees it).
+
+    Real cells keep their row-major relative order inside every padded
+    grid, so argmin tie-breaks are unchanged; with exact (e.g. dyadic)
+    arithmetic the padded plan is bit-identical to the unpadded one.
+    """
+    S, F, N = low.S, low.F, low.N
+    if (S_pad, F_pad, N_pad) == (S, F, N) and (
+            L_pad is None or low.comm.kind != "sparse"
+            or L_pad == low.comm.n_links):
+        return low
+    if S_pad < S or F_pad < F or N_pad < N:
+        raise ValueError(
+            f"pad_lowering cannot shrink: ({S}, {F}, {N}) -> "
+            f"({S_pad}, {F_pad}, {N_pad})")
+
+    def pad(a: np.ndarray, shape: Tuple[int, ...]) -> np.ndarray:
+        out = np.zeros(shape, dtype=a.dtype)
+        out[tuple(slice(0, d) for d in a.shape)] = a
+        return out
+
+    comm = low.comm
+    if comm.kind == "dense":
+        comm = DenseLowering(
+            K=pad(comm.K, (S_pad, F_pad, S_pad)),
+            has_link=pad(comm.has_link, (S_pad, F_pad, S_pad)))
+    else:
+        L = comm.n_links
+        L_pad = L if L_pad is None else L_pad
+        if L_pad < L:
+            raise ValueError(f"pad_lowering cannot drop edges: {L} -> "
+                             f"{L_pad}")
+        if L_pad > L and S_pad <= S:
+            raise ValueError(
+                "phantom edges need a phantom service endpoint "
+                f"(S_pad={S_pad} must exceed S={S} when L_pad={L_pad} > "
+                f"L={L})")
+        phantom = S_pad - 1  # unplaceable: zero affinity, zero pay
+        comm = SparseCommLowering(
+            S=S_pad, F=F_pad,
+            src=np.concatenate([
+                comm.src, np.full(L_pad - L, phantom, dtype=np.int64)]),
+            fidx=np.concatenate([
+                comm.fidx, np.zeros(L_pad - L, dtype=np.int64)]),
+            dst=np.concatenate([
+                comm.dst, np.full(L_pad - L, phantom, dtype=np.int64)]),
+            k=np.concatenate([comm.k, np.zeros(L_pad - L)]))
+
+    return replace(
+        low,
+        service_ids=low.service_ids + tuple(
+            f"__pad_s{i}" for i in range(S, S_pad)),
+        node_ids=low.node_ids + tuple(
+            f"__pad_n{j}" for j in range(N, N_pad)),
+        flavour_names=low.flavour_names + ((),) * (S_pad - S),
+        E=pad(low.E, (S_pad, F_pad)),
+        comm=comm,
+        cpu_req=pad(low.cpu_req, (S_pad, F_pad)),
+        ram_req=pad(low.ram_req, (S_pad, F_pad)),
+        avail_req=pad(low.avail_req, (S_pad, F_pad)),
+        valid=pad(low.valid, (S_pad, F_pad)),
+        must=pad(low.must, (S_pad,)),
+        order=np.concatenate([
+            low.order, np.arange(S, S_pad, dtype=low.order.dtype)]),
+        ci=pad(low.ci, (N_pad,)),
+        cost=pad(low.cost, (N_pad,)),
+        cpu_cap=pad(low.cpu_cap, (N_pad,)),
+        ram_cap=pad(low.ram_cap, (N_pad,)),
+        avail_cap=pad(low.avail_cap, (N_pad,)),
+        compat=pad(low.compat, (S_pad, N_pad)),
+    )
 
 
 @dataclass

@@ -13,7 +13,6 @@ closes the loop: constraints -> array-native scheduler -> deployment plan.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -23,7 +22,7 @@ from .explain import ExplainabilityReport, generate_report
 from .generator import ConstraintGenerator
 from .kb import KBEnricher, KnowledgeBase
 from .library import ConstraintLibrary
-from .lowering import LoweredProblem, lower
+from .lowering import LoweredProblem, lower, substitute_profiles
 from .problem import PlacementProblem
 from .ranker import ConstraintRanker
 from .scheduler import GreenScheduler, SchedulerConfig
@@ -34,6 +33,35 @@ from .types import (
     Infrastructure,
     MonitoringData,
 )
+
+
+def _structural_key(out: "GeneratorOutput") -> Tuple:
+    """Identity of everything the delta fast path does NOT rebuild.
+
+    Exactly the structural inputs :func:`~repro.core.lowering.lower`
+    reads into mask/capacity tensors — service identities, mandatory
+    flags, flavour slots and their requirements, subnet requirements,
+    node identities/costs/capabilities — plus the communication EDGE SET
+    (keys only).  Deliberately excluded: every estimator/gatherer-
+    enriched VALUE (flavour ``energy_kwh``, node ``carbon`` and its
+    forecast, per-edge communication energies) — when two ticks agree on
+    this key they may still differ in ``ci[N]``, ``E[S, F]``, and edge
+    energies, exactly the value tensors
+    :func:`~repro.core.lowering.substitute_profiles` swaps in.  Built as
+    plain tuples (not stripped dataclass copies): this key is computed
+    every tick of the adaptive loop, on the replanning hot path.
+    """
+    return (
+        tuple(
+            (s.component_id, s.must_deploy, s.flavours_order,
+             s.requirements,
+             tuple((f.name, f.requirements) for f in s.flavours))
+            for s in out.app.services),
+        tuple(
+            (n.node_id, n.cost_per_cpu_hour, n.capabilities)
+            for n in out.infra.nodes),
+        tuple(sorted(out.communication)),
+    )
 
 
 @dataclass
@@ -66,14 +94,27 @@ class GreenConstraintPipeline:
     flavour_scope: str = "current"
     tau_scope: str = "candidates"
     iteration: int = 0
-    # One-slot lowering cache, keyed on the PlacementProblem's lowering
-    # identity (PlacementProblem.cache_key): profiles drift every iteration
-    # so the key covers the profile values too — the cache saves the
-    # O(S*F*(S+N)) re-lowering when the loop replans on an unchanged
-    # window (e.g. multi-config what-ifs).  Constraints are NOT part of the
-    # key: they ride on the problem, not the lowering.
-    _lowering_cache: Optional[Tuple[tuple, LoweredProblem]] = field(
+    # Per-tick delta fast path: when consecutive ticks differ only in
+    # ci[N] / E[S, F] values (same structure, same masks), rebuild the
+    # lowering by array-substitution into the cached one instead of a
+    # full re-lower.  Disable to force a full lower() on every profile
+    # drift (benchmark baseline / debugging).
+    delta_substitution: bool = True
+    # One-slot lowering cache: ``(full_key, structural_key, lowering)``.
+    # The full key (PlacementProblem.cache_key) covers every lowered
+    # value, so an exact match reuses the lowering object untouched; the
+    # structural key covers everything EXCEPT the drifting ci/E profiles,
+    # so a structural-only match takes the substitution fast path.
+    # Constraints are part of neither: they ride on the problem, not the
+    # lowering.
+    _lowering_cache: Optional[
+        Tuple[tuple, Optional[tuple], LoweredProblem]] = field(
         default=None, repr=False, compare=False)
+    # Observability: how each problem_for call resolved its lowering.
+    lowering_stats: Dict[str, int] = field(
+        default_factory=lambda: {
+            "cache_hits": 0, "delta_substitutions": 0, "full_lowers": 0},
+        repr=False, compare=False)
 
     def run(
         self,
@@ -141,27 +182,41 @@ class GreenConstraintPipeline:
 
     def problem_for(self, out: GeneratorOutput,
                     backend: str = "auto") -> PlacementProblem:
-        """Fold one pipeline iteration into a :class:`PlacementProblem`,
-        reusing the cached lowering when the lowering inputs are unchanged
-        (the problem's constraints always come fresh from ``out`` — KB
+        """Fold one pipeline iteration into a :class:`PlacementProblem`.
+
+        Three resolution tiers, cheapest first (counted in
+        ``lowering_stats``):
+
+        1. *cache hit* — the lowering inputs are value-identical to the
+           cached tick: reuse the lowering object untouched;
+        2. *delta substitution* — only ``ci[N]`` / ``E[S, F]`` moved
+           (same structure, same masks): array-substitute the drifting
+           profiles into the cached lowering
+           (:func:`~repro.core.lowering.substitute_profiles`, O(S*F + N)
+           instead of the full object walk);
+        3. *full lower* — anything structural changed.
+
+        The problem's constraints always come fresh from ``out`` — KB
         memory decay re-weights them every tick without touching the
-        lowering)."""
+        lowering.
+        """
         key = (backend, PlacementProblem.cache_key(out))
-        if self._lowering_cache is not None \
-                and self._lowering_cache[0] == key:
-            low = self._lowering_cache[1]
+        cache = self._lowering_cache
+        if cache is not None and cache[0] == key:
+            low = cache[2]
+            self.lowering_stats["cache_hits"] += 1
         else:
-            low = lower(out.app, out.infra, out.computation,
-                        out.communication, backend=backend)
-            self._lowering_cache = (key, low)
+            skey = (backend, _structural_key(out)) \
+                if self.delta_substitution else None
+            if cache is not None and skey is not None and cache[1] == skey:
+                low = substitute_profiles(
+                    cache[2], out.app, out.infra, out.computation,
+                    out.communication)
+                self.lowering_stats["delta_substitutions"] += 1
+            else:
+                low = lower(out.app, out.infra, out.computation,
+                            out.communication, backend=backend)
+                self.lowering_stats["full_lowers"] += 1
+            self._lowering_cache = (key, skey, low)
         return PlacementProblem(lowering=low,
                                 constraints=tuple(out.constraints))
-
-    def lowered_for(self, out: GeneratorOutput) -> LoweredProblem:
-        """Deprecated: use ``problem_for(out)`` (the scheduler now takes a
-        PlacementProblem; its ``.lowering`` is what this used to return)."""
-        warnings.warn(
-            "GreenConstraintPipeline.lowered_for is deprecated; use "
-            "problem_for(out) and pass the PlacementProblem to "
-            "GreenScheduler.plan", DeprecationWarning, stacklevel=2)
-        return self.problem_for(out).lowering

@@ -38,6 +38,117 @@ Assignment = Mapping[str, Tuple[str, str]]
 FrozenAssignment = Tuple[Tuple[str, Tuple[str, str]], ...]
 
 
+def _round_up(x: int, grid: Tuple[int, ...], floor: int) -> int:
+    """Smallest bucket boundary >= x: the next grid value when a grid is
+    given (values beyond the grid stay exact — no padding), else the next
+    power of two at or above ``floor``."""
+    if x <= 0:
+        return 0
+    if grid:
+        for g in grid:
+            if g >= x:
+                return g
+        return x
+    p = max(floor, 1)
+    while p < x:
+        p *= 2
+    return p
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """Shape-bucket boundaries for the planner's compile cache.
+
+    Every distinct ``(B, S, F, N, L)`` problem shape is a distinct XLA
+    program: the jit'd greedy ``lax.scan`` + move-grid ``lax.while_loop``
+    recompiles per shape (seconds at scale) even though the program is
+    identical.  A ``BucketSpec`` rounds each dimension UP to a bucket
+    boundary; the problem tensors are padded with masked-out phantom
+    services/flavours/nodes/edges (zero energy, all-False feasibility
+    masks, zero-weight COO edges) so every shape inside a bucket reuses
+    ONE compiled program.  Phantom entries can never be placed, never
+    carry objective weight, and never perturb tie-breaks (real cells keep
+    their relative row-major order), so bucketed plans match the unpadded
+    path decision-for-decision — bit-identical whenever the arithmetic is
+    exact (see tests/test_bucketing.py's dyadic suite).
+
+    Per-dimension boundaries are either an explicit ascending grid (tuned
+    to a workload envelope; shapes beyond the last grid value fall back to
+    exact — no padding) or, when the grid is empty, powers of two with a
+    per-dimension floor.  ``L`` only keys sparse-comm programs (the dense
+    backend's tensors carry no edge axis).
+    """
+
+    s: Tuple[int, ...] = ()     # services
+    f: Tuple[int, ...] = ()     # flavour slots
+    n: Tuple[int, ...] = ()     # nodes
+    l: Tuple[int, ...] = ()     # COO comm edges (sparse backend only)
+    b: Tuple[int, ...] = ()     # scenario branches
+    s_floor: int = 8
+    n_floor: int = 8
+    l_floor: int = 8
+
+    def __post_init__(self) -> None:
+        for name in ("s", "f", "n", "l", "b"):
+            grid = tuple(getattr(self, name))
+            if any(g <= 0 for g in grid) or list(grid) != sorted(set(grid)):
+                raise ValueError(
+                    f"BucketSpec.{name} must be a strictly ascending "
+                    f"positive grid, got {grid!r}")
+            object.__setattr__(self, name, grid)
+
+    @classmethod
+    def grid(cls, s=(), f=(), n=(), l=(), b=()) -> "BucketSpec":
+        """Explicit bucket boundaries per dimension (ascending)."""
+        return cls(s=tuple(s), f=tuple(f), n=tuple(n), l=tuple(l),
+                   b=tuple(b))
+
+    def pad_dims(self, S: int, F: int, N: int, L: Optional[int],
+                 B: int) -> Tuple[int, int, int, Optional[int], int]:
+        """Bucketed ``(S, F, N, L, B)``.  ``L`` is None for the dense comm
+        backend.  When phantom edges are needed (L padded) but S sits
+        exactly on its boundary, S is bumped one bucket up: phantom edges
+        must point at a phantom service so their affinity gather is
+        provably zero."""
+        S_pad = _round_up(S, self.s, self.s_floor)
+        F_pad = _round_up(F, self.f, 1)
+        N_pad = _round_up(N, self.n, self.n_floor)
+        B_pad = _round_up(B, self.b, 1)
+        L_pad = None
+        if L is not None:
+            L_pad = _round_up(L, self.l, self.l_floor)
+            if L_pad > L and S_pad == S:
+                S_pad = _round_up(S + 1, self.s, self.s_floor)
+        return S_pad, F_pad, N_pad, L_pad, B_pad
+
+
+@dataclass(frozen=True)
+class PlanStats:
+    """Per-call planner telemetry carried on ``PlanResult.stats``.
+
+    ``signature`` is the compile-cache key — the communication-backend
+    kind plus the (possibly bucket-padded) ``(B, S, F, N, L)`` program
+    shape.  ``compiled`` is True when this call built the program for
+    the first time in this process (``compile_time_s`` then includes
+    that first execution; with jax's persistent compilation cache
+    enabled the build may be a fast deserialization rather than a cold
+    XLA compile).  The cumulative ``cache_hits``/``cache_misses``
+    counters snapshot the process-wide planner compile cache after this
+    call.
+    """
+
+    backend: str
+    shape: Tuple[int, int, int, int, Optional[int]]        # (B, S, F, N, L)
+    padded_shape: Tuple[int, int, int, int, Optional[int]]
+    signature: Tuple
+    bucketed: bool
+    compiled: bool
+    compile_time_s: float
+    plan_time_s: float
+    cache_hits: int
+    cache_misses: int
+
+
 def _freeze_initial(initial) -> Optional[FrozenAssignment]:
     if initial is None:
         return None
@@ -202,6 +313,7 @@ class PlanResult:
     fcur: np.ndarray         # [B, S] flavour slot per service
     ncur: np.ndarray         # [B, S] node index per service
     emissions_g: np.ndarray  # [B] branch emissions (inf where infeasible)
+    stats: Optional[PlanStats] = None  # compile-cache/timing telemetry
 
     @property
     def B(self) -> int:

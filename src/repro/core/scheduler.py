@@ -24,9 +24,13 @@ Two implementations share the objective:
   once per problem shape — an unbatched problem is simply B=1 on the same
   program.  Pairwise communication terms come from the lowering's
   pluggable backend: dense ``[S, F, S]`` einsums (``DenseLowering``) or
-  COO segment sums (``SparseCommLowering``).  The pre-PlacementProblem
-  positional signatures (``plan(app, infra, computation, ...)`` and
-  ``plan_batch``) survive as deprecation shims for one release.
+  COO segment sums (``SparseCommLowering``).  With a
+  ``SchedulerConfig.bucket`` (:class:`~repro.core.problem.BucketSpec`),
+  problem shapes are rounded up to bucket boundaries and padded with
+  masked-out phantom entries so one compiled program serves every shape
+  in the bucket; the planner compile cache tracks hits/misses/compile
+  time per bucket signature (``compile_cache_stats()``), and every
+  ``PlanResult`` carries its call's telemetry on ``.stats``.
 * ``ReferenceScheduler`` — the legacy object-walking greedy +
   first-improvement local search, retained verbatim for equivalence testing
   and old-vs-new benchmarking.  ``reference_objective`` exposes its
@@ -40,6 +44,7 @@ Three standard profiles:
 """
 from __future__ import annotations
 
+import time
 import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
@@ -52,8 +57,9 @@ from .lowering import (
     ScenarioBatch,
     batched_lowered_emissions,
     lower_constraints,
+    pad_lowering,
 )
-from .problem import PlacementProblem, PlanResult
+from .problem import BucketSpec, PlacementProblem, PlanResult, PlanStats
 from .types import (
     Affinity,
     Application,
@@ -69,12 +75,6 @@ from .types import (
 # incumbent by more than this to be taken).
 _EPS = 1e-12
 
-_DEPRECATED_PLAN = (
-    "GreenScheduler.{name}(app, infra, computation, communication, ...) is "
-    "deprecated; build a PlacementProblem (PlacementProblem.build(...), "
-    "PlacementProblem.from_generator_output(out), or "
-    "pipeline.problem_for(out)) and call plan(problem) instead")
-
 
 @dataclass
 class SchedulerConfig:
@@ -84,6 +84,11 @@ class SchedulerConfig:
     green_penalty: float = 5.0
     use_green_constraints: bool = True
     local_search_rounds: int = 50
+    # Shape-bucketed compile cache: when set, problem shapes are rounded
+    # up to the spec's bucket boundaries and the tensors padded with
+    # masked-out phantom entries, so one XLA program serves every shape
+    # in a bucket (None = exact shapes, one program per shape).
+    bucket: Optional[BucketSpec] = None
     # Deprecated and ignored: the unified planner always runs the
     # jit-compiled path (kept so old configs keep constructing).
     use_jax: bool = False
@@ -224,7 +229,8 @@ def _batched_planner(kind: str):
 
     comm_argc = {"dense": 2, "sparse": 4}[kind]
 
-    def single(ci, E, order, w_placed, w_fcur, w_ncur, w_cpu, w_ram, *rest):
+    def single(ci, ci_mean, E, order, w_placed, w_fcur, w_ncur, w_cpu,
+               w_ram, *rest):
         comm_args = rest[:comm_argc]
         (P, A, stat_feas, cpu_req, ram_req, cpu_cap, ram_cap, must, cost,
          money_w, pref_w, emission_w, green_pen, max_steps) = rest[comm_argc:]
@@ -234,7 +240,9 @@ def _batched_planner(kind: str):
                   + pref_w * jnp.arange(F, dtype=dt)[None, :, None]
                   + emission_w * E[:, :, None] * ci[None, None, :]
                   + green_pen * P)
-        wK = emission_w * ci.mean()
+        # the branch's REAL mean CI, passed explicitly: phantom bucket
+        # nodes must not dilute the pairwise-transmission pricing
+        wK = emission_w * ci_mean
         if kind == "dense":
             K, has_link = comm_args
             W = wK * K + green_pen * A[:, None, :] * has_link
@@ -345,9 +353,91 @@ def _batched_planner(kind: str):
         return placed, fcur, ncur, skipped, infeas, fail_s
 
     fn = jax.jit(jax.vmap(
-        single, in_axes=(0, 0, 0) + (None,) * (5 + comm_argc + 14)))
+        single, in_axes=(0, 0, 0, 0) + (None,) * (5 + comm_argc + 14)))
     _PLAN_BATCH_CACHE[kind] = fn
     return fn
+
+
+# ---------------------------------------------------------------------------
+# Planner compile cache: one entry per (backend kind, padded program shape).
+# The jit executable itself lives in jax's cache; this registry mirrors its
+# keys so hit/miss/compile-time are observable (PlanResult.stats, the
+# BENCH_scheduler.json compile_cache section, and the CI hit-rate gate).
+# ---------------------------------------------------------------------------
+
+
+class PlannerCompileCache:
+    """Counters over the planner's XLA program signatures.
+
+    A *miss* is a signature this process has never planned before — the
+    call that pays the program build.  That is a real XLA compile unless
+    jax's persistent compilation cache (``jax_compilation_cache_dir``) is
+    enabled, in which case a miss may be served by deserializing a
+    previously persisted program — much faster, but still counted as a
+    miss (the counters track per-process program builds, not cold
+    compiles).  ``reset_counters()`` zeroes the windowed counters but
+    keeps the signature registry: replanning a known shape after a reset
+    is still a hit (no rebuild happens).
+    """
+
+    def __init__(self) -> None:
+        self.signatures: Dict[Tuple, Dict[str, float]] = {}
+        self.reset_counters()
+
+    def reset_counters(self) -> None:
+        self.calls = 0
+        self.hits = 0
+        self.misses = 0
+        self.compile_time_s = 0.0
+
+    def record(self, sig: Tuple, plan_time_s: float) -> bool:
+        """Account one planner call; returns True when it compiled."""
+        self.calls += 1
+        entry = self.signatures.get(sig)
+        if entry is None:
+            self.misses += 1
+            self.compile_time_s += plan_time_s
+            self.signatures[sig] = {"calls": 1,
+                                    "compile_time_s": plan_time_s}
+            return True
+        self.hits += 1
+        entry["calls"] += 1
+        return False
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "calls": self.calls,
+            "hits": self.hits,
+            "misses": self.misses,
+            "compile_time_s": self.compile_time_s,
+            "distinct_signatures": len(self.signatures),
+        }
+
+
+COMPILE_CACHE = PlannerCompileCache()
+
+
+def compile_cache_stats() -> Dict[str, float]:
+    """Snapshot of the planner compile cache (counts since the last
+    ``reset_compile_cache_counters`` call; ``distinct_signatures`` is
+    process-lifetime)."""
+    return COMPILE_CACHE.stats()
+
+
+def reset_compile_cache_counters() -> None:
+    """Zero the windowed hit/miss/compile-time counters (the signature
+    registry — what decides hit vs miss — is kept: compiled XLA programs
+    don't vanish on reset)."""
+    COMPILE_CACHE.reset_counters()
+
+
+def _pad1(a: np.ndarray, size: int) -> np.ndarray:
+    """Pad a 1-D array with zeros (False / 0) up to ``size``."""
+    if a.shape[0] == size:
+        return a
+    out = np.zeros(size, dtype=a.dtype)
+    out[:a.shape[0]] = a
+    return out
 
 
 def _static_feasibility(low: LoweredProblem) -> np.ndarray:
@@ -410,60 +500,24 @@ class GreenScheduler:
 
     config: SchedulerConfig = field(default_factory=SchedulerConfig)
 
-    def plan(
-        self,
-        app,
-        infra: Optional[Infrastructure] = None,
-        computation: Optional[Mapping[Tuple[str, str], float]] = None,
-        communication: Optional[Mapping[Tuple[str, str, str], float]] = None,
-        constraints: Sequence[Constraint] = (),
-        lowered: Optional[LoweredProblem] = None,
-        initial: Optional[Mapping[str, Tuple[str, str]]] = None,
-    ):
-        """Plan a deployment.
+    def plan(self, problem: PlacementProblem) -> PlanResult:
+        """Plan a deployment: ``plan(problem) -> PlanResult``.
 
-        New API: ``plan(problem: PlacementProblem) -> PlanResult`` — every
-        other argument must be omitted; scenarios and warm start travel on
-        the problem (``problem.with_scenarios(...)`` /
-        ``problem.with_warm_start(...)``).
-
-        Legacy API (deprecated, one release): ``plan(app, infra,
-        computation, communication, constraints, lowered=..., initial=...)
-        -> DeploymentPlan``.  A warm start maps service -> (flavour, node);
-        it is verified against the capacity / subnet / availability masks
-        first, rejected as a whole on any violation, and the plan rebuilt
-        greedily from scratch (noted on the returned plan).
+        Scenarios and warm start travel on the problem
+        (``problem.with_scenarios(...)`` / ``problem.with_warm_start(...)``).
+        A warm start maps service -> (flavour, node); it is verified
+        against the capacity / subnet / availability masks first, rejected
+        as a whole on any violation, and the plan rebuilt greedily from
+        scratch (noted on the returned plan).
         """
-        if isinstance(app, PlacementProblem):
-            return self._plan_problem(app)
-        warnings.warn(_DEPRECATED_PLAN.format(name="plan"),
-                      DeprecationWarning, stacklevel=2)
-        problem = PlacementProblem.build(
-            app, infra, computation or {}, communication or {},
-            constraints=constraints, lowered=lowered, initial=initial)
-        return self._plan_problem(problem).plan
-
-    def plan_batch(
-        self,
-        app,
-        infra: Optional[Infrastructure] = None,
-        computation: Optional[Mapping[Tuple[str, str], float]] = None,
-        communication: Optional[Mapping[Tuple[str, str, str], float]] = None,
-        constraints: Sequence[Constraint] = (),
-        scenarios: Optional[ScenarioBatch] = None,
-        lowered: Optional[LoweredProblem] = None,
-        initial: Optional[Mapping[str, Tuple[str, str]]] = None,
-    ) -> List[DeploymentPlan]:
-        """Deprecated shim: attach the scenario batch to a
-        ``PlacementProblem`` and call ``plan(problem)`` instead; this
-        forwards there and unwraps ``PlanResult.plans``."""
-        warnings.warn(_DEPRECATED_PLAN.format(name="plan_batch"),
-                      DeprecationWarning, stacklevel=2)
-        problem = PlacementProblem.build(
-            app, infra, computation or {}, communication or {},
-            constraints=constraints, scenarios=scenarios, lowered=lowered,
-            initial=initial)
-        return self._plan_problem(problem).plans
+        if not isinstance(problem, PlacementProblem):
+            raise TypeError(
+                "GreenScheduler.plan takes a PlacementProblem; the old "
+                "positional plan(app, infra, computation, communication, "
+                "...) and plan_batch forms were removed — build a problem "
+                "with PlacementProblem.build(...) or pipeline."
+                "problem_for(out) instead")
+        return self._plan_problem(problem)
 
     # -- the one real planning path ----------------------------------------
 
@@ -472,19 +526,20 @@ class GreenScheduler:
         low = problem.lowering
         constraints = problem.constraints if cfg.use_green_constraints \
             else ()
-        P, A = lower_constraints(low, constraints)
-        stat_feas = _static_feasibility(low)
         scenarios = problem.scenarios
         if scenarios is None:
             scenarios = ScenarioBatch(
                 ci=np.asarray(low.ci, dtype=float)[None, :])
         S, N = low.S, low.N
+        B = scenarios.B
 
         notes: List[str] = []
         warm = None
+        stat_feas_real = None
         initial = problem.initial_assignment
         if initial is not None:
-            warm, err = _warm_start_state(low, stat_feas, initial)
+            stat_feas_real = _static_feasibility(low)
+            warm, err = _warm_start_state(low, stat_feas_real, initial)
             if warm is None:
                 notes.append(
                     f"warm start rejected ({err}); rebuilt from scratch")
@@ -495,26 +550,99 @@ class GreenScheduler:
         if S == 0 or N == 0:
             return self._degenerate_result(problem, low, scenarios, notes)
         ci_b, E_b, order_b = scenarios.materialize(low)
+        # the pairwise-transmission mean CI, per branch, over REAL nodes
+        # (the planner takes it explicitly so bucket padding can't skew it)
+        ci_mean_b = np.asarray(ci_b, dtype=float).mean(axis=1)
+
+        # -- shape bucketing: round (S, F, N, L, B) up to the configured
+        # bucket boundaries and pad with masked-out phantom entries so one
+        # compiled program serves every shape in the bucket; results are
+        # sliced back to the real [B, :S] below.
+        F = low.F
+        L = low.comm.n_links if low.comm.kind == "sparse" else None
+        shape = (B, S, F, N, L)
+        plow, bucketed = low, False
+        if cfg.bucket is not None:
+            S_p, F_p, N_p, L_p, B_p = cfg.bucket.pad_dims(S, F, N, L, B)
+            bucketed = (S_p, F_p, N_p, L_p, B_p) != (S, F, N, L, B)
+            plow = pad_lowering(low, S_p, F_p, N_p, L_p)
+            if B_p > B:
+                # phantom branches replay branch 0; sliced away afterwards
+                rep = np.repeat(ci_b[:1], B_p - B, axis=0)
+                ci_b = np.concatenate([ci_b, rep], axis=0)
+                ci_mean_b = np.concatenate(
+                    [ci_mean_b, np.repeat(ci_mean_b[:1], B_p - B)])
+                E_b = np.concatenate(
+                    [E_b, np.repeat(E_b[:1], B_p - B, axis=0)], axis=0)
+                order_b = np.concatenate(
+                    [order_b, np.repeat(order_b[:1], B_p - B, axis=0)],
+                    axis=0)
+            if N_p > N:
+                ci_b = np.concatenate(
+                    [ci_b, np.zeros((ci_b.shape[0], N_p - N))], axis=1)
+            if S_p > S or F_p > F:
+                E_pad = np.zeros((E_b.shape[0], S_p, F_p))
+                E_pad[:, :S, :F] = E_b
+                E_b = E_pad
+                # phantom services go LAST in every branch's greedy order
+                order_b = np.concatenate([
+                    order_b,
+                    np.broadcast_to(
+                        np.arange(S, S_p, dtype=order_b.dtype),
+                        (order_b.shape[0], S_p - S))], axis=1)
+            warm = (
+                _pad1(warm[0], S_p), _pad1(warm[1], S_p),
+                _pad1(warm[2], S_p), _pad1(warm[3], N_p),
+                _pad1(warm[4], N_p))
+        padded_shape = (ci_b.shape[0], plow.S, plow.F, plow.N,
+                        plow.comm.n_links if plow.comm.kind == "sparse"
+                        else None)
+
+        P, A = lower_constraints(plow, constraints)
+        # reuse the warm-start validation mask when the lowering wasn't
+        # padded (the mask is O(S*F*N) — twice per tick would be real)
+        stat_feas = stat_feas_real if (plow is low
+                                       and stat_feas_real is not None) \
+            else _static_feasibility(plow)
 
         from jax.experimental import enable_x64
 
-        planner = _batched_planner(low.comm.kind)
+        planner = _batched_planner(plow.comm.kind)
+        sig = (plow.comm.kind,) + padded_shape
         # x64 keeps branch plans bit-comparable across batch sizes and
         # backends: a float32 downcast would drown the _EPS improvement
         # threshold in rounding noise and let the local search ping-pong
         # on near-ties.
+        t0 = time.perf_counter()
         with enable_x64():
             out = planner(
-                ci_b, E_b, order_b, *warm,
-                *low.comm.planner_args(), P, A, stat_feas,
-                low.cpu_req, low.ram_req, low.cpu_cap, low.ram_cap, low.must,
-                low.cost,
+                ci_b, ci_mean_b, E_b, order_b, *warm,
+                *plow.comm.planner_args(), P, A, stat_feas,
+                plow.cpu_req, plow.ram_req, plow.cpu_cap, plow.ram_cap,
+                plow.must, plow.cost,
                 cfg.money_weight, cfg.pref_weight, cfg.emission_weight,
                 cfg.green_penalty,
                 cfg.local_search_rounds * max(1, S),
             )
         placed_b, fcur_b, ncur_b, skipped_b, infeas_b, fail_b = (
-            np.asarray(a) for a in out)
+            np.asarray(a)[:B, ...] for a in out)
+        plan_time_s = time.perf_counter() - t0
+        compiled = COMPILE_CACHE.record(sig, plan_time_s)
+        cc = COMPILE_CACHE
+        stats = PlanStats(
+            backend=plow.comm.kind, shape=shape, padded_shape=padded_shape,
+            signature=sig, bucketed=bucketed, compiled=compiled,
+            compile_time_s=plan_time_s if compiled else 0.0,
+            plan_time_s=plan_time_s, cache_hits=cc.hits,
+            cache_misses=cc.misses)
+        # slice phantom services away; phantom branches already dropped
+        placed_b = placed_b[:, :S]
+        fcur_b = fcur_b[:, :S]
+        ncur_b = ncur_b[:, :S]
+        skipped_b = skipped_b[:, :S]
+        ci_b = ci_b[:B, :N]
+        E_b = E_b[:B, :S, :F]
+        order_b = order_b[:B, :S]
         em_b = batched_lowered_emissions(
             low, placed_b, fcur_b, ncur_b, ci=ci_b,
             E=E_b if scenarios.E is not None else None)
@@ -550,7 +678,8 @@ class GreenScheduler:
         return PlanResult(
             problem=problem, plans=plans, placed=placed_b, fcur=fcur_b,
             ncur=ncur_b,
-            emissions_g=np.where(feas_mask, em_b, np.inf))
+            emissions_g=np.where(feas_mask, em_b, np.inf),
+            stats=stats)
 
     def _degenerate_result(self, problem, low, scenarios, notes) -> PlanResult:
         """Host-side path for shape-degenerate problems (no services or no

@@ -1,0 +1,251 @@
+"""Shape bucketing must be invisible in the results.
+
+Randomized (seeded, deterministic) problems with exactly-representable
+(dyadic) values — mirroring tests/test_sparse_lowering.py — so every float
+product and sum the padded and unpadded programs compute is exact and
+order-independent: "bit-match" is then a meaningful assertion, not a
+tolerance.  Phantom services/flavours/nodes/edges must never place, never
+carry objective weight, and never perturb argmin tie-breaks; the padded
+plan, its emissions, and its objective must equal the unpadded path across
+dense and sparse backends, scenario batches, warm starts, and the
+S==0/N==0 degenerate paths.  Also covers the planner compile cache the
+bucketing exists to feed: shapes inside one bucket share one XLA program.
+"""
+import numpy as np
+import pytest
+
+from test_sparse_lowering import synth_dyadic
+
+from repro.core.lowering import ScenarioBatch, lower, pad_lowering
+from repro.core.problem import BucketSpec, PlacementProblem, PlanStats
+from repro.core.scheduler import (
+    COMPILE_CACHE,
+    GreenScheduler,
+    SchedulerConfig,
+    reference_objective,
+)
+from repro.core.types import (
+    Application,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+)
+
+PROFILES = {
+    "green": SchedulerConfig.green,
+    "oracle": SchedulerConfig.oracle,
+    # dyadic emission weight: keeps every objective term exact
+    "mixed": lambda: SchedulerConfig(emission_weight=0.25),
+}
+
+
+def _bucketed(cfg_factory, bucket=None):
+    cfg = cfg_factory()
+    cfg.bucket = bucket if bucket is not None else BucketSpec()
+    return cfg
+
+
+def _assert_bit_match(app, infra, comp, comm, cs, cfg_factory, problem,
+                      bucket=None):
+    exact = GreenScheduler(cfg_factory()).plan(problem)
+    padded = GreenScheduler(_bucketed(cfg_factory, bucket)).plan(problem)
+    assert padded.stats is not None and padded.stats.bucketed
+    assert exact.plans[0].feasible == padded.plans[0].feasible
+    for b, (pe, pp) in enumerate(zip(exact.plans, padded.plans)):
+        assert pe.feasible == pp.feasible, b
+        assert pe.notes == pp.notes, b
+        if not pe.feasible:
+            continue
+        assert pe.placements == pp.placements, b
+        assert pe.skipped_services == pp.skipped_services, b
+        # exact equality, not a tolerance: all sums are dyadic-exact
+        assert pe.total_emissions_g == pp.total_emissions_g, b
+        cfg = cfg_factory()
+        a_e = {p.service: (p.flavour, p.node) for p in pe.placements}
+        a_p = {p.service: (p.flavour, p.node) for p in pp.placements}
+        assert reference_objective(app, infra, comp, comm, cs, cfg, a_e) \
+            == reference_objective(app, infra, comp, comm, cs, cfg, a_p), b
+    # the tensor-form outputs keep REAL dimensions (phantoms sliced away)
+    assert padded.placed.shape == exact.placed.shape
+    np.testing.assert_array_equal(padded.placed, exact.placed)
+    np.testing.assert_array_equal(padded.emissions_g, exact.emissions_g)
+    return exact, padded
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+@pytest.mark.parametrize("profile", sorted(PROFILES))
+@pytest.mark.parametrize("seed", range(6))
+def test_bucketed_matches_exact_randomized(seed, profile, backend):
+    app, infra, comp, comm, cs = synth_dyadic(seed)
+    problem = PlacementProblem.build(app, infra, comp, comm, cs,
+                                     backend=backend)
+    _assert_bit_match(app, infra, comp, comm, cs, PROFILES[profile],
+                      problem)
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+@pytest.mark.parametrize("seed", range(3))
+def test_bucketed_matches_exact_scenario_batch(seed, backend):
+    app, infra, comp, comm, cs = synth_dyadic(seed)
+    problem = PlacementProblem.build(app, infra, comp, comm, cs,
+                                     backend=backend)
+    low = problem.lowering
+    rng = np.random.default_rng(seed)
+    ci_b = rng.integers(64, 40000, size=(3, low.N)) / 64.0
+    scen = ScenarioBatch(ci=ci_b)  # B=3 pads to the B=4 bucket
+    cfg = lambda: SchedulerConfig(emission_weight=1.0)  # noqa: E731
+    _assert_bit_match(app, infra, comp, comm, cs, cfg,
+                      problem.with_scenarios(scen))
+
+
+def test_bucketed_matches_exact_scenario_E_override():
+    app, infra, comp, comm, cs = synth_dyadic(1)
+    problem = PlacementProblem.build(app, infra, comp, comm, cs)
+    low = problem.lowering
+    rng = np.random.default_rng(7)
+    ci_b = rng.integers(64, 40000, size=(3, low.N)) / 64.0
+    # dyadic per-branch E: scaling by 0.5/1.0/1.5 wouldn't be exact for
+    # 1.5, so scale by powers of two
+    E_b = np.stack([low.E * (2.0 ** b) for b in range(3)])
+    scen = ScenarioBatch(ci=ci_b, E=E_b)
+    cfg = lambda: SchedulerConfig(emission_weight=1.0)  # noqa: E731
+    _assert_bit_match(app, infra, comp, comm, cs, cfg,
+                      problem.with_scenarios(scen))
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_bucketed_matches_exact_warm_start(backend):
+    app, infra, comp, comm, cs = synth_dyadic(2)
+    problem = PlacementProblem.build(app, infra, comp, comm, cs,
+                                     backend=backend)
+    init = {p.service: (p.flavour, p.node)
+            for p in GreenScheduler(SchedulerConfig.green())
+            .plan(problem).plan.placements}
+    _assert_bit_match(app, infra, comp, comm, cs, SchedulerConfig.green,
+                      problem.with_warm_start(init))
+
+
+def test_bucketed_degenerate_no_services_no_nodes():
+    svc = Service("s0", flavours=(
+        Flavour("f0", FlavourRequirements(cpu=1.0)),))
+    node = Node("n0", carbon=100.0,
+                capabilities=NodeCapabilities(cpu=4.0))
+    cases = [
+        (Application("a", ()), Infrastructure("i", (node,))),   # S == 0
+        (Application("a", (svc,)), Infrastructure("i", ())),    # N == 0
+        (Application("a", ()), Infrastructure("i", ())),        # both
+    ]
+    for app, infra in cases:
+        problem = PlacementProblem.build(app, infra, {}, {})
+        exact = GreenScheduler(SchedulerConfig.green()).plan(problem)
+        padded = GreenScheduler(
+            _bucketed(SchedulerConfig.green)).plan(problem)
+        assert [p.feasible for p in padded.plans] \
+            == [p.feasible for p in exact.plans]
+        assert [p.placements for p in padded.plans] \
+            == [p.placements for p in exact.plans]
+        assert padded.placed.shape == exact.placed.shape
+
+
+# ---------------------------------------------------------------------------
+# pad_lowering invariants
+# ---------------------------------------------------------------------------
+
+
+def test_pad_lowering_is_identity_at_bucket_boundary():
+    app, infra, comp, comm, cs = synth_dyadic(0)
+    low = lower(app, infra, comp, comm)
+    assert pad_lowering(low, low.S, low.F, low.N) is low
+
+
+def test_pad_lowering_phantoms_are_inert():
+    app, infra, comp, comm, cs = synth_dyadic(3)
+    low = lower(app, infra, comp, comm, backend="sparse")
+    S, F, N, L = low.S, low.F, low.N, low.comm.n_links
+    plow = pad_lowering(low, S + 3, F + 1, N + 2, L + 4)
+    assert (plow.S, plow.F, plow.N) == (S + 3, F + 1, N + 2)
+    assert plow.comm.n_links == L + 4
+    assert not plow.valid[S:].any() and not plow.must[S:].any()
+    assert not plow.compat[:, N:].any() and not plow.compat[S:].any()
+    assert (plow.ci[N:] == 0).all() and (plow.cpu_cap[N:] == 0).all()
+    assert plow.mean_ci == low.mean_ci      # phantom nodes don't dilute
+    assert (plow.comm.k[L:] == 0).all()
+    assert (plow.comm.src[L:] == S + 2).all()   # phantom endpoint
+    # real sub-tensors are untouched
+    np.testing.assert_array_equal(plow.E[:S, :F], low.E)
+    np.testing.assert_array_equal(plow.order[:S], low.order)
+    np.testing.assert_array_equal(plow.order[S:], np.arange(S, S + 3))
+
+
+def test_pad_lowering_rejects_shrink_and_orphan_edges():
+    app, infra, comp, comm, cs = synth_dyadic(4)
+    low = lower(app, infra, comp, comm, backend="sparse")
+    with pytest.raises(ValueError, match="shrink"):
+        pad_lowering(low, low.S - 1, low.F, low.N)
+    with pytest.raises(ValueError, match="phantom service"):
+        # more edges but no phantom service to carry them
+        pad_lowering(low, low.S, low.F, low.N,
+                     low.comm.n_links + 2)
+
+
+def test_bucket_spec_dims_and_validation():
+    spec = BucketSpec()
+    assert spec.pad_dims(9, 3, 8, None, 1) == (16, 4, 8, None, 1)
+    assert spec.pad_dims(0, 1, 0, None, 1) == (0, 1, 0, None, 1)
+    # sparse: padding L past its boundary bumps S one bucket up so the
+    # phantom edges have a phantom service endpoint
+    assert spec.pad_dims(16, 2, 8, 10, 1) == (32, 2, 8, 16, 1)
+    grid = BucketSpec.grid(s=(25, 50, 200), n=(25, 100))
+    assert grid.pad_dims(30, 2, 60, None, 1) == (50, 2, 100, None, 1)
+    # beyond the grid: exact shape, no padding
+    assert grid.pad_dims(500, 2, 300, None, 1) == (500, 2, 300, None, 1)
+    with pytest.raises(ValueError, match="ascending"):
+        BucketSpec(s=(50, 25))
+    with pytest.raises(ValueError, match="ascending"):
+        BucketSpec(n=(0, 8))
+
+
+# ---------------------------------------------------------------------------
+# compile cache: one program per bucket, telemetry on PlanResult.stats
+# ---------------------------------------------------------------------------
+
+
+def test_shapes_in_one_bucket_share_one_program():
+    # a grid no other test uses -> the signature is fresh exactly once
+    bucket = BucketSpec.grid(s=(13,), f=(3,), n=(11,), l=(17,), b=(2,))
+    cfg = SchedulerConfig.green()
+    cfg.bucket = bucket
+    sched = GreenScheduler(cfg)
+    sigs, compiled = set(), 0
+    for n_services, n_nodes in ((5, 7), (7, 9), (9, 11), (11, 8)):
+        app, infra, comp, comm, cs = synth_dyadic(
+            0, n_services=n_services, n_nodes=n_nodes)
+        problem = PlacementProblem.build(app, infra, comp, comm, cs,
+                                         backend="sparse")
+        result = sched.plan(problem)
+        stats = result.stats
+        assert isinstance(stats, PlanStats)
+        assert stats.padded_shape == (2, 13, 3, 11, 17)
+        sigs.add(stats.signature)
+        compiled += stats.compiled
+    assert len(sigs) == 1            # four shapes, ONE program signature
+    assert compiled <= 1             # at most the first call compiled
+
+
+def test_plan_stats_telemetry():
+    app, infra, comp, comm, cs = synth_dyadic(5)
+    problem = PlacementProblem.build(app, infra, comp, comm, cs)
+    misses0 = COMPILE_CACHE.misses
+    r1 = GreenScheduler(SchedulerConfig.green()).plan(problem)
+    r2 = GreenScheduler(SchedulerConfig.green()).plan(problem)
+    assert r1.stats.shape == r1.stats.padded_shape  # no bucket configured
+    assert not r1.stats.bucketed and not r2.stats.bucketed
+    assert r2.stats.signature == r1.stats.signature
+    assert not r2.stats.compiled        # second call reuses the program
+    assert r2.stats.compile_time_s == 0.0
+    assert r2.stats.plan_time_s > 0.0
+    assert COMPILE_CACHE.misses - misses0 <= 1
+    assert r2.stats.cache_hits >= 1

@@ -77,39 +77,31 @@ def test_b_is_just_batched_path(problem_and_inputs):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# removed legacy forms fail loudly (PR 3 shims, gone after one release)
 # ---------------------------------------------------------------------------
 
 
-def test_positional_plan_shim_warns_and_matches(problem_and_inputs):
-    problem, (app, infra, comp, comm, cs) = problem_and_inputs
+def test_positional_plan_form_removed(problem_and_inputs):
+    _, (app, infra, comp, comm, cs) = problem_and_inputs
     sched = GreenScheduler(SchedulerConfig.green())
-    new = sched.plan(problem).plan
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        old = sched.plan(app, infra, comp, comm, cs)
-    assert old.placements == new.placements
-    assert old.total_emissions_g == new.total_emissions_g
+    with pytest.raises(TypeError):
+        sched.plan(app, infra, comp, comm, cs)
+    with pytest.raises(TypeError, match="PlacementProblem"):
+        sched.plan(app)
+    assert not hasattr(sched, "plan_batch")
 
 
-def test_plan_batch_shim_warns_and_matches(problem_and_inputs):
-    problem, (app, infra, comp, comm, cs) = problem_and_inputs
-    low = problem.lowering
-    ci_b = np.tile(low.ci, (2, 1)) * np.array([[1.0], [2.0]])
-    scen = ScenarioBatch(ci=ci_b)
-    sched = GreenScheduler(SchedulerConfig(emission_weight=1.0))
-    new = sched.plan(problem.with_scenarios(scen)).plans
-    with pytest.warns(DeprecationWarning, match="plan_batch"):
-        old = sched.plan_batch(app, infra, comp, comm, cs, scenarios=scen)
-    assert [p.placements for p in old] == [p.placements for p in new]
+def test_lowered_for_removed():
+    assert not hasattr(GreenConstraintPipeline(), "lowered_for")
 
 
-def test_lowered_for_shim_warns():
-    app, infra, mon = boutique.scenario(1)
-    pipe = GreenConstraintPipeline()
-    out = pipe.run(app, infra, mon, use_kb=False)
-    with pytest.warns(DeprecationWarning, match="problem_for"):
-        low = pipe.lowered_for(out)
-    assert low is pipe.problem_for(out).lowering
+def test_whatif_lowered_problem_form_removed(problem_and_inputs):
+    from repro.continuum.whatif import WhatIfPlanner
+
+    problem, _ = problem_and_inputs
+    scen = ScenarioBatch(ci=problem.lowering.ci[None, :])
+    with pytest.raises(TypeError, match="PlacementProblem"):
+        WhatIfPlanner().evaluate(problem.lowering, scen)
 
 
 def test_new_entrypoints_do_not_warn(problem_and_inputs):
@@ -147,6 +139,79 @@ def test_problem_for_reuses_cached_lowering():
     p3 = pipe.problem_for(out3)
     assert p3.lowering is not p1.lowering
     assert p3 != p1
+
+
+def test_problem_for_delta_substitution_bit_matches_full_lower():
+    """Windows that differ only in drifting VALUES — node carbon
+    (scenario 3) or a flavour energy profile (scenario 4) — must take the
+    delta fast path and produce a lowering bit-identical to a full
+    re-lower."""
+    import dataclasses
+
+    from repro.core.lowering import lower
+
+    app, infra, mon = boutique.scenario(1)
+    _, infra3, _ = boutique.scenario(3)   # france carbon moved
+    _, _, mon4 = boutique.scenario(4)     # frontend energy moved
+    pipe = GreenConstraintPipeline()
+    out1 = pipe.run(app, infra, mon, use_kb=False)
+    p1 = pipe.problem_for(out1)
+    assert pipe.lowering_stats["full_lowers"] == 1
+    for i, (infra_t, mon_t) in enumerate(
+            [(infra3, mon), (infra, mon4)], start=1):
+        out_t = pipe.run(app, infra_t, mon_t, use_kb=False)
+        p_t = pipe.problem_for(out_t)
+        assert pipe.lowering_stats["delta_substitutions"] == i
+        fresh = lower(out_t.app, out_t.infra, out_t.computation,
+                      out_t.communication)
+        for f in dataclasses.fields(fresh):
+            a, b = getattr(p_t.lowering, f.name), getattr(fresh, f.name)
+            if isinstance(a, np.ndarray):
+                np.testing.assert_array_equal(a, b, err_msg=f.name)
+            elif f.name == "comm":
+                np.testing.assert_array_equal(a.K, b.K)
+                np.testing.assert_array_equal(a.has_link, b.has_link)
+            else:
+                assert a == b, f.name
+        # structural tensors are SHARED with the cached lowering
+        assert p_t.lowering.compat is p1.lowering.compat
+        assert p_t.lowering.cpu_req is p1.lowering.cpu_req
+
+
+def test_problem_for_identical_window_is_cache_hit():
+    app, infra, mon = boutique.scenario(1)
+    pipe = GreenConstraintPipeline()
+    out = pipe.run(app, infra, mon, use_kb=False)
+    p1 = pipe.problem_for(out)
+    p2 = pipe.problem_for(pipe.run(app, infra, mon, use_kb=False))
+    assert p2.lowering is p1.lowering
+    assert pipe.lowering_stats == {
+        "cache_hits": 1, "delta_substitutions": 0, "full_lowers": 1}
+
+
+def test_problem_for_delta_disabled_full_lowers():
+    app, infra, mon = boutique.scenario(1)
+    _, infra3, _ = boutique.scenario(3)
+    pipe = GreenConstraintPipeline(delta_substitution=False)
+    pipe.problem_for(pipe.run(app, infra, mon, use_kb=False))
+    pipe.problem_for(pipe.run(app, infra3, mon, use_kb=False))
+    assert pipe.lowering_stats == {
+        "cache_hits": 0, "delta_substitutions": 0, "full_lowers": 2}
+
+
+def test_problem_for_structural_change_full_lowers():
+    """A structural drift (a node disappears) must NOT take the delta
+    path."""
+    import dataclasses
+
+    app, infra, mon = boutique.scenario(1)
+    pipe = GreenConstraintPipeline()
+    pipe.problem_for(pipe.run(app, infra, mon, use_kb=False))
+    smaller = dataclasses.replace(infra, nodes=infra.nodes[:-1])
+    p2 = pipe.problem_for(pipe.run(app, smaller, mon, use_kb=False))
+    assert pipe.lowering_stats["delta_substitutions"] == 0
+    assert pipe.lowering_stats["full_lowers"] == 2
+    assert p2.lowering.N == len(infra.nodes) - 1
 
 
 def test_fingerprint_tracks_content(problem_and_inputs):

@@ -11,6 +11,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.generator import quantile_inf
 from repro.core.kb import Stats
 from repro.core.ranker import ConstraintRanker
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import GreenScheduler, SchedulerConfig
 from repro.core.types import (
     Application,
@@ -127,7 +128,8 @@ def test_scheduler_respects_capacity(n_services, n_nodes, rnd):
     app = Application("a", services)
     infra = Infrastructure("i", nodes)
     comp = {(f"s{i}", "f"): rnd.uniform(1, 100) for i in range(n_services)}
-    plan = GreenScheduler(SchedulerConfig.green()).plan(app, infra, comp, {})
+    plan = GreenScheduler(SchedulerConfig.green()).plan(
+        PlacementProblem.build(app, infra, comp, {})).plan
     if plan.feasible:
         used = {}
         for p in plan.placements:

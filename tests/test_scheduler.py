@@ -5,6 +5,7 @@ import pytest
 from repro.configs import boutique
 from repro.core.energy import EnergyEstimator, EnergyMixGatherer
 from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import (
     GreenScheduler,
     SchedulerConfig,
@@ -21,6 +22,13 @@ from repro.core.types import (
     NodeCapabilities,
     Service,
 )
+
+
+
+def _plan(sched, app, infra, comp, comm, constraints=()):
+    """One positional-style plan through the PlacementProblem API."""
+    return sched.plan(PlacementProblem.build(
+        app, infra, comp, comm, constraints)).plan
 
 
 @pytest.fixture(scope="module")
@@ -42,11 +50,11 @@ def _emissions(plan, app, infra, comp, comm):
 
 def test_green_beats_baseline_bounded_by_oracle(scenario1):
     app, infra, comp, comm, constraints = scenario1
-    base = GreenScheduler(SchedulerConfig.baseline()).plan(
+    base = _plan(GreenScheduler(SchedulerConfig.baseline()),
         app, infra, comp, comm, constraints)
-    green = GreenScheduler(SchedulerConfig.green()).plan(
+    green = _plan(GreenScheduler(SchedulerConfig.green()),
         app, infra, comp, comm, constraints)
-    oracle = GreenScheduler(SchedulerConfig.oracle()).plan(
+    oracle = _plan(GreenScheduler(SchedulerConfig.oracle()),
         app, infra, comp, comm, constraints)
     for p in (base, green, oracle):
         assert p.feasible
@@ -59,7 +67,7 @@ def test_green_beats_baseline_bounded_by_oracle(scenario1):
 
 def test_green_respects_avoid_constraints(scenario1):
     app, infra, comp, comm, constraints = scenario1
-    green = GreenScheduler(SchedulerConfig.green()).plan(
+    green = _plan(GreenScheduler(SchedulerConfig.green()),
         app, infra, comp, comm, constraints)
     placed = {(p.service, p.flavour, p.node) for p in green.placements}
     from repro.core.types import AvoidNode
@@ -70,7 +78,7 @@ def test_green_respects_avoid_constraints(scenario1):
 
 def test_all_mandatory_services_placed(scenario1):
     app, infra, comp, comm, constraints = scenario1
-    plan = GreenScheduler(SchedulerConfig.green()).plan(
+    plan = _plan(GreenScheduler(SchedulerConfig.green()),
         app, infra, comp, comm, constraints)
     placed = {p.service for p in plan.placements}
     assert placed == {s.component_id for s in app.services}
@@ -78,7 +86,7 @@ def test_all_mandatory_services_placed(scenario1):
 
 def test_capacity_limits_respected(scenario1):
     app, infra, comp, comm, constraints = scenario1
-    plan = GreenScheduler(SchedulerConfig.green()).plan(
+    plan = _plan(GreenScheduler(SchedulerConfig.green()),
         app, infra, comp, comm, constraints)
     used = {}
     for p in plan.placements:
@@ -97,7 +105,7 @@ def test_infeasible_mandatory_service():
     app = Application("a", (svc,))
     infra = Infrastructure("i", (
         Node("n", carbon=10.0, capabilities=NodeCapabilities(cpu=4.0)),))
-    plan = GreenScheduler().plan(app, infra, {}, {})
+    plan = _plan(GreenScheduler(), app, infra, {}, {})
     assert not plan.feasible
 
 
@@ -109,7 +117,7 @@ def test_optional_service_dropped_when_infeasible():
     app = Application("a", (must, opt))
     infra = Infrastructure("i", (
         Node("n", carbon=10.0, capabilities=NodeCapabilities(cpu=4.0)),))
-    plan = GreenScheduler().plan(app, infra, {}, {})
+    plan = _plan(GreenScheduler(), app, infra, {}, {})
     assert plan.feasible
     assert plan.skipped_services == ("opt",)
     assert {p.service for p in plan.placements} == {"must"}
@@ -122,8 +130,8 @@ def test_affinity_colocates_under_heavy_traffic():
     comp = est.computation_profiles(mon)
     comm = est.communication_profiles(mon)
     out = GreenConstraintPipeline().run(app, infra, mon, use_kb=False)
-    plan = GreenScheduler(
-        SchedulerConfig(green_penalty=50.0)).plan(
+    plan = _plan(GreenScheduler(
+        SchedulerConfig(green_penalty=50.0)),
         app, infra, comp, comm, out.constraints)
     # the heavy frontend->productcatalog link must be co-located
     assert plan.node_of("frontend") == plan.node_of("productcatalog")
@@ -131,7 +139,7 @@ def test_affinity_colocates_under_heavy_traffic():
 
 def test_oracle_prefers_greenest_nodes(scenario1):
     app, infra, comp, comm, constraints = scenario1
-    oracle = GreenScheduler(SchedulerConfig.oracle()).plan(
+    oracle = _plan(GreenScheduler(SchedulerConfig.oracle()),
         app, infra, comp, comm, constraints)
     # the heaviest service must sit on (one of) the greenest feasible nodes
     fr = oracle.node_of("frontend")

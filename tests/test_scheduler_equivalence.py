@@ -11,6 +11,7 @@ import pytest
 
 from repro.configs import boutique
 from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import (
     GreenScheduler,
     ReferenceScheduler,
@@ -89,7 +90,8 @@ CONFIGS = {
 
 def _assert_equivalent(app, infra, comp, comm, cs, cfg):
     ref = ReferenceScheduler(cfg).plan(app, infra, comp, comm, cs)
-    vec = GreenScheduler(cfg).plan(app, infra, comp, comm, cs)
+    vec = GreenScheduler(cfg).plan(
+        PlacementProblem.build(app, infra, comp, comm, cs)).plan
     assert vec.feasible == ref.feasible
     if not ref.feasible:
         assert vec.notes == ref.notes
@@ -185,8 +187,9 @@ def test_pipeline_plan_threads_lowering():
     assert plan.feasible
     assert out.constraints
     assert pipe._lowering_cache is not None
-    cached = pipe._lowering_cache[1]
+    cached = pipe._lowering_cache[2]
     # replanning the unchanged window reuses the cached lowering
     plan2, _ = pipe.plan(app, infra, mon, use_kb=False)
-    assert pipe._lowering_cache[1] is cached
+    assert pipe._lowering_cache[2] is cached
+    assert pipe.lowering_stats["cache_hits"] >= 1
     assert plan2.placements == plan.placements

@@ -6,6 +6,7 @@ from repro.configs import boutique
 from repro.core.energy import EnergyEstimator, EnergyMixGatherer
 from repro.core.kb import KnowledgeBase
 from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import GreenScheduler, SchedulerConfig, plan_emissions
 from repro.core.types import AvoidNode
 
@@ -30,10 +31,10 @@ def test_full_pipeline_end_to_end(tmp_path):
     infra_e = EnergyMixGatherer().enrich(infra)
     comp = est.computation_profiles(mon)
     comm = est.communication_profiles(mon)
-    green = GreenScheduler(SchedulerConfig.green()).plan(
+    problem = PlacementProblem.build(
         app, infra_e, comp, comm, out.constraints)
-    base = GreenScheduler(SchedulerConfig.baseline()).plan(
-        app, infra_e, comp, comm, out.constraints)
+    green = GreenScheduler(SchedulerConfig.green()).plan(problem).plan
+    base = GreenScheduler(SchedulerConfig.baseline()).plan(problem).plan
     a_g = {p.service: (p.flavour, p.node) for p in green.placements}
     a_b = {p.service: (p.flavour, p.node) for p in base.placements}
     assert plan_emissions(app, infra_e, a_g, comp, comm) < \

@@ -19,6 +19,7 @@ from repro.core.lowering import (
     lower,
     lowered_emissions,
 )
+from repro.core.problem import PlacementProblem
 from repro.core.scheduler import (
     GreenScheduler,
     SchedulerConfig,
@@ -51,6 +52,12 @@ def _ci_batch(low, B, seed):
     return rng.integers(64, 40000, size=(B, low.N)) / 64.0
 
 
+def _plan1(sched, app, infra, comp, comm, cs=(), initial=None):
+    """One single-branch plan through the PlacementProblem API."""
+    return sched.plan(PlacementProblem.build(
+        app, infra, comp, comm, cs, initial=initial)).plan
+
+
 @pytest.mark.parametrize("seed", range(5))
 def test_batched_prices_bit_identical_objectives(seed):
     """Acceptance: each batch branch == a per-scenario plan() call."""
@@ -59,11 +66,12 @@ def test_batched_prices_bit_identical_objectives(seed):
     cfg = SchedulerConfig(emission_weight=1.0)  # ci must matter
     sched = GreenScheduler(cfg)
     ci_b = _ci_batch(low, 4, seed)
-    batch = sched.plan_batch(app, infra, comp, comm, cs,
-                             scenarios=ScenarioBatch(ci=ci_b), lowered=low)
+    batch = sched.plan(PlacementProblem.build(
+        app, infra, comp, comm, cs, lowered=low,
+        scenarios=ScenarioBatch(ci=ci_b))).plans
     for b in range(ci_b.shape[0]):
         infra_b = _scenario_infra(infra, ci_b[b])
-        ref = sched.plan(app, infra_b, comp, comm, cs)
+        ref = _plan1(sched, app, infra_b, comp, comm, cs)
         assert batch[b].feasible == ref.feasible, (seed, b)
         if not ref.feasible:
             continue
@@ -88,14 +96,14 @@ def test_batched_scenario_E_override():
     E_b = np.stack([low.E * (1.0 + 0.5 * b) for b in range(B)])
     cfg = SchedulerConfig(emission_weight=1.0)
     sched = GreenScheduler(cfg)
-    batch = sched.plan_batch(
-        app, infra, comp, comm, cs,
-        scenarios=ScenarioBatch(ci=ci_b, E=E_b), lowered=low)
+    batch = sched.plan(PlacementProblem.build(
+        app, infra, comp, comm, cs, lowered=low,
+        scenarios=ScenarioBatch(ci=ci_b, E=E_b))).plans
     for b in range(B):
         # per-scenario reference: scale the computation map the same way
         comp_b = {k: v * (1.0 + 0.5 * b) for k, v in comp.items()}
         infra_b = _scenario_infra(infra, ci_b[b])
-        ref = sched.plan(app, infra_b, comp_b, comm, cs)
+        ref = _plan1(sched, app, infra_b, comp_b, comm, cs)
         assert batch[b].feasible == ref.feasible
         if ref.feasible:
             assert plan_assignment(batch[b]) == plan_assignment(ref), b
@@ -107,8 +115,10 @@ def test_whatif_batched_matches_sequential():
     scen = ScenarioBatch(ci=_ci_batch(low, 5, 3))
     planner = WhatIfPlanner(GreenScheduler(
         SchedulerConfig(emission_weight=1.0)))
-    rb = planner.evaluate(low, scen, tuple(cs))
-    rs = planner.evaluate_sequential(low, scen, tuple(cs))
+    problem = PlacementProblem(
+        lowering=low, constraints=tuple(cs)).with_scenarios(scen)
+    rb = planner.evaluate(problem)
+    rs = planner.evaluate_sequential(problem)
     assert rb.best_index == rs.best_index
     np.testing.assert_allclose(rb.emissions_g, rs.emissions_g)
     for pb, ps in zip(rb.plans, rs.plans):
@@ -135,8 +145,8 @@ def test_ensemble_emissions_matches_scalar():
 def _feasible_problem():
     for seed in range(10):
         app, infra, comp, comm, cs = synth(seed)
-        plan = GreenScheduler(SchedulerConfig.green()).plan(
-            app, infra, comp, comm, cs)
+        plan = _plan1(GreenScheduler(SchedulerConfig.green()),
+                      app, infra, comp, comm, cs)
         if plan.feasible and len(plan.placements) >= 3:
             return app, infra, comp, comm, cs, plan
     raise AssertionError("no feasible synth problem found")
@@ -145,8 +155,8 @@ def _feasible_problem():
 def test_warm_start_accepted_reaches_same_plan():
     app, infra, comp, comm, cs, plan = _feasible_problem()
     sched = GreenScheduler(SchedulerConfig.green())
-    warm = sched.plan(app, infra, comp, comm, cs,
-                      initial=plan_assignment(plan))
+    warm = _plan1(sched, app, infra, comp, comm, cs,
+                  initial=plan_assignment(plan))
     assert not any("warm start rejected" in n for n in warm.notes)
     assert warm.placements == plan.placements
 
@@ -157,7 +167,7 @@ def test_warm_start_unknown_node_rejected_and_rebuilt():
     sid = next(iter(init))
     init[sid] = (init[sid][0], "no-such-node")
     sched = GreenScheduler(SchedulerConfig.green())
-    rebuilt = sched.plan(app, infra, comp, comm, cs, initial=init)
+    rebuilt = _plan1(sched, app, infra, comp, comm, cs, initial=init)
     assert any("warm start rejected" in n for n in rebuilt.notes)
     assert rebuilt.placements == plan.placements  # cold rebuild, same plan
 
@@ -177,7 +187,7 @@ def test_warm_start_capacity_violation_rejected():
     comp = {("s0", "f0"): 1.0, ("s1", "f0"): 1.0}
     sched = GreenScheduler(SchedulerConfig.green())
     bad = {"s0": ("f0", "n0"), "s1": ("f0", "n0")}
-    plan = sched.plan(app, infra, comp, {}, initial=bad)
+    plan = _plan1(sched, app, infra, comp, {}, initial=bad)
     assert any("capacity exceeded" in n for n in plan.notes)
     assert plan.feasible
     nodes = {p.node for p in plan.placements}
@@ -197,8 +207,8 @@ def test_warm_start_subnet_mask_rejected():
                capabilities=NodeCapabilities(subnet=Subnet.PRIVATE))
     infra = Infrastructure("i", (pub, prv))
     sched = GreenScheduler(SchedulerConfig.green())
-    plan = sched.plan(app, infra, {("s0", "f0"): 1.0}, {},
-                      initial={"s0": ("f0", "pub")})
+    plan = _plan1(sched, app, infra, {("s0", "f0"): 1.0}, {},
+                  initial={"s0": ("f0", "pub")})
     assert any("warm start rejected" in n for n in plan.notes)
     assert plan.node_of("s0") == "prv"
 
@@ -209,24 +219,24 @@ def test_warm_start_partial_completes_remaining():
     sid = sorted(init)[0]
     partial = {k: v for k, v in init.items() if k != sid}
     sched = GreenScheduler(SchedulerConfig.green())
-    out = sched.plan(app, infra, comp, comm, cs, initial=partial)
+    out = _plan1(sched, app, infra, comp, comm, cs, initial=partial)
     assert not any("warm start rejected" in n for n in out.notes)
     placed = {p.service for p in out.placements}
     assert sid in placed  # greedy completed the uncovered service
 
 
-def test_plan_batch_shares_warm_start():
+def test_batched_plan_shares_warm_start():
     app, infra, comp, comm, cs, plan = _feasible_problem()
     low = lower(app, infra, comp, comm)
     sched = GreenScheduler(SchedulerConfig(emission_weight=1.0))
     ci_b = _ci_batch(low, 3, 9)
     init = plan_assignment(plan)
-    batch = sched.plan_batch(app, infra, comp, comm, cs,
-                             scenarios=ScenarioBatch(ci=ci_b), lowered=low,
-                             initial=init)
+    batch = sched.plan(PlacementProblem.build(
+        app, infra, comp, comm, cs, lowered=low,
+        scenarios=ScenarioBatch(ci=ci_b), initial=init)).plans
     for b in range(3):
         infra_b = _scenario_infra(infra, ci_b[b])
-        ref = sched.plan(app, infra_b, comp, comm, cs, initial=init)
+        ref = _plan1(sched, app, infra_b, comp, comm, cs, initial=init)
         assert batch[b].feasible == ref.feasible
         if ref.feasible:
             assert plan_assignment(batch[b]) == plan_assignment(ref), b
