@@ -1,0 +1,291 @@
+"""Constraint pass at continuum scale: reference trio vs array engine,
+full vs dirty-mask incremental.
+
+Drives ``ticks`` observation windows of a continuum-scale scenario
+(S services x N nodes; per tick a small fraction of the Eq. 1 service
+profiles and of the node carbon intensities drift — the monitoring churn
+the adaptive loop actually sees) through three constraint passes over
+bit-identical inputs:
+
+  * ``reference``   — ConstraintGenerator + KBEnricher + ConstraintRanker
+                      (the Sect. 4.3-4.5 object walk);
+  * ``engine_full`` — ConstraintEngine(incremental=False): vectorized
+                      impacts/tau/ranking, every candidate re-derived;
+  * ``engine_incremental`` — ConstraintEngine(incremental=True): only the
+                      dirty profile/CI slabs are re-scored and only dirty
+                      survivors re-instantiated.
+
+The ranked constraints are asserted identical across all three passes on
+EVERY tick (ids, impacts, Eq. 11/12 weights, savings ranges, explanation
+text, ordering) — the engines keep their own KBs, so the assertion also
+covers Eq. 7-10 enrichment and mu-decay evolving in lockstep.  Per-tick
+wall-time percentiles are reported over the post-warmup ticks (tick 0 is
+the engines' structural rebuild); with ``--check`` the incremental pass
+must beat the full pass by >= REQUIRED_SPEEDUP at p50.
+
+Also times the TelemetryBuffer ingestion path (samples -> ring tensors ->
+profiles) against the reference EnergyEstimator on the same
+MonitoringData, profiles asserted equal.
+
+Merges a ``constraint_engine`` section into BENCH_continuum.json.
+
+  PYTHONPATH=src python -m benchmarks.constraint_engine [--smoke] [--check]
+"""
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.energy import EnergyEstimator
+from repro.core.generator import ConstraintGenerator
+from repro.core.kb import KBEnricher, KnowledgeBase
+from repro.core.library import ConstraintLibrary
+from repro.core.ranker import ConstraintRanker
+from repro.core.types import (
+    Application,
+    EnergySample,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    MonitoringData,
+    Node,
+    NodeCapabilities,
+    Service,
+    TrafficSample,
+)
+from repro.learn import ArrayKB, ConstraintEngine, TelemetryBuffer
+
+OUT_JSON = "BENCH_continuum.json"
+REQUIRED_SPEEDUP = 2.0  # incremental vs full engine pass, p50, gated
+
+
+class DriftScenario:
+    """Continuum-scale monitoring stream with sparse per-tick drift."""
+
+    def __init__(self, S, N, L, seed=0, service_drift=0.04,
+                 node_drift=0.02):
+        self.S, self.N, self.L = S, N, L
+        self.service_drift, self.node_drift = service_drift, node_drift
+        rng = np.random.default_rng((seed, 0))
+        self.seed = seed
+        self.prof = rng.lognormal(mean=np.log(0.08), sigma=0.6, size=S)
+        self.vol = rng.uniform(10.0, 60.0, size=L)
+        self.ci = rng.uniform(60.0, 700.0, size=N)
+        self.services = tuple(
+            Service(f"svc{i:04d}", flavours=(
+                Flavour("large", FlavourRequirements(cpu=2.0)),))
+            for i in range(S))
+        self.app = Application("constraint-bench", self.services)
+        self.links = [(f"svc{i % S:04d}", f"svc{(i * 7 + 1) % S:04d}")
+                      for i in range(L)]
+        self.node_ids = [f"node{j:03d}" for j in range(N)]
+
+    def tick(self, t):
+        """Drift a sparse subset, then emit (monitoring, infra)."""
+        rng = np.random.default_rng((self.seed, 1, t))
+        if t > 0:
+            s_idx = rng.choice(
+                self.S, max(1, int(self.S * self.service_drift)),
+                replace=False)
+            self.prof[s_idx] *= rng.lognormal(0.0, 0.05, size=s_idx.size)
+            n_idx = rng.choice(
+                self.N, max(1, int(self.N * self.node_drift)),
+                replace=False)
+            self.ci[n_idx] = np.clip(
+                self.ci[n_idx] * rng.lognormal(0.0, 0.08, size=n_idx.size),
+                20.0, 900.0)
+        energy = tuple(
+            EnergySample(f"svc{i:04d}", "large", float(self.prof[i]), t=t)
+            for i in range(self.S))
+        traffic = tuple(
+            TrafficSample(src, "large", dst, float(self.vol[l]), 1.0, t=t)
+            for l, (src, dst) in enumerate(self.links))
+        nodes = tuple(
+            Node(self.node_ids[j], carbon=float(self.ci[j]),
+                 capabilities=NodeCapabilities())
+            for j in range(self.N))
+        return (MonitoringData(energy=energy, traffic=traffic),
+                Infrastructure("constraint-bench", nodes))
+
+
+def _pct(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) * 1e3
+
+
+def time_telemetry(report, scen, window=6, repeats=3):
+    """Windowed Eq. 1/2 profiles: TelemetryBuffer ring pooling vs the
+    estimator re-walking every sample of the window.
+
+    Per-tick profiles (``last=1``) are asserted bit-equal to the
+    estimator.  For a ``window``-tick smoothing, the ring already holds
+    per-tick sum/count tensors, so pooling is O(keys); the estimator has
+    to re-walk all ``window * samples`` monitoring records.
+    """
+    import math
+
+    est = EnergyEstimator()
+    ticks = [scen.tick(t)[0] for t in range(window)]
+    buf = TelemetryBuffer(window=window)
+    for t, mon in enumerate(ticks):
+        buf.ingest(t, mon)
+    # per-tick parity: bit-equal to the estimator on the newest tick
+    assert buf.computation_profiles() == \
+        est.computation_profiles(ticks[-1])
+    assert buf.communication_profiles() == \
+        est.communication_profiles(ticks[-1])
+
+    merged = MonitoringData(
+        energy=sum((m.energy for m in ticks), ()),
+        traffic=sum((m.traffic for m in ticks), ()))
+    t_est = min(_timed(lambda: (est.computation_profiles(merged),
+                                est.communication_profiles(merged)))
+                for _ in range(repeats))
+    t_tel = min(
+        _timed(lambda: (buf.computation_profiles(last=window),
+                        buf.communication_profiles(last=window)))
+        for _ in range(repeats))
+    pooled = buf.computation_profiles(last=window)
+    walked = est.computation_profiles(merged)
+    assert pooled.keys() == walked.keys()
+    assert all(math.isclose(pooled[k], walked[k], rel_tol=1e-12)
+               for k in pooled)
+    speedup = t_est / max(t_tel, 1e-9)
+    report(f"# telemetry {window}-tick window: estimator re-walk "
+           f"{t_est * 1e3:.1f}ms vs ring pooling {t_tel * 1e3:.1f}ms "
+           f"({speedup:.1f}x), per-tick profiles bit-equal")
+    return {"window": window, "t_estimator_s": t_est,
+            "t_telemetry_s": t_tel, "speedup": speedup,
+            "profiles_equal": True}
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(report=print, S=1000, N=200, L=500, ticks=12, smoke=False,
+        check=True, out_json=OUT_JSON, seed=0):
+    if smoke:
+        S, N, L, ticks = 300, 60, 150, 8
+    scen = DriftScenario(S, N, L, seed=seed)
+    est = EnergyEstimator()
+    lib = ConstraintLibrary.default()
+
+    # reference trio (own KB)
+    generator = ConstraintGenerator(library=lib, estimator=est)
+    enricher = KBEnricher()
+    ranker = ConstraintRanker()
+    ref_kb = KnowledgeBase()
+    # array engines (own KBs)
+    eng_full = ConstraintEngine(library=lib, kb=ArrayKB(),
+                                incremental=False)
+    eng_inc = ConstraintEngine(library=lib, kb=ArrayKB(), incremental=True)
+
+    report(f"# Constraint pass: {S} services x {N} nodes "
+           f"({S * N} avoidNode candidates), {L} links, {ticks} ticks, "
+           f"drift {scen.service_drift:.0%} services / "
+           f"{scen.node_drift:.0%} nodes per tick")
+    report(f"{'tick':>5} {'reference':>11} {'full':>9} {'incr':>9} "
+           f"{'dirty':>9} {'fresh':>7} {'out':>6}")
+    t_ref, t_full, t_inc, dirty, n_out = [], [], [], [], []
+    for t in range(ticks):
+        mon, infra = scen.tick(t)
+        comp = est.computation_profiles(mon)
+        comm = est.communication_profiles(mon)
+        it = t + 1
+
+        t0 = time.perf_counter()
+        fresh = generator.generate(scen.app, infra, mon, it)
+        merged = enricher.update(ref_kb, fresh, comp, comm, infra, it)
+        ref_out = ranker.rank(merged)
+        t_ref.append(time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        full_out = eng_full.run(scen.app, infra, comp, comm, it).constraints
+        t_full.append(time.perf_counter() - t0)
+
+        t0 = time.perf_counter()
+        inc_out = eng_inc.run(scen.app, infra, comp, comm, it).constraints
+        t_inc.append(time.perf_counter() - t0)
+
+        # bit-identical constraints, every tick, all three passes
+        assert full_out == ref_out, f"full pass diverged at tick {t}"
+        assert inc_out == ref_out, f"incremental pass diverged at tick {t}"
+        st = eng_inc.last_stats
+        dirty.append(st.rescored)
+        n_out.append(len(inc_out))
+        report(f"{t:>5} {t_ref[-1] * 1e3:>9.1f}ms {t_full[-1] * 1e3:>7.1f}ms "
+               f"{t_inc[-1] * 1e3:>7.1f}ms {st.rescored:>9d} "
+               f"{st.fresh:>7d} {len(inc_out):>6d}")
+
+    # percentiles over post-warmup ticks (tick 0 is the structural
+    # rebuild: both engines derive every candidate there)
+    sl = slice(1, None)
+    modes = {
+        "reference_ms": {"p50": _pct(t_ref[sl], 50),
+                         "p95": _pct(t_ref[sl], 95)},
+        "engine_full_ms": {"p50": _pct(t_full[sl], 50),
+                           "p95": _pct(t_full[sl], 95)},
+        "engine_incremental_ms": {"p50": _pct(t_inc[sl], 50),
+                                  "p95": _pct(t_inc[sl], 95)},
+    }
+    inc_speedup = (modes["engine_full_ms"]["p50"]
+                   / max(modes["engine_incremental_ms"]["p50"], 1e-9))
+    ref_speedup = (modes["reference_ms"]["p50"]
+                   / max(modes["engine_incremental_ms"]["p50"], 1e-9))
+    report(f"\n# p50: reference {modes['reference_ms']['p50']:.1f}ms, "
+           f"engine full {modes['engine_full_ms']['p50']:.1f}ms, "
+           f"incremental {modes['engine_incremental_ms']['p50']:.1f}ms")
+    report(f"# incremental vs full {inc_speedup:.1f}x "
+           f"(floor {REQUIRED_SPEEDUP:.0f}x); vs reference "
+           f"{ref_speedup:.0f}x; constraints bit-matched on all "
+           f"{ticks} ticks")
+    if check:
+        assert inc_speedup >= REQUIRED_SPEEDUP, modes
+
+    telemetry = time_telemetry(report, DriftScenario(S, N, L, seed=seed))
+
+    section = {
+        "scenario": {"services": S, "nodes": N, "links": L, "ticks": ticks,
+                     "seed": seed, "service_drift": scen.service_drift,
+                     "node_drift": scen.node_drift,
+                     "avoid_candidates": S * N},
+        "modes": modes,
+        "incremental_vs_full_speedup": inc_speedup,
+        "incremental_vs_reference_speedup": ref_speedup,
+        "dirty_candidates_p50": float(np.percentile(dirty[sl], 50)),
+        "constraints_per_tick_p50": float(np.percentile(n_out, 50)),
+        "constraints_bit_match": True,
+        "telemetry": telemetry,
+    }
+    if out_json:
+        blob = {}
+        if os.path.exists(out_json):
+            with open(out_json) as fh:
+                blob = json.load(fh)
+        blob["constraint_engine"] = section
+        with open(out_json, "w") as fh:
+            json.dump(blob, fh, indent=2)
+        report(f"# merged 'constraint_engine' into {out_json}")
+    return section
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small scenario for CI; does not overwrite the "
+                         "tracked BENCH json")
+    ap.add_argument("--check", action="store_true",
+                    help="gate the incremental >= 2x p50 speedup")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, check=args.check or not args.smoke,
+        out_json=args.out if args.out
+        else (None if args.smoke else OUT_JSON))
+
+
+if __name__ == "__main__":
+    main()

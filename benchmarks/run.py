@@ -10,6 +10,7 @@ import time
 def main() -> None:
     quick = "--quick" in sys.argv
     from benchmarks import (
+        constraint_engine,
         continuum_loop,
         explainability,
         fig2_scalability,
@@ -42,6 +43,12 @@ def main() -> None:
         ("continuum_loop (adaptive loop, 7-day trace)", continuum_loop.run,
          # quick mode shortens the trace and must not overwrite the tracked
          # BENCH_continuum.json with a partial run
+         {"smoke": True, "out_json": None} if quick else {}),
+        ("constraint_engine (array vs reference, full vs incremental)",
+         constraint_engine.run,
+         # quick mode shrinks the grid and must not overwrite the tracked
+         # BENCH json; runs AFTER continuum_loop so the merged
+         # constraint_engine section lands on the fresh file
          {"smoke": True, "out_json": None} if quick else {}),
         ("roofline single-pod (§Roofline)", roofline.run, {}),
         ("roofline multi-pod (§Dry-run)", roofline.run, {"multi_pod": True}),

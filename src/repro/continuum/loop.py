@@ -28,6 +28,7 @@ Each tick (= one observation window, one hour):
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -78,6 +79,11 @@ class RuntimeConfig:
     # shapes to bucket boundaries so drifting shapes (services appearing /
     # leaving, ensembles resizing) reuse one compiled XLA program.
     bucket: Optional[BucketSpec] = None
+    # Auto-derive the bucket grid from observed shape traffic: after this
+    # many replans, ``BucketSpec.from_observed`` picks waste-minimizing
+    # boundaries from the shapes the loop actually saw and swaps them into
+    # the planner (0 = off; ignored when ``bucket`` is set explicitly).
+    auto_bucket_after: int = 0
 
 
 @dataclass
@@ -101,6 +107,14 @@ class TickRecord:
     replan_s: float = 0.0
     lowering_path: str = "none"
     compiles: int = 0
+    # Constraint-pass telemetry (the generate -> enrich -> rank stage):
+    # wall time of the pipeline's constraint pass, and — on the array
+    # engine — how many candidate cells were re-scored this tick
+    # (== the full grid on a rebuild/full pass, only the dirty
+    # profile/CI slabs in incremental mode; -1 on the reference path,
+    # which has no dirty accounting).
+    constraint_s: float = 0.0
+    dirty_candidates: int = -1
 
 
 @dataclass
@@ -147,8 +161,6 @@ class ContinuumRuntime:
     last_result: Optional[object] = field(default=None, repr=False)
 
     def __post_init__(self) -> None:
-        import dataclasses
-
         self._node_regions = [
             n.region or n.node_id for n in self.infra.nodes]
         # the runtime drives the pipeline tick-to-tick (it already owns
@@ -159,11 +171,19 @@ class ContinuumRuntime:
         # configuration untouched)
         self.pipeline.delta_substitution = self.config.delta_replanning
         if self.config.bucket is not None:
-            sched = self.planner.scheduler
-            self.planner = dataclasses.replace(
-                self.planner,
-                scheduler=GreenScheduler(dataclasses.replace(
-                    sched.config, bucket=self.config.bucket)))
+            self._apply_bucket(self.config.bucket)
+        # auto-bucket warmup: observed (S, F, N, L, B) shapes per replan
+        self._observed_shapes: List[Tuple] = []
+        self.auto_bucket: Optional[BucketSpec] = None
+
+    def _apply_bucket(self, spec: BucketSpec) -> None:
+        """Swap a bucketed scheduler into the (possibly shared/injected)
+        planner without mutating the caller's config."""
+        sched = self.planner.scheduler
+        self.planner = dataclasses.replace(
+            self.planner,
+            scheduler=GreenScheduler(dataclasses.replace(
+                sched.config, bucket=spec)))
 
     def tick(self, t: int) -> TickRecord:
         """One adaptive-loop iteration.  Repoints the pipeline gatherer's
@@ -183,6 +203,9 @@ class ContinuumRuntime:
         # delta fast path array-substitutes ci/E when only profiles moved)
         out = self.pipeline.run(self.app, self.infra, mon,
                                 use_kb=cfg.use_kb)
+        cstats = getattr(self.pipeline, "constraint_stats", None) or {}
+        constraint_s = float(cstats.get("constraint_s", 0.0))
+        dirty_candidates = int(cstats.get("rescored", -1))
         stats0 = dict(self.pipeline.lowering_stats)
         misses0 = COMPILE_CACHE.misses
         t_replan0 = time.perf_counter()
@@ -217,6 +240,22 @@ class ContinuumRuntime:
             tick_problem = problem.with_scenarios(ScenarioBatch(ci=ci_b))
             if cfg.warm_start and self.current is not None:
                 tick_problem = tick_problem.with_warm_start(self.current)
+            # auto-bucket warmup: record this replan's shape; once the
+            # window is full, derive waste-minimizing bucket boundaries
+            # from the observed shape traffic and bucket the planner
+            # (shape collection stops once the bucket is derived — or
+            # never starts when auto-bucketing is off)
+            if (cfg.auto_bucket_after and cfg.bucket is None
+                    and self.auto_bucket is None):
+                self._observed_shapes.append((
+                    low.S, low.F, low.N,
+                    low.comm.n_links if low.comm.kind == "sparse"
+                    else None,
+                    tick_problem.B))
+                if len(self._observed_shapes) >= cfg.auto_bucket_after:
+                    self.auto_bucket = BucketSpec.from_observed(
+                        self._observed_shapes)
+                    self._apply_bucket(self.auto_bucket)
             result = self.planner.evaluate(tick_problem)
             self.last_result = result
             cand_plan = result.best_plan
@@ -262,7 +301,8 @@ class ContinuumRuntime:
             n_constraints=len(out.constraints),
             warm_start_rejected=warm_rejected,
             restarts=restarts, rebuild_s=rebuild_s, replan_s=replan_s,
-            lowering_path=lowering_path, compiles=compiles)
+            lowering_path=lowering_path, compiles=compiles,
+            constraint_s=constraint_s, dirty_candidates=dirty_candidates)
 
     def run(self, start: int, ticks: int) -> ContinuumResult:
         gatherer = self.pipeline.gatherer

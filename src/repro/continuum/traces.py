@@ -36,6 +36,23 @@ from repro.core.types import (
 _CI_FLOOR = 5.0  # gCO2eq/kWh — even hydro grids are never zero
 
 
+def _parse_timestamp(ts: str):
+    """Sortable timestamp: ISO-8601 (Z suffix tolerated) or epoch number;
+    falls back to the raw string (lexicographic — correct for the common
+    zero-padded exports)."""
+    from datetime import datetime
+
+    ts = ts.strip()
+    try:
+        return datetime.fromisoformat(ts.replace("Z", "+00:00"))
+    except ValueError:
+        pass
+    try:
+        return float(ts)
+    except ValueError:
+        return ts
+
+
 @dataclass(frozen=True)
 class RegionProfile:
     """Shape of one region's carbon-intensity process."""
@@ -97,6 +114,102 @@ class CarbonTrace:
 
     def series(self, region: str) -> np.ndarray:
         return self._series[region]
+
+    # -- recorded data (ROADMAP "Real carbon data") -------------------------
+
+    @classmethod
+    def from_csv(cls, path: str, seed: int = 0) -> "CarbonTrace":
+        """Recorded carbon trace from an ElectricityMaps/WattTime-style
+        CSV export: one row per (timestamp, zone) with the zone's carbon
+        intensity in gCO2eq/kWh.
+
+        Column names are sniffed case-insensitively: timestamp from
+        ``timestamp``/``datetime``/``date``/``time``, zone from
+        ``zone``/``zone_key``/``zone_id``/``zone_name``/``region``, and
+        carbon intensity from ``carbon_intensity[_avg]``/
+        ``co2_intensity``/``gco2eq_per_kwh``/``gco2_per_kwh``/``ci``.
+        Rows are grouped per zone and sorted by timestamp (ISO-8601
+        strings or epoch numbers); rows with an empty CI cell are
+        skipped.  Zones are aligned on their latest common start
+        timestamp (ragged exports must not be index-aligned: tick t has
+        to mean the same wall-clock hour in every region) and then
+        truncated to the shortest common length.
+
+        The result is a regular :class:`CarbonTrace` — the recorded
+        series sit behind the exact same ``history_signal`` /
+        ``forecast_signal`` / ``scenario_matrix`` interface the
+        ``EnergyMixGatherer`` and the adaptive loop consume, so swapping
+        synthetic presets for recorded data is a one-line change.
+        ``seed`` only drives the (synthetic) scenario-ensemble
+        perturbations around the recorded forecast.
+        """
+        import csv
+
+        by_zone: Dict[str, List] = {}
+        with open(path, newline="") as fh:
+            reader = csv.DictReader(fh)
+            cols = {c.lower().strip(): c for c in reader.fieldnames or ()}
+
+            def pick(cands, what):
+                for cand in cands:
+                    if cand in cols:
+                        return cols[cand]
+                raise ValueError(
+                    f"{path!r}: no {what} column "
+                    f"(headers: {sorted(cols)})")
+
+            t_col = pick(("timestamp", "datetime", "date", "time"),
+                         "timestamp")
+            z_col = pick(("zone", "zone_key", "zone_id", "zone_name",
+                          "region"), "zone")
+            ci_col = pick(("carbon_intensity", "carbon_intensity_avg",
+                           "carbonintensity", "co2_intensity",
+                           "gco2eq_per_kwh", "gco2_per_kwh", "ci"),
+                          "carbon-intensity")
+            for row in reader:
+                ci = row.get(ci_col)
+                if ci is None or ci.strip() == "":
+                    continue
+                by_zone.setdefault(row[z_col].strip(), []).append(
+                    (_parse_timestamp(row[t_col]), float(ci)))
+        if not by_zone:
+            raise ValueError(f"{path!r}: no carbon-intensity rows")
+
+        for zone, rows in by_zone.items():
+            try:
+                rows.sort(key=lambda r: r[0])
+            except TypeError:
+                kinds = sorted({type(ts).__name__ for ts, _ in rows})
+                raise ValueError(
+                    f"{path!r}: zone {zone!r} mixes timestamp formats "
+                    f"({', '.join(kinds)}) — use consistent ISO-8601 or "
+                    "epoch timestamps") from None
+        # align zones on a common start: ragged exports (zones beginning
+        # at different hours) must not be index-aligned, or tick t would
+        # compare different wall-clock hours across regions — exactly the
+        # cross-region CI comparison the planner exists for
+        try:
+            start = max(rows[0][0] for rows in by_zone.values())
+        except TypeError:
+            kinds = sorted({type(rows[0][0]).__name__
+                            for rows in by_zone.values()})
+            raise ValueError(
+                f"{path!r}: zones mix timestamp formats "
+                f"({', '.join(kinds)}) — use one format for the whole "
+                "file") from None
+        series = {}
+        for zone, rows in by_zone.items():
+            aligned = [v for ts, v in rows if ts >= start]
+            if not aligned:
+                raise ValueError(
+                    f"{path!r}: zone {zone!r} has no rows at or after "
+                    f"the common start {start!r}")
+            series[zone] = np.array(aligned, dtype=float)
+        hours = min(len(s) for s in series.values())
+        trace = cls(regions={}, hours=hours, seed=seed)
+        for zone, s in series.items():
+            trace._series[zone] = s[:hours]
+        return trace
 
     # -- EnergyMixGatherer-compatible signals -------------------------------
 

@@ -13,6 +13,7 @@ closes the loop: constraints -> array-native scheduler -> deployment plan.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -93,6 +94,15 @@ class GreenConstraintPipeline:
     alpha: float = 0.8
     flavour_scope: str = "current"
     tau_scope: str = "candidates"
+    # Constraint pass implementation:
+    #   "array"     — the array-native ConstraintEngine (repro.learn):
+    #                 vectorized Eq. 3-12 with dirty-mask incremental
+    #                 re-scoring, bit-identical to the reference trio;
+    #   "reference" — the legacy ConstraintGenerator + KBEnricher +
+    #                 ConstraintRanker object walk;
+    #   "parity"    — run BOTH and assert the outputs are identical
+    #                 (the debugging/validation path).
+    engine: str = "array"
     iteration: int = 0
     # Per-tick delta fast path: when consecutive ticks differ only in
     # ci[N] / E[S, F] values (same structure, same masks), rebuild the
@@ -115,6 +125,16 @@ class GreenConstraintPipeline:
         default_factory=lambda: {
             "cache_hits": 0, "delta_substitutions": 0, "full_lowers": 0},
         repr=False, compare=False)
+    # Observability: the last run's constraint pass — path taken, wall
+    # time, and (array engine) candidate/dirty/reuse counters.
+    constraint_stats: Dict[str, object] = field(
+        default_factory=dict, repr=False, compare=False)
+    _engine: Optional[object] = field(
+        default=None, repr=False, compare=False)
+    _engine_sig: Optional[tuple] = field(
+        default=None, repr=False, compare=False)
+    _shadow_kb: Optional[KnowledgeBase] = field(
+        default=None, repr=False, compare=False)
 
     def run(
         self,
@@ -129,24 +149,49 @@ class GreenConstraintPipeline:
         computation = self.estimator.computation_profiles(monitoring)
         communication = self.estimator.communication_profiles(monitoring)
 
-        generator = ConstraintGenerator(
-            library=self.library,
-            estimator=self.estimator,
-            alpha=self.alpha,
-            flavour_scope=self.flavour_scope,
-            tau_scope=self.tau_scope,
-        )
-        fresh = generator.generate(app, infra, monitoring, self.iteration)
-
-        if use_kb:
-            merged = self.enricher.update(
-                self.kb, fresh, computation, communication, infra,
-                self.iteration,
-            )
+        t0 = time.perf_counter()
+        if self.engine == "reference":
+            ranked = self._reference_pass(
+                app, infra, monitoring, computation, communication,
+                use_kb, self._reference_kb())
+            self.constraint_stats = {
+                "path": "reference",
+                "constraint_s": time.perf_counter() - t0,
+            }
+        elif self.engine in ("array", "parity"):
+            eng = self._ensure_engine()
+            if self.engine == "parity" and self._shadow_kb is None:
+                # snapshot the reference KB BEFORE the engine mutates its
+                # own: both passes must decay this tick's mu exactly once
+                # (self.kb is an ArrayKB here — _ensure_engine converted
+                # it — and to_kb() materializes an independent copy; the
+                # shadow must never alias the live KB)
+                self._shadow_kb = self.kb.to_kb()
+            res = eng.run(app, infra, computation, communication,
+                          self.iteration, use_kb=use_kb)
+            ranked = res.constraints
+            s = res.stats
+            self.constraint_stats = {
+                "path": self.engine,
+                "constraint_s": time.perf_counter() - t0,
+                "mode": s.mode, "candidates": s.candidates,
+                "rescored": s.rescored, "instantiated": s.instantiated,
+                "reused": s.reused, "fresh": s.fresh,
+                "retrieved": s.retrieved, "constraints": s.constraints,
+            }
+            if self.engine == "parity":
+                ref = self._reference_pass(
+                    app, infra, monitoring, computation, communication,
+                    use_kb, self._shadow())
+                if ranked != ref:
+                    raise AssertionError(
+                        "array constraint engine diverged from the "
+                        f"reference trio at iteration {self.iteration}: "
+                        f"{len(ranked)} vs {len(ref)} constraints")
         else:
-            merged = fresh
-
-        ranked = self.ranker.rank(merged)
+            raise ValueError(
+                f"unknown constraint engine {self.engine!r} "
+                "(expected 'array', 'reference', or 'parity')")
         report = generate_report(ranked)
         return GeneratorOutput(
             constraints=ranked,
@@ -158,6 +203,82 @@ class GreenConstraintPipeline:
             computation=computation,
             communication=communication,
         )
+
+    # -- constraint-pass plumbing -------------------------------------------
+
+    def _reference_pass(self, app, infra, monitoring, computation,
+                        communication, use_kb, kb) -> List[Constraint]:
+        """The legacy Sect. 4.3-4.5 object walk (ConstraintGenerator +
+        KBEnricher + ConstraintRanker) against the given KnowledgeBase."""
+        generator = ConstraintGenerator(
+            library=self.library,
+            estimator=self.estimator,
+            alpha=self.alpha,
+            flavour_scope=self.flavour_scope,
+            tau_scope=self.tau_scope,
+        )
+        fresh = generator.generate(app, infra, monitoring, self.iteration)
+        if use_kb:
+            merged = self.enricher.update(
+                kb, fresh, computation, communication, infra,
+                self.iteration)
+        else:
+            merged = fresh
+        return self.ranker.rank(merged)
+
+    def _engine_config_sig(self) -> tuple:
+        return (id(self.library), self.alpha, self.flavour_scope,
+                self.tau_scope, self.ranker.impact_floor_g,
+                self.ranker.attenuation, self.ranker.discard_below,
+                self.enricher.decay, self.enricher.forget,
+                self.enricher.valid)
+
+    def _ensure_engine(self):
+        """Lazily build (or refresh) the array ConstraintEngine.  The
+        pipeline's KB is converted to an :class:`~repro.learn.kb_array.
+        ArrayKB` in place — it exposes the same read API (``kb.sk[key]``,
+        ``kb.ck[key].mu``, ``save``/``load``), so existing callers keep
+        working against ``pipeline.kb``."""
+        from repro.learn import ArrayKB, ConstraintEngine
+
+        sig = self._engine_config_sig()
+        eng = self._engine
+        if eng is not None and self._engine_sig == sig \
+                and eng.kb is self.kb:
+            return eng
+        if isinstance(self.kb, KnowledgeBase):
+            self.kb = ArrayKB.from_kb(self.kb)
+        self._engine = ConstraintEngine(
+            library=self.library,
+            kb=self.kb,
+            alpha=self.alpha,
+            flavour_scope=self.flavour_scope,
+            tau_scope=self.tau_scope,
+            impact_floor_g=self.ranker.impact_floor_g,
+            attenuation=self.ranker.attenuation,
+            discard_below=self.ranker.discard_below,
+            decay=self.enricher.decay,
+            forget=self.enricher.forget,
+            valid=self.enricher.valid,
+        )
+        self._engine_sig = sig
+        return self._engine
+
+    def _reference_kb(self) -> KnowledgeBase:
+        """KB for the pure-reference path: convert back from an ArrayKB
+        if a previous array run switched the representation."""
+        if not isinstance(self.kb, KnowledgeBase):
+            self.kb = self.kb.to_kb()
+            self._engine = None
+        return self.kb
+
+    def _shadow(self) -> KnowledgeBase:
+        """The parity path's reference KnowledgeBase — snapshotted in
+        ``run`` before the engine's pass (so each side decays the tick's
+        mu exactly once) and evolved in lockstep afterwards."""
+        assert self._shadow_kb is not None, \
+            "parity shadow KB must be snapshotted before the engine pass"
+        return self._shadow_kb
 
     def plan(
         self,

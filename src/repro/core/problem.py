@@ -103,6 +103,38 @@ class BucketSpec:
         return cls(s=tuple(s), f=tuple(f), n=tuple(n), l=tuple(l),
                    b=tuple(b))
 
+    @classmethod
+    def from_observed(cls, shapes, max_buckets: int = 3) -> "BucketSpec":
+        """Derive bucket boundaries from observed shape traffic.
+
+        ``shapes`` is a sequence of observed ``(S, F, N, L, B)`` problem
+        shapes (``L`` may be None for the dense comm backend).  Per
+        dimension, up to ``max_buckets`` boundaries are chosen from the
+        observed values — always including the maximum, so every observed
+        shape fits a bucket — minimizing the total padding waste
+        ``sum_over_observations(boundary(v) - v)``.  Dimensions with at
+        most ``max_buckets`` distinct values get exact boundaries (zero
+        waste); repeated values weight the objective, so the hot shapes
+        land on a boundary.  This replaces hand-tuning ``BucketSpec.grid``
+        after a warmup window (``RuntimeConfig.auto_bucket_after``).
+        """
+        rows = [tuple(sh) for sh in shapes]
+        if not rows:
+            raise ValueError("from_observed needs at least one shape")
+        if any(len(r) != 5 for r in rows):
+            raise ValueError(
+                "shapes must be (S, F, N, L, B) tuples (L may be None)")
+        cols = list(zip(*rows))
+
+        def grid(values) -> Tuple[int, ...]:
+            vals = [int(v) for v in values if v is not None and v > 0]
+            if not vals:
+                return ()
+            return _waste_minimizing_boundaries(vals, max_buckets)
+
+        return cls(s=grid(cols[0]), f=grid(cols[1]), n=grid(cols[2]),
+                   l=grid(cols[3]), b=grid(cols[4]))
+
     def pad_dims(self, S: int, F: int, N: int, L: Optional[int],
                  B: int) -> Tuple[int, int, int, Optional[int], int]:
         """Bucketed ``(S, F, N, L, B)``.  ``L`` is None for the dense comm
@@ -120,6 +152,49 @@ class BucketSpec:
             if L_pad > L and S_pad == S:
                 S_pad = _round_up(S + 1, self.s, self.s_floor)
         return S_pad, F_pad, N_pad, L_pad, B_pad
+
+
+def _waste_minimizing_boundaries(values, max_buckets: int
+                                 ) -> Tuple[int, ...]:
+    """Choose <= ``max_buckets`` boundaries from the observed values
+    (always including the max) minimizing total round-up padding,
+    count-weighted.  Exact DP over the distinct values: dp[c][i] = min
+    waste covering the i smallest distinct values with c boundaries, the
+    i-th being one."""
+    from collections import Counter
+
+    pairs = sorted(Counter(values).items())
+    u = [v for v, _ in pairs]
+    w = [c for _, c in pairs]
+    k = len(u)
+    if k <= max_buckets:
+        return tuple(u)
+
+    def seg(a: int, b: int) -> int:
+        # values u[a..b] all round up to boundary u[b]
+        return sum(w[x] * (u[b] - u[x]) for x in range(a, b + 1))
+
+    INF = float("inf")
+    dp = [[INF] * k for _ in range(max_buckets + 1)]
+    choice = [[-1] * k for _ in range(max_buckets + 1)]
+    for i in range(k):
+        dp[1][i] = seg(0, i)
+    for c in range(2, max_buckets + 1):
+        for i in range(c - 1, k):
+            best, arg = INF, -1
+            for j in range(c - 2, i):
+                v = dp[c - 1][j] + seg(j + 1, i)
+                if v < best:
+                    best, arg = v, j
+            dp[c][i], choice[c][i] = best, arg
+    c = min(range(1, max_buckets + 1), key=lambda cc: dp[cc][k - 1])
+    bounds = []
+    i = k - 1
+    while c >= 1 and i >= 0:
+        bounds.append(u[i])
+        i = choice[c][i]
+        c -= 1
+    return tuple(sorted(bounds))
 
 
 @dataclass(frozen=True)

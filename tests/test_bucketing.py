@@ -249,3 +249,88 @@ def test_plan_stats_telemetry():
     assert r2.stats.plan_time_s > 0.0
     assert COMPILE_CACHE.misses - misses0 <= 1
     assert r2.stats.cache_hits >= 1
+
+
+# ---------------------------------------------------------------------------
+# BucketSpec.from_observed: auto-derived grids from shape traffic
+# ---------------------------------------------------------------------------
+
+
+def test_from_observed_exact_when_few_distinct():
+    spec = BucketSpec.from_observed(
+        [(10, 2, 5, None, 8), (12, 2, 6, None, 8), (10, 2, 5, None, 8)])
+    assert spec.s == (10, 12)
+    assert spec.f == (2,)
+    assert spec.n == (5, 6)
+    assert spec.l == ()          # dense backend: no edge axis observed
+    assert spec.b == (8,)
+    # every observed shape fits its bucket with zero padding
+    assert spec.pad_dims(10, 2, 5, None, 8) == (10, 2, 5, None, 8)
+    assert spec.pad_dims(12, 2, 6, None, 8) == (12, 2, 6, None, 8)
+
+
+def test_from_observed_minimizes_count_weighted_waste():
+    # 5 observations at S=10, one at 16, one at 100; with 2 boundaries the
+    # waste-minimizing grid is (16, 100): 5 * (16 - 10) = 30 beats
+    # (10, 100)'s 100 - 16 = 84 — the hot shape may pad a little so the
+    # outlier doesn't drag everything to its boundary.
+    shapes = [(10, 1, 4, None, 1)] * 5 + [(16, 1, 4, None, 1),
+                                          (100, 1, 4, None, 1)]
+    spec = BucketSpec.from_observed(shapes, max_buckets=2)
+    assert spec.s == (16, 100)
+    # with 3 boundaries the grid is exact
+    assert BucketSpec.from_observed(shapes, max_buckets=3).s == \
+        (10, 16, 100)
+
+
+def test_from_observed_covers_max_and_mixed_l():
+    shapes = [(50, 2, 10, 64, 4), (60, 2, 12, None, 4),
+              (55, 2, 11, 80, 4)]
+    spec = BucketSpec.from_observed(shapes, max_buckets=2)
+    assert spec.s[-1] == 60 and spec.n[-1] == 12 and spec.l[-1] == 80
+    # shapes never exceed the last boundary -> all observed shapes bucket
+    for S, F, N, L, B in shapes:
+        S_p, F_p, N_p, L_p, B_p = spec.pad_dims(S, F, N, L, B)
+        assert S_p >= S and F_p >= F and N_p >= N and B_p >= B
+
+
+def test_from_observed_rejects_garbage():
+    with pytest.raises(ValueError):
+        BucketSpec.from_observed([])
+    with pytest.raises(ValueError):
+        BucketSpec.from_observed([(1, 2, 3)])
+
+
+def test_runtime_auto_bucket_after_warmup():
+    """ContinuumRuntime derives and applies a BucketSpec from the shapes
+    it observed during the warmup window (ROADMAP PR 4 "Next" item)."""
+    from repro.continuum import (
+        CarbonTrace, ContinuumRuntime, REGION_PRESETS, RuntimeConfig,
+        WhatIfPlanner, WorkloadTrace)
+    from repro.core.pipeline import GreenConstraintPipeline
+
+    services = tuple(
+        Service(f"svc{i}", flavours=(
+            Flavour("f", FlavourRequirements(cpu=1.0)),))
+        for i in range(4))
+    app = Application("t", services)
+    nodes = tuple(
+        Node(f"{r}-0", region=r, capabilities=NodeCapabilities(cpu=8.0))
+        for r in ("solar-south", "wind-north", "coal-east"))
+    tr = CarbonTrace(REGION_PRESETS, hours=60, seed=0)
+    rt = ContinuumRuntime(
+        app, Infrastructure("t", nodes), tr, WorkloadTrace(app, seed=0),
+        config=RuntimeConfig(scenarios=2, auto_bucket_after=2),
+        pipeline=GreenConstraintPipeline(),
+        planner=WhatIfPlanner(GreenScheduler(
+            SchedulerConfig(emission_weight=1.0))))
+    res = rt.run(start=24, ticks=5)
+    assert len(res.ticks) == 5
+    assert rt.auto_bucket is not None
+    assert rt.planner.scheduler.config.bucket == rt.auto_bucket
+    # the derived grid covers the observed steady-state shape
+    S_p, F_p, N_p, _, B_p = rt.auto_bucket.pad_dims(4, 1, 3, None, 2)
+    assert S_p >= 4 and N_p >= 3 and B_p >= 2
+    # constraint-pass telemetry rides on the tick records
+    assert all(r.constraint_s > 0 for r in res.ticks)
+    assert all(r.dirty_candidates >= 0 for r in res.ticks)

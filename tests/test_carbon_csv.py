@@ -1,0 +1,152 @@
+"""CarbonTrace.from_csv: recorded ElectricityMaps-style series behind the
+history_signal/forecast_signal interface (ROADMAP "Real carbon data")."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.continuum import (
+    CarbonTrace,
+    ContinuumRuntime,
+    RuntimeConfig,
+    WhatIfPlanner,
+    WorkloadTrace,
+)
+from repro.core.energy import EnergyMixGatherer
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import GreenScheduler, SchedulerConfig
+from repro.core.types import (
+    Application,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "electricitymaps_sample.csv")
+
+
+def test_fixture_loads_zones_and_values():
+    tr = CarbonTrace.from_csv(FIXTURE)
+    assert sorted(tr._series) == ["DE", "FR", "PL"]
+    assert tr.hours == 48
+    for z in ("DE", "FR", "PL"):
+        assert tr.series(z).shape == (48,)
+    # the fixture's diurnal trough: DE dips at hour 13 on day one
+    de = tr.series("DE")
+    assert de[13] == min(de[:24])
+    assert de[13] == pytest.approx(260.0)
+    # FR is the clean flat-ish grid
+    assert tr.series("FR").mean() < 100.0
+
+
+def test_signals_and_scenarios_work_on_recorded_data():
+    tr = CarbonTrace.from_csv(FIXTURE)
+    hist = tr.history_signal(30)
+    assert len(hist("DE")) == 31
+    assert hist("DE")[-1] == tr.series("DE")[30]
+    fc = tr.forecast_signal(30, 6)("PL")
+    assert len(fc) == 6 and all(v > 0 for v in fc)
+    m = tr.scenario_matrix(["DE", "FR", "DE"], t=30, horizon=6, B=4)
+    assert m.shape == (4, 3)
+    np.testing.assert_array_equal(
+        m, tr.scenario_matrix(["DE", "FR", "DE"], t=30, horizon=6, B=4))
+
+
+def test_gatherer_enriches_from_recorded_trace():
+    tr = CarbonTrace.from_csv(FIXTURE)
+    g = EnergyMixGatherer(signal=tr.history_signal(40))
+    infra = Infrastructure("t", (Node("x", region="DE"),
+                                 Node("y", region="FR")))
+    out = g.enrich(infra)
+    assert out.node("x").carbon == pytest.approx(
+        np.mean(tr.series("DE")[40 - 23: 41]))
+    assert out.node("y").carbon < out.node("x").carbon
+
+
+def test_header_variants_and_unsorted_rows(tmp_path):
+    p = tmp_path / "watttime.csv"
+    p.write_text(
+        "timestamp,region,carbon_intensity\n"
+        "2024-01-01T02:00:00,z1,300\n"
+        "2024-01-01T00:00:00,z1,100\n"
+        "2024-01-01T01:00:00,z1,200\n"
+        "2024-01-01T00:00:00,z2,50\n"
+        "2024-01-01T01:00:00,z2,\n"      # empty CI cell skipped
+        "2024-01-01T01:00:00,z2,60\n")
+    tr = CarbonTrace.from_csv(str(p))
+    # rows sorted per zone; zones truncated to the common length
+    np.testing.assert_array_equal(tr.series("z1"), [100.0, 200.0])
+    np.testing.assert_array_equal(tr.series("z2"), [50.0, 60.0])
+    assert tr.hours == 2
+
+
+def test_ragged_zone_starts_align_on_common_start(tmp_path):
+    """Zones beginning at different hours must be aligned on the latest
+    common start, not index-aligned (tick t = same wall-clock hour in
+    every region)."""
+    p = tmp_path / "ragged.csv"
+    p.write_text(
+        "timestamp,zone,ci\n"
+        "2024-01-01T00:00:00,A,10\n"
+        "2024-01-01T01:00:00,A,11\n"
+        "2024-01-01T02:00:00,A,12\n"
+        "2024-01-01T03:00:00,A,13\n"
+        "2024-01-01T02:00:00,B,20\n"
+        "2024-01-01T03:00:00,B,21\n"
+        "2024-01-01T04:00:00,B,22\n"
+        "2024-01-01T05:00:00,B,23\n")
+    tr = CarbonTrace.from_csv(str(p))
+    # common start = 02:00 -> A contributes 2 rows, both truncate to 2
+    assert tr.hours == 2
+    np.testing.assert_array_equal(tr.series("A"), [12.0, 13.0])
+    np.testing.assert_array_equal(tr.series("B"), [20.0, 21.0])
+
+
+def test_disjoint_zone_ranges_raise(tmp_path):
+    p = tmp_path / "disjoint.csv"
+    p.write_text(
+        "timestamp,zone,ci\n"
+        "2024-01-01T00:00:00,A,10\n"
+        "2024-01-02T00:00:00,B,20\n")
+    with pytest.raises(ValueError, match="common start"):
+        CarbonTrace.from_csv(str(p))
+
+
+def test_missing_column_raises(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("when,zone,carbon_intensity\nx,z,1\n")
+    with pytest.raises(ValueError, match="timestamp"):
+        CarbonTrace.from_csv(str(p))
+    p.write_text("timestamp,zone,stuff\nx,z,1\n")
+    with pytest.raises(ValueError, match="carbon-intensity"):
+        CarbonTrace.from_csv(str(p))
+
+
+def test_continuum_runtime_runs_on_recorded_trace():
+    """The adaptive loop drives off the recorded series unchanged."""
+    tr = CarbonTrace.from_csv(FIXTURE)
+    services = tuple(
+        Service(f"svc{i}", flavours=(
+            Flavour("f", FlavourRequirements(cpu=1.0)),))
+        for i in range(3))
+    app = Application("t", services)
+    nodes = tuple(
+        Node(f"{z}-0", region=z, capabilities=NodeCapabilities(cpu=8.0))
+        for z in ("DE", "FR", "PL"))
+    rt = ContinuumRuntime(
+        app, Infrastructure("t", nodes), tr, WorkloadTrace(app, seed=0),
+        config=RuntimeConfig(scenarios=2, horizon_h=3),
+        pipeline=GreenConstraintPipeline(),
+        planner=WhatIfPlanner(
+            GreenScheduler(SchedulerConfig(emission_weight=1.0))))
+    res = rt.run(start=25, ticks=4)
+    assert len(res.ticks) == 4
+    assert res.total_emissions_g > 0
+    # FR is the cleanest zone throughout the fixture; the
+    # emission-weighted planner must land everything there
+    assert all(n == "FR-0" for _, n in res.final_assignment.values())
+    assert all(r.constraint_s >= 0 for r in res.ticks)

@@ -1,0 +1,111 @@
+"""TelemetryBuffer: ring semantics + estimator parity + tensor views."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.energy import EnergyEstimator
+from repro.core.types import (
+    EnergySample,
+    Infrastructure,
+    MonitoringData,
+    Node,
+    TrafficSample,
+)
+from repro.learn import TelemetryBuffer
+
+
+def _mon(t, services=("a", "b"), reps=3):
+    energy = tuple(
+        EnergySample(s, "f", 0.1 * (i + 1) * (t + 1), t=t)
+        for i, s in enumerate(services) for _ in range(reps))
+    traffic = (TrafficSample("a", "f", "b", 10.0 * (t + 1), 0.5, t=t),)
+    return MonitoringData(energy=energy, traffic=traffic)
+
+
+def test_single_tick_profiles_bit_match_estimator():
+    mon = _mon(0)
+    est = EnergyEstimator()
+    buf = TelemetryBuffer(window=4, k_kwh_per_gb=est.k_kwh_per_gb)
+    buf.ingest(0, mon)
+    assert buf.computation_profiles() == est.computation_profiles(mon)
+    assert buf.communication_profiles() == est.communication_profiles(mon)
+    # key order matches the estimator's first-occurrence dict order
+    assert list(buf.computation_profiles()) == \
+        list(est.computation_profiles(mon))
+
+
+def test_ring_recycles_oldest_and_pools_window():
+    buf = TelemetryBuffer(window=3)
+    for t in range(5):
+        buf.ingest(t, _mon(t))
+    assert buf.ticks == [2, 3, 4]          # 0 and 1 recycled
+    assert buf.energy_sum.shape[0] == 3
+    # pooled mean over the surviving window
+    pooled = buf.computation_profiles(last=3)
+    expect = np.mean([0.1 * 1 * (t + 1) for t in (2, 3, 4)])
+    assert pooled[("a", "f")] == pytest.approx(expect)
+    # last=1 only sees the newest tick
+    assert buf.computation_profiles(last=1)[("a", "f")] == \
+        pytest.approx(0.1 * 5)
+
+
+def test_reingesting_same_tick_overwrites_slot():
+    buf = TelemetryBuffer(window=3)
+    buf.ingest(0, _mon(0))
+    buf.ingest(0, _mon(7))  # revised observation for the same tick
+    assert buf.ticks == [0]
+    assert buf.computation_profiles()[("a", "f")] == pytest.approx(0.8)
+
+
+def test_new_keys_grow_columns_mid_stream():
+    buf = TelemetryBuffer(window=2)
+    buf.ingest(0, _mon(0, services=("a",)))
+    assert len(buf.sf_keys) == 1
+    buf.ingest(1, _mon(1, services=("a", "b", "c")))
+    assert len(buf.sf_keys) == 3
+    prof = buf.computation_profiles(last=2)
+    assert ("c", "f") in prof and ("a", "f") in prof
+    # key never observed in the window -> absent, not zero
+    buf.ingest(2, _mon(2, services=("a",)))
+    buf.ingest(3, _mon(3, services=("a",)))
+    assert ("c", "f") not in buf.computation_profiles(last=2)
+
+
+def test_carbon_ingestion_and_views():
+    infra = Infrastructure("t", (
+        Node("n1", carbon=100.0), Node("n2", carbon=300.0), Node("n3")))
+    buf = TelemetryBuffer(window=2)
+    buf.ingest(0, _mon(0), infra)
+    ci = buf.carbon_now(["n1", "n2", "n3"])
+    assert ci[0] == 100.0 and ci[1] == 300.0 and math.isnan(ci[2])
+    assert buf.carbon.shape == (2, 3)
+
+
+def test_energy_tensor_layout():
+    buf = TelemetryBuffer(window=2)
+    buf.ingest(0, _mon(0, services=("a", "b")))
+    E = buf.energy_tensor(["a", "b", "ghost"], [("f",), ("f", "g"), ()])
+    assert E.shape == (3, 2)
+    assert E[0, 0] == pytest.approx(0.1)
+    assert E[1, 0] == pytest.approx(0.2)
+    assert math.isnan(E[1, 1]) and math.isnan(E[2, 0])
+
+
+def test_eq13_transmission_model_applied():
+    est = EnergyEstimator(k_kwh_per_gb=0.002)
+    buf = TelemetryBuffer(window=1, k_kwh_per_gb=0.002)
+    mon = MonitoringData(traffic=(
+        TrafficSample("s", "f", "z", 100.0, 0.5),))
+    buf.ingest(0, mon)
+    assert buf.communication_profiles()[("s", "f", "z")] == \
+        est.communication_profiles(mon)[("s", "f", "z")] == \
+        pytest.approx(100.0 * 0.5 * 0.002)
+
+
+def test_empty_monitoring_ok():
+    buf = TelemetryBuffer(window=2)
+    buf.ingest(0, MonitoringData())
+    assert buf.computation_profiles() == {}
+    assert buf.communication_profiles() == {}
+    assert buf.ticks == [0]
