@@ -11,6 +11,7 @@ from .loop import (          # noqa: F401
     RuntimeConfig,
     TickRecord,
 )
+from .megaloop import monte_carlo_emissions  # noqa: F401
 from .traces import (        # noqa: F401
     REGION_PRESETS,
     CarbonTrace,

@@ -84,6 +84,11 @@ class RuntimeConfig:
     # boundaries from the shapes the loop actually saw and swaps them into
     # the planner (0 = off; ignored when ``bucket`` is set explicitly).
     auto_bucket_after: int = 0
+    # Profile estimation window (ticks): 1 = instantaneous estimates from
+    # this tick's monitoring alone; >1 pools the last W observation
+    # windows through the TelemetryBuffer ring (smoother profiles, less
+    # constraint churn).  Threaded through the pipeline per tick.
+    telemetry_window: int = 1
 
 
 @dataclass
@@ -115,6 +120,10 @@ class TickRecord:
     # which has no dirty accounting).
     constraint_s: float = 0.0
     dirty_candidates: int = -1
+    # Fused-loop telemetry (``run_scanned``): amortized per-tick wall
+    # time of the whole staged+scanned trace (0.0 on the eager path —
+    # there is no fused program to attribute).
+    tick_fused_s: float = 0.0
 
 
 @dataclass
@@ -170,6 +179,10 @@ class ContinuumRuntime:
         # mutating the caller's (bucket=None leaves the planner's own
         # configuration untouched)
         self.pipeline.delta_substitution = self.config.delta_replanning
+        self.pipeline.telemetry_window = self.config.telemetry_window
+        # why run_scanned last fell back to the eager loop (None = it
+        # didn't, or it hasn't run yet)
+        self.last_scanned_fallback: Optional[str] = None
         if self.config.bucket is not None:
             self._apply_bucket(self.config.bucket)
         # auto-bucket warmup: observed (S, F, N, L, B) shapes per replan
@@ -315,6 +328,18 @@ class ContinuumRuntime:
             gatherer.signal, gatherer.forecast = saved
         return ContinuumResult(ticks=records,
                                final_assignment=dict(self.current or {}))
+
+    def run_scanned(self, start: int, ticks: int) -> ContinuumResult:
+        """``run`` as ONE jitted ``lax.scan`` over the staged trace: the
+        whole decision tick (warm-start validation, vmapped branch
+        planner, ensemble pricing, hysteresis switch, emissions) fuses
+        into a single XLA program; the constraint pass, KB evolution and
+        lowering tiers are staged host-side in exact numpy arithmetic.
+        Decisions, emissions and the learned KB match the eager loop;
+        unsupported traces fall back to ``run`` (reason recorded in
+        ``last_scanned_fallback``)."""
+        from .megaloop import run_scanned as _run_scanned
+        return _run_scanned(self, start, ticks)
 
     @staticmethod
     def _moved(old: Dict[str, Tuple[str, str]],

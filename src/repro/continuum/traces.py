@@ -53,6 +53,42 @@ def _parse_timestamp(ts: str):
         return ts
 
 
+def _fill_gaps(path: str, zone: str, rows: List) -> List:
+    """Linearly interpolate missing observations inside one zone's sorted
+    ``(timestamp, ci)`` rows.
+
+    The zone's cadence is the smallest positive timestamp delta (hourly
+    for ElectricityMaps, 5-minutely for WattTime); any wider delta that
+    is an integer multiple of it is a gap and gets ``m - 1`` evenly
+    spaced interpolated rows.  Exact-duplicate timestamps collapse to
+    the last row (re-issued export lines).  Fallback string timestamps
+    cannot be differenced, so those rows pass through untouched.
+    """
+    if len(rows) < 2 or isinstance(rows[0][0], str):
+        return rows
+    deltas = [b[0] - a[0] for a, b in zip(rows, rows[1:])]
+    zero = deltas[0] - deltas[0]  # timedelta(0) or 0.0
+    step = min((d for d in deltas if d > zero), default=None)
+    if step is None:  # every row shares one timestamp
+        return rows[-1:]
+    out = [rows[0]]
+    for (t0, v0), (t1, v1) in zip(rows, rows[1:]):
+        if t1 == t0:          # duplicate observation: keep the re-issue
+            out[-1] = (t1, v1)
+            continue
+        m = (t1 - t0) / step
+        if abs(m - round(m)) > 1e-6:
+            raise ValueError(
+                f"{path!r}: zone {zone!r} has a gap of {t1 - t0!s} "
+                f"between {t0!s} and {t1!s} that is not a whole number "
+                f"of {step!s} steps — cannot interpolate")
+        m = int(round(m))
+        for i in range(1, m):
+            out.append((t0 + i * step, v0 + (v1 - v0) * i / m))
+        out.append((t1, v1))
+    return out
+
+
 @dataclass(frozen=True)
 class RegionProfile:
     """Shape of one region's carbon-intensity process."""
@@ -118,7 +154,13 @@ class CarbonTrace:
     # -- recorded data (ROADMAP "Real carbon data") -------------------------
 
     @classmethod
-    def from_csv(cls, path: str, seed: int = 0) -> "CarbonTrace":
+    def from_csv(
+        cls,
+        path: str,
+        seed: int = 0,
+        aliases: Mapping[str, str] | None = None,
+        fill_gaps: bool = True,
+    ) -> "CarbonTrace":
         """Recorded carbon trace from an ElectricityMaps/WattTime-style
         CSV export: one row per (timestamp, zone) with the zone's carbon
         intensity in gCO2eq/kWh.
@@ -130,10 +172,19 @@ class CarbonTrace:
         ``co2_intensity``/``gco2eq_per_kwh``/``gco2_per_kwh``/``ci``.
         Rows are grouped per zone and sorted by timestamp (ISO-8601
         strings or epoch numbers); rows with an empty CI cell are
-        skipped.  Zones are aligned on their latest common start
-        timestamp (ragged exports must not be index-aligned: tick t has
-        to mean the same wall-clock hour in every region) and then
-        truncated to the shortest common length.
+        skipped.  ``aliases`` maps export zone keys to the region names
+        the infrastructure uses (``{"DE-LU": "DE"}``); two distinct
+        zones mapping to the same region is an error, not a silent
+        merge.  Internal gaps — missing rows between two observations
+        of one zone, a routine artefact of ElectricityMaps/WattTime
+        exports — are linearly interpolated onto the zone's own cadence
+        when ``fill_gaps`` is true (the default; a gap that is not an
+        integer number of steps raises instead of guessing, and
+        fallback string timestamps — which cannot be differenced — are
+        left untouched).  Zones are aligned on
+        their latest common start timestamp (ragged exports must not be
+        index-aligned: tick t has to mean the same wall-clock hour in
+        every region) and then truncated to the shortest common length.
 
         The result is a regular :class:`CarbonTrace` — the recorded
         series sit behind the exact same ``history_signal`` /
@@ -175,6 +226,20 @@ class CarbonTrace:
         if not by_zone:
             raise ValueError(f"{path!r}: no carbon-intensity rows")
 
+        if aliases:
+            renamed: Dict[str, List] = {}
+            sources: Dict[str, str] = {}
+            for zone, rows in by_zone.items():
+                region = aliases.get(zone, zone)
+                if region in renamed:
+                    raise ValueError(
+                        f"{path!r}: zones {sources[region]!r} and "
+                        f"{zone!r} both alias to region {region!r} — "
+                        "aliases must be one-to-one, not a merge")
+                renamed[region] = rows
+                sources[region] = zone
+            by_zone = renamed
+
         for zone, rows in by_zone.items():
             try:
                 rows.sort(key=lambda r: r[0])
@@ -184,6 +249,8 @@ class CarbonTrace:
                     f"{path!r}: zone {zone!r} mixes timestamp formats "
                     f"({', '.join(kinds)}) — use consistent ISO-8601 or "
                     "epoch timestamps") from None
+            if fill_gaps:
+                by_zone[zone] = _fill_gaps(path, zone, rows)
         # align zones on a common start: ragged exports (zones beginning
         # at different hours) must not be index-aligned, or tick t would
         # compare different wall-clock hours across regions — exactly the

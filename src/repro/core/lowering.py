@@ -629,7 +629,13 @@ def lower_constraints(
     A = np.zeros((S, S))
     sidx = low.service_index()
     nidx = low.node_index()
-    for c in constraints:
+    # Lazy columnar sets (repro.learn.ConstraintSet) expose (base, weight,
+    # memory_weight) triples without cloning a Constraint per row — the
+    # base objects carry the identity fields, the columns the penalties.
+    entries = getattr(constraints, "entries", None)
+    items = entries() if entries is not None else (
+        (c, c.weight, c.memory_weight) for c in constraints)
+    for c, w, mw in items:
         if isinstance(c, AvoidNode):
             i, j = sidx.get(c.service), nidx.get(c.node)
             if i is None or j is None:
@@ -638,10 +644,10 @@ def lower_constraints(
                 f = low.flavour_names[i].index(c.flavour)
             except ValueError:
                 continue
-            P[i, f, j] = c.weight * c.memory_weight
+            P[i, f, j] = w * mw
         elif isinstance(c, Affinity):
             i, j = sidx.get(c.service), sidx.get(c.other)
             if i is None or j is None:
                 continue
-            A[i, j] = c.weight * c.memory_weight
+            A[i, j] = w * mw
     return P, A

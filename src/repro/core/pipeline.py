@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from . import adapter
 from .energy import EnergyEstimator, EnergyMixGatherer
@@ -67,10 +67,7 @@ def _structural_key(out: "GeneratorOutput") -> Tuple:
 
 @dataclass
 class GeneratorOutput:
-    constraints: List[Constraint]          # ranked, weighted, filtered
-    report: ExplainabilityReport
-    prolog: str
-    dicts: list
+    constraints: Sequence[Constraint]      # ranked, weighted, filtered
     # Enriched artefacts threaded through so downstream consumers (the
     # scheduler, the launch layer) don't re-derive them per iteration.
     app: Optional[Application] = None              # energy-enriched
@@ -78,6 +75,31 @@ class GeneratorOutput:
     computation: Dict[Tuple[str, str], float] = field(default_factory=dict)
     communication: Dict[Tuple[str, str, str], float] = field(
         default_factory=dict)
+    # Explainability artefacts are derived lazily: the hot continuum loop
+    # consumes only the constraint columns, so per-tick report/prolog/dict
+    # rendering (one object walk each) would be pure overhead there.
+    _report: Optional[ExplainabilityReport] = field(
+        default=None, repr=False, compare=False)
+    _prolog: Optional[str] = field(default=None, repr=False, compare=False)
+    _dicts: Optional[list] = field(default=None, repr=False, compare=False)
+
+    @property
+    def report(self) -> ExplainabilityReport:
+        if self._report is None:
+            self._report = generate_report(self.constraints)
+        return self._report
+
+    @property
+    def prolog(self) -> str:
+        if self._prolog is None:
+            self._prolog = adapter.to_prolog(self.constraints)
+        return self._prolog
+
+    @property
+    def dicts(self) -> list:
+        if self._dicts is None:
+            self._dicts = adapter.to_dicts(self.constraints)
+        return self._dicts
 
     def render(self) -> str:
         return self.prolog
@@ -135,6 +157,14 @@ class GreenConstraintPipeline:
         default=None, repr=False, compare=False)
     _shadow_kb: Optional[KnowledgeBase] = field(
         default=None, repr=False, compare=False)
+    # Profile estimation window (ticks): 1 = instantaneous estimates from
+    # this run's monitoring alone (the estimator's direct path, bit-
+    # identical to the historical behaviour); >1 pools the last W
+    # observation windows through a TelemetryBuffer ring before the
+    # constraint pass sees them.
+    telemetry_window: int = 1
+    _telemetry: Optional[object] = field(
+        default=None, repr=False, compare=False)
 
     def run(
         self,
@@ -148,6 +178,17 @@ class GreenConstraintPipeline:
         app = self.estimator.enrich(app, monitoring)
         computation = self.estimator.computation_profiles(monitoring)
         communication = self.estimator.communication_profiles(monitoring)
+        if self.telemetry_window > 1:
+            from repro.learn.telemetry import TelemetryBuffer
+            buf = self._telemetry
+            if buf is None or buf.window != self.telemetry_window:
+                buf = TelemetryBuffer(window=self.telemetry_window)
+                self._telemetry = buf
+            buf.ingest(self.iteration, monitoring, infra)
+            computation = buf.computation_profiles(
+                last=self.telemetry_window)
+            communication = buf.communication_profiles(
+                last=self.telemetry_window)
 
         t0 = time.perf_counter()
         if self.engine == "reference":
@@ -192,12 +233,8 @@ class GreenConstraintPipeline:
             raise ValueError(
                 f"unknown constraint engine {self.engine!r} "
                 "(expected 'array', 'reference', or 'parity')")
-        report = generate_report(ranked)
         return GeneratorOutput(
             constraints=ranked,
-            report=report,
-            prolog=adapter.to_prolog(ranked),
-            dicts=adapter.to_dicts(ranked),
             app=app,
             infra=infra,
             computation=computation,
@@ -339,5 +376,7 @@ class GreenConstraintPipeline:
                             out.communication, backend=backend)
                 self.lowering_stats["full_lowers"] += 1
             self._lowering_cache = (key, skey, low)
-        return PlacementProblem(lowering=low,
-                                constraints=tuple(out.constraints))
+        # Pass the constraints through as-is: a lazy ConstraintSet stays
+        # columnar all the way into lower_constraints (no per-constraint
+        # clone), and PlacementProblem.__post_init__ keeps it un-tupled.
+        return PlacementProblem(lowering=low, constraints=out.constraints)

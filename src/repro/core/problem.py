@@ -244,7 +244,13 @@ class PlacementProblem:
     initial: Optional[FrozenAssignment] = None
 
     def __post_init__(self) -> None:
-        object.__setattr__(self, "constraints", tuple(self.constraints))
+        # Lazy columnar constraint views (repro.learn.ConstraintSet — duck-
+        # typed on ``entries`` to keep core import-free of learn) ride
+        # through un-tupled so consumers can stay on the column fast path;
+        # anything else is frozen into a tuple as before.
+        c = self.constraints
+        if not isinstance(c, tuple) and not hasattr(c, "entries"):
+            object.__setattr__(self, "constraints", tuple(c))
         object.__setattr__(self, "initial", _freeze_initial(self.initial))
 
     # -- construction -------------------------------------------------------

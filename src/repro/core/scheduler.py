@@ -203,31 +203,40 @@ def _move_deltas(xp, static, W, stat_feas, cpu_req, ram_req, cpu_cap,
 
 
 _PLAN_BATCH_CACHE: Dict[str, object] = {}
+_PLAN_SINGLE_CACHE: Dict[str, object] = {}
+
+PLANNER_COMM_ARGC = {"dense": 2, "sparse": 4}
 
 
-def _batched_planner(kind: str):
-    """One jit-compiled program planning B scenario branches at once.
+def planner_single(kind: str):
+    """The pure single-branch planner function for communication-storage
+    ``kind`` ("dense" | "sparse"), un-jitted.
 
-    Built lazily (jax import deferred) and cached per communication-storage
-    ``kind`` ("dense" | "sparse") so every adaptive-loop tick with
-    unchanged problem shapes reuses the compiled executable — the problem
-    tensors are ARGUMENTS, not closed-over constants, so drifting
-    profiles/forecasts never retrace.
+    This is the exact function :func:`_batched_planner` vmaps+jits; it is
+    exposed separately so callers that fuse planning into a LARGER jit
+    program (the continuum megaloop's fused tick) embed the identical op
+    sequence rather than re-deriving it.  Signature::
 
-    Per branch (vmapped leading axis): greedy construction is a
-    ``lax.scan`` over the service order and local search a
-    ``lax.while_loop`` over the single-relocation move grid.  The two
-    kinds differ ONLY in how pairwise communication terms are scored
-    (dense einsum vs COO segment sums); scoring values, row-major
-    tie-breaks, improvement threshold, and must-deploy bailout are
-    identical.
+        single(ci, ci_mean, E, order,
+               w_placed, w_fcur, w_ncur, w_cpu, w_ram,
+               *comm_args,            # dense: K, has_link; sparse: COO 4
+               P, A, stat_feas, cpu_req, ram_req, cpu_cap, ram_cap,
+               must, cost, money_w, pref_w, emission_w, green_pen,
+               max_steps) -> (placed, fcur, ncur, skipped, infeas, fail_s)
+
+    Per branch: greedy construction is a ``lax.scan`` over the service
+    order and local search a ``lax.while_loop`` over the single-relocation
+    move grid.  The two kinds differ ONLY in how pairwise communication
+    terms are scored (dense einsum vs COO segment sums); scoring values,
+    row-major tie-breaks, improvement threshold, and must-deploy bailout
+    are identical.
     """
-    if kind in _PLAN_BATCH_CACHE:
-        return _PLAN_BATCH_CACHE[kind]
+    if kind in _PLAN_SINGLE_CACHE:
+        return _PLAN_SINGLE_CACHE[kind]
     import jax
     import jax.numpy as jnp
 
-    comm_argc = {"dense": 2, "sparse": 4}[kind]
+    comm_argc = PLANNER_COMM_ARGC[kind]
 
     def single(ci, ci_mean, E, order, w_placed, w_fcur, w_ncur, w_cpu,
                w_ram, *rest):
@@ -352,8 +361,27 @@ def _batched_planner(kind: str):
              infeas))
         return placed, fcur, ncur, skipped, infeas, fail_s
 
+    _PLAN_SINGLE_CACHE[kind] = single
+    return single
+
+
+def _batched_planner(kind: str):
+    """One jit-compiled program planning B scenario branches at once.
+
+    Built lazily (jax import deferred) and cached per communication-storage
+    ``kind`` so every adaptive-loop tick with unchanged problem shapes
+    reuses the compiled executable — the problem tensors are ARGUMENTS,
+    not closed-over constants, so drifting profiles/forecasts never
+    retrace.  The vmapped body is exactly :func:`planner_single`.
+    """
+    if kind in _PLAN_BATCH_CACHE:
+        return _PLAN_BATCH_CACHE[kind]
+    import jax
+
+    comm_argc = PLANNER_COMM_ARGC[kind]
     fn = jax.jit(jax.vmap(
-        single, in_axes=(0, 0, 0, 0) + (None,) * (5 + comm_argc + 14)))
+        planner_single(kind),
+        in_axes=(0, 0, 0, 0) + (None,) * (5 + comm_argc + 14)))
     _PLAN_BATCH_CACHE[kind] = fn
     return fn
 

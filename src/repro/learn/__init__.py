@@ -19,6 +19,7 @@ constraint pass through this subsystem; ``engine="reference"`` keeps the
 legacy object walk and ``engine="parity"`` runs both and asserts
 bit-equality.
 """
+from .constraint_set import ConstraintSet  # noqa: F401
 from .engine import (       # noqa: F401
     ConstraintEngine,
     EngineResult,

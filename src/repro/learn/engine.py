@@ -68,6 +68,7 @@ from repro.core.library import (
     AffinityModule,
     AvoidNodeModule,
     ConstraintLibrary,
+    TimeShiftModule,
     _scoped_flavours,
     subnet_compatible,
 )
@@ -77,9 +78,11 @@ from repro.core.types import (
     AvoidNode,
     Constraint,
     Infrastructure,
+    TimeShift,
 )
 
-from .kb_array import ArrayKB, clone_constraint
+from .constraint_set import ConstraintSet
+from .kb_array import ArrayKB
 
 
 def quantile_inf_tensor(values: np.ndarray, alpha: float,
@@ -222,6 +225,9 @@ class ConstraintEngine:
                 part = self._avoid_pass(cache, computation, iteration)
             elif type(module) is AffinityModule:
                 part = self._affinity_pass(cache, communication, iteration)
+            elif type(module) is TimeShiftModule:
+                part = self._timeshift_pass(cache, app, infra, computation,
+                                            communication, iteration)
             else:
                 part = self._delegate_pass(module, app, infra, computation,
                                            communication, iteration)
@@ -302,7 +308,8 @@ class ConstraintEngine:
             tuple((n.node_id, n.capabilities.subnet) for n in infra.nodes),
             tuple(communication.keys()),
             tuple((m.name, type(m) is AvoidNodeModule,
-                   type(m) is AffinityModule) for m in self.library),
+                   type(m) is AffinityModule,
+                   type(m) is TimeShiftModule) for m in self.library),
             self.flavour_scope,
             self.tau_scope,
         )
@@ -454,8 +461,12 @@ class ConstraintEngine:
 
     # -- AvoidNode (Definition 1 / Eq. 3) ------------------------------------
 
-    def _avoid_pass(self, c: _Cache, computation, iteration
-                    ) -> Optional[_Part]:
+    def _avoid_survivors(self, c: _Cache, computation
+                         ) -> Optional[Tuple[np.ndarray, int]]:
+        """Tau + survivor selection over the avoid grid, no object work:
+        ``(flat cell indices, candidate count)`` or ``None`` when the grid
+        is empty.  Shared by the per-tick pass and the megaloop staging
+        pre-pass (which must not materialize constraint objects)."""
         I = c.impacts                                      # [S*Fsc, N]
         mask = (c.svalid[:, None] & ~np.isnan(c.prof)[:, None]
                 & ~np.isnan(c.carbon)[None, :] & c.sub_flat)
@@ -468,7 +479,15 @@ class ConstraintEngine:
         else:
             tau = quantile_inf_tensor(I[mask], self.alpha, self.tau_backend)
         surv = mask & (I > tau)
-        idx = np.nonzero(surv.ravel())[0]
+        return np.nonzero(surv.ravel())[0], n_cand
+
+    def _avoid_pass(self, c: _Cache, computation, iteration
+                    ) -> Optional[_Part]:
+        surv = self._avoid_survivors(c, computation)
+        if surv is None:
+            return None
+        idx, n_cand = surv
+        I = c.impacts
         if idx.size == 0:
             return _Part(np.zeros(0), np.zeros(0, object),
                          np.zeros(0, object), n_cand, 0, 0, 0)
@@ -543,8 +562,10 @@ class ConstraintEngine:
 
     # -- Affinity (Definition 2 / Eq. 4) -------------------------------------
 
-    def _affinity_pass(self, c: _Cache, communication, iteration
-                       ) -> Optional[_Part]:
+    def _affinity_survivors(self, c: _Cache
+                            ) -> Optional[Tuple[np.ndarray, int]]:
+        """Tau + survivor selection over the observed edges, no object
+        work: ``(edge indices, candidate count)`` or ``None``."""
         Ia = c.impacts_a
         mask = c.e_ok
         n_cand = int(mask.sum())
@@ -557,41 +578,178 @@ class ConstraintEngine:
             tau = quantile_inf_tensor(Ia[mask], self.alpha,
                                       self.tau_backend)
         surv = mask & (Ia > tau)
-        idx = np.nonzero(surv)[0]
+        return np.nonzero(surv)[0], n_cand
+
+    def _affinity_pass(self, c: _Cache, communication, iteration
+                       ) -> Optional[_Part]:
+        surv = self._affinity_survivors(c)
+        if surv is None:
+            return None
+        idx, n_cand = surv
+        Ia = c.impacts_a
         if idx.size == 0:
             return _Part(np.zeros(0), np.zeros(0, object),
                          np.zeros(0, object), n_cand, 0, 0, 0)
         obj_arr = c.obj_af
         need = idx[np.equal(obj_arr[idx], None)]
         if need.size:
-            ems = Ia[need].tolist()
-            evs = c.evals[need].tolist()
-            cmin, cmax = c.cmin, c.cmax
-            for j, l in enumerate(need.tolist()):
-                s, f, z = c.e_src[l], c.e_fl[l], c.e_dst[l]
-                e = evs[j]
-                lo = e * cmin * REPORT_SCALE if cmin is not None else 0.0
-                hi = e * cmax * REPORT_SCALE if cmax is not None else 0.0
-                text = (
-                    f'An "Affinity" constraint was generated between the '
-                    f'"{s}" service in the "{f}" flavour and the "{z}" '
-                    f'service. This decision was driven by the high '
-                    f'volume of data exchanged between the two services, '
-                    f'whose transmission would generate significant '
-                    f'energy consumption if deployed on separate nodes.\n'
-                    f'The estimated emissions savings resulting from '
-                    f'co-locating these services range between '
-                    f'{lo:.2f} gCO2eq and {hi:.2f} gCO2eq.'
-                )
-                obj = object.__new__(Affinity)
-                object.__setattr__(obj, "__dict__", {
-                    "kind": "affinity", "impact_g": ems[j], "weight": 1.0,
-                    "memory_weight": 1.0, "generated_at": iteration,
-                    "explanation": text, "savings_range_g": (lo, hi),
-                    "service": s, "flavour": f, "other": z})
-                obj_arr[l] = obj
+            self._instantiate_affinity(c, need, iteration)
         return _Part(Ia[idx], c.keys_af[idx], obj_arr[idx],
                      n_cand, 0, int(need.size), int(idx.size - need.size))
+
+    def _instantiate_affinity(self, c: _Cache, need: np.ndarray,
+                              iteration: int) -> None:
+        """Build Affinity objects for the dirty surviving edges; mirrors
+        ``AffinityModule.instantiate`` character-for-character."""
+        obj_arr = c.obj_af
+        Ia = c.impacts_a
+        ems = Ia[need].tolist()
+        evs = c.evals[need].tolist()
+        cmin, cmax = c.cmin, c.cmax
+        for j, l in enumerate(need.tolist()):
+            s, f, z = c.e_src[l], c.e_fl[l], c.e_dst[l]
+            e = evs[j]
+            lo = e * cmin * REPORT_SCALE if cmin is not None else 0.0
+            hi = e * cmax * REPORT_SCALE if cmax is not None else 0.0
+            text = (
+                f'An "Affinity" constraint was generated between the '
+                f'"{s}" service in the "{f}" flavour and the "{z}" '
+                f'service. This decision was driven by the high '
+                f'volume of data exchanged between the two services, '
+                f'whose transmission would generate significant '
+                f'energy consumption if deployed on separate nodes.\n'
+                f'The estimated emissions savings resulting from '
+                f'co-locating these services range between '
+                f'{lo:.2f} gCO2eq and {hi:.2f} gCO2eq.'
+            )
+            obj = object.__new__(Affinity)
+            object.__setattr__(obj, "__dict__", {
+                "kind": "affinity", "impact_g": ems[j], "weight": 1.0,
+                "memory_weight": 1.0, "generated_at": iteration,
+                "explanation": text, "savings_range_g": (lo, hi),
+                "service": s, "flavour": f, "other": z})
+            obj_arr[l] = obj
+
+    # -- TimeShift (Definition 3, batch-processing extension) ----------------
+
+    def _timeshift_survivors(self, c: _Cache, app, infra, computation,
+                             communication
+                             ) -> Optional[Tuple[np.ndarray, np.ndarray,
+                                                 np.ndarray, int]]:
+        """Array-native ``highConsumptionWindow`` candidate math: for every
+        (s, f, n) cell, the within-tolerance first minimum of the node's
+        carbon-intensity forecast as a prefix-cummin/cum-argmin, then tau
+        and survivor selection — no object work.  Returns
+        ``(flat indices, impacts, shift hours, candidate count)`` or
+        ``None`` when the module yields no candidates.  Values are
+        recomputed every tick (forecasts drift freely); the enumeration
+        order (service-major, flavour, node) and every float product
+        mirror ``TimeShiftModule.candidates`` exactly."""
+        S, Fsc, N = c.S, c.Fsc, c.N
+        tol = np.fromiter((s.delay_tolerance_h for s in app.services),
+                          np.int64, count=S) if S else np.zeros(0, np.int64)
+        if N == 0 or S == 0 or not (tol > 0).any():
+            return None
+        fcs = [n.carbon_forecast if (n.carbon is not None
+                                     and n.carbon_forecast) else ()
+               for n in infra.nodes]
+        fclen = np.fromiter((len(f) for f in fcs), np.int64, count=N)
+        H = int(fclen.max())
+        if H == 0:
+            return None
+        # first prefix-minimum per node: run_min[n, h] = min(fc[n, :h+1]),
+        # run_arg[n, h] = FIRST index achieving it (strict-< improvement,
+        # exactly Python min()'s tie-breaking)
+        fc = np.full((N, H), np.inf)
+        for j, f in enumerate(fcs):
+            fc[j, : len(f)] = f
+        run_min = np.minimum.accumulate(fc, axis=1)
+        improved = np.ones((N, H), dtype=bool)
+        improved[:, 1:] = fc[:, 1:] < run_min[:, :-1]
+        run_arg = np.maximum.accumulate(
+            np.where(improved, np.arange(H)[None, :], -1), axis=1)
+        # horizon = forecast[: tol+1] clipped to the forecast length
+        hidx = np.minimum(tol[:, None],
+                          np.maximum(fclen[None, :] - 1, 0))     # [S, N]
+        cols = np.broadcast_to(np.arange(N)[None, :], (S, N))
+        best_t = run_arg[cols, hidx]                             # [S, N]
+        minv = run_min[cols, hidx]                               # [S, N]
+        gain = c.carbon[None, :] - minv                          # [S, N]
+        ok_sn = ((tol[:, None] > 0) & (fclen[None, :] > 0)
+                 & ~np.isnan(c.carbon)[None, :]
+                 & (best_t > 0) & (gain > 0))
+        mask = (c.svalid[:, None] & ~np.isnan(c.prof)[:, None]
+                & c.sub_flat & np.repeat(ok_sn, Fsc, axis=0))
+        n_cand = int(mask.sum())
+        if n_cand == 0:
+            return None
+        I = c.prof.reshape(S * Fsc, 1) * np.repeat(gain, Fsc, axis=0)
+        if self.tau_scope == "profiles":
+            tau = quantile_inf(
+                ConstraintGenerator._profile_impacts(
+                    "timeShift", infra, computation, communication),
+                self.alpha)
+        else:
+            tau = quantile_inf_tensor(I[mask], self.alpha, self.tau_backend)
+        surv = mask & (I > tau)
+        idx = np.nonzero(surv.ravel())[0]
+        if idx.size == 0:
+            return idx, np.zeros(0), np.zeros(0, np.int64), n_cand
+        ems = I.ravel()[idx]
+        shifts = best_t.ravel()[(idx // N) // Fsc * N + idx % N]
+        return idx, ems, shifts, n_cand
+
+    def _timeshift_pass(self, c: _Cache, app, infra, computation,
+                        communication, iteration) -> Optional[_Part]:
+        surv = self._timeshift_survivors(c, app, infra, computation,
+                                         communication)
+        if surv is None:
+            return None
+        idx, ems, shifts, n_cand = surv
+        if idx.size == 0:
+            return _Part(np.zeros(0), np.zeros(0, object),
+                         np.zeros(0, object), n_cand, n_cand, 0, 0)
+        keys, objs = self._instantiate_timeshift(c, idx, ems, shifts,
+                                                 iteration)
+        return _Part(ems, keys, objs, n_cand, n_cand, int(idx.size), 0)
+
+    def _instantiate_timeshift(self, c: _Cache, idx: np.ndarray,
+                               ems: np.ndarray, shifts: np.ndarray,
+                               iteration: int
+                               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Build TimeShift keys/objects for the surviving cells; text and
+        savings mirror ``TimeShiftModule.instantiate`` exactly."""
+        N, Fsc = c.N, c.Fsc
+        keys = np.empty(idx.size, object)
+        objs = np.empty(idx.size, object)
+        sids, scoped, nids = c.sids, c.scoped, c.nids
+        em_l = ems.tolist()
+        sh_l = shifts.tolist()
+        for j, flat in enumerate(idx.tolist()):
+            sf, n = divmod(flat, N)
+            s, f = divmod(sf, Fsc)
+            sid, fname, nid = sids[s], scoped[s][f], nids[n]
+            shift_h = sh_l[j]
+            saving = em_l[j] * REPORT_SCALE
+            text = (
+                f'A "TimeShift" constraint was generated for the execution '
+                f'of the "{sid}" service in the "{fname}" flavour on the '
+                f'"{nid}" node. The service is delay-tolerant and the '
+                f'node\'s carbon-intensity forecast reaches its minimum in '
+                f'{shift_h} hour(s).\n'
+                f'The estimated emissions savings resulting from postponing '
+                f'this execution amount to {saving:.2f} gCO2eq.'
+            )
+            obj = object.__new__(TimeShift)
+            object.__setattr__(obj, "__dict__", {
+                "kind": "timeShift", "impact_g": em_l[j], "weight": 1.0,
+                "memory_weight": 1.0, "generated_at": iteration,
+                "explanation": text, "savings_range_g": (saving, saving),
+                "service": sid, "flavour": fname, "node": nid,
+                "shift_h": shift_h})
+            keys[j] = ("timeShift", sid, fname, nid)
+            objs[j] = obj
+        return keys, objs
 
     # -- extension modules: reference semantics, per tick --------------------
 
@@ -622,7 +780,7 @@ class ConstraintEngine:
     # -- Eq. 11/12 ranking ---------------------------------------------------
 
     def _rank(self, fresh_em: np.ndarray, fresh_objs: np.ndarray,
-              retrieved, iteration: int) -> List[Constraint]:
+              retrieved, iteration: int) -> ConstraintSet:
         nf = int(fresh_em.size)
         if retrieved:
             em = np.concatenate(
@@ -630,25 +788,23 @@ class ConstraintEngine:
         else:
             em = fresh_em
         if em.size == 0:
-            return []
+            return ConstraintSet.empty()
         max_em = em.max()
         if max_em <= 0:
-            return []
+            return ConstraintSet.empty()
         w = em / max_em
         w = np.where(em < self.impact_floor_g, w * self.attenuation, w)
         kept = np.nonzero(~(w < self.discard_below))[0]
         order = kept[np.argsort(-w[kept], kind="stable")]
-        wl = w.tolist()
-        out: List[Constraint] = []
-        for i in order.tolist():
-            if i < nf:
-                base = fresh_objs[i]
-                mw, gat = 1.0, iteration
-            else:
-                _, base, mw, gat = retrieved[i - nf]
-            out.append(clone_constraint(
-                base, weight=wl[i], memory_weight=mw, generated_at=gat))
-        return out
+        base = np.empty(em.size, dtype=object)
+        base[:nf] = fresh_objs
+        mw = np.ones(em.size)
+        gat = np.full(em.size, iteration, np.int64)
+        if retrieved:
+            base[nf:] = [r[1] for r in retrieved]
+            mw[nf:] = [r[2] for r in retrieved]
+            gat[nf:] = [r[3] for r in retrieved]
+        return ConstraintSet(base[order], w[order], mw[order], gat[order])
 
 
 _EMPTY: frozenset = frozenset()

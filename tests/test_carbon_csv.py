@@ -150,3 +150,88 @@ def test_continuum_runtime_runs_on_recorded_trace():
     # emission-weighted planner must land everything there
     assert all(n == "FR-0" for _, n in res.final_assignment.values())
     assert all(r.constraint_s >= 0 for r in res.ticks)
+
+
+GAPPED = os.path.join(os.path.dirname(__file__), "data",
+                      "electricitymaps_gapped.csv")
+
+
+def test_gapped_fixture_interpolates_and_aliases():
+    """The committed gapped export: DE-LU has no rows for 05:00/06:00;
+    interpolation restores the hourly cadence and the alias map renames
+    the zone to the region key the infrastructure uses."""
+    tr = CarbonTrace.from_csv(GAPPED, aliases={"DE-LU": "DE"})
+    assert sorted(tr._series) == ["DE", "FR"]
+    assert tr.hours == 12
+    de = tr.series("DE")
+    # 380 @ 04:00 -> 320 @ 07:00, two interpolated hours in between
+    np.testing.assert_allclose(de[4:8], [380.0, 360.0, 340.0, 320.0])
+    # FR's re-issued 06:00 row collapses to the last value
+    assert tr.series("FR")[6] == 51.0
+
+
+def test_alias_collision_raises(tmp_path):
+    p = tmp_path / "collide.csv"
+    p.write_text(
+        "timestamp,zone,ci\n"
+        "2024-01-01T00:00:00,DE-LU,100\n"
+        "2024-01-01T00:00:00,DE,110\n")
+    with pytest.raises(ValueError, match="one-to-one"):
+        CarbonTrace.from_csv(str(p), aliases={"DE-LU": "DE"})
+
+
+def test_gap_interpolation_off_keeps_raw_rows():
+    tr = CarbonTrace.from_csv(GAPPED, fill_gaps=False)
+    # without interpolation DE-LU contributes its 10 raw rows and the
+    # common length truncates FR to match
+    assert tr.hours == 10
+    assert 360.0 not in tr.series("DE-LU")
+
+
+def test_non_integer_gap_raises(tmp_path):
+    p = tmp_path / "ragged_step.csv"
+    p.write_text(
+        "timestamp,zone,ci\n"
+        "2024-01-01T00:00:00,A,10\n"
+        "2024-01-01T01:00:00,A,11\n"
+        "2024-01-01T03:30:00,A,12\n")
+    with pytest.raises(ValueError, match="whole number"):
+        CarbonTrace.from_csv(str(p))
+
+
+def test_epoch_timestamps_interpolate():
+    import tempfile
+    with tempfile.NamedTemporaryFile("w", suffix=".csv",
+                                     delete=False) as fh:
+        fh.write("timestamp,zone,ci\n"
+                 "3600,A,10\n"
+                 "7200,A,20\n"
+                 "14400,A,40\n")
+        p = fh.name
+    tr = CarbonTrace.from_csv(p)
+    np.testing.assert_allclose(tr.series("A"), [10.0, 20.0, 30.0, 40.0])
+    os.unlink(p)
+
+
+def test_gapped_trace_drives_runtime():
+    """Recorded, gapped, aliased data drives the loop end to end."""
+    tr = CarbonTrace.from_csv(GAPPED, aliases={"DE-LU": "DE"})
+    services = tuple(
+        Service(f"svc{i}", flavours=(
+            Flavour("f", FlavourRequirements(cpu=1.0)),))
+        for i in range(2))
+    app = Application("t", services)
+    nodes = (Node("DE-0", region="DE",
+                  capabilities=NodeCapabilities(cpu=8.0)),
+             Node("FR-0", region="FR",
+                  capabilities=NodeCapabilities(cpu=8.0)))
+    rt = ContinuumRuntime(
+        app, Infrastructure("t", nodes), tr, WorkloadTrace(app, seed=0),
+        config=RuntimeConfig(scenarios=2, horizon_h=2),
+        pipeline=GreenConstraintPipeline(),
+        planner=WhatIfPlanner(
+            GreenScheduler(SchedulerConfig(emission_weight=1.0))))
+    res = rt.run(start=6, ticks=4)
+    assert len(res.ticks) == 4
+    # FR stays far cleaner than DE throughout the fixture
+    assert all(n == "FR-0" for _, n in res.final_assignment.values())

@@ -1,0 +1,265 @@
+"""Trace-level parity for the one-jit continuum megaloop.
+
+``ContinuumRuntime.run_scanned`` stages the whole trace on the host,
+rolls it with one ``jit(lax.scan)``, and commits the results back as if
+the eager per-tick loop had run.  Everything observable — per-tick
+records, switch decisions, emissions, the final assignment, the learned
+KnowledgeBase — must be bit-identical to eager ``run`` on the same
+trace, across seeds and config variants, and the scanned path must fall
+back to the eager loop (loudly, via ``last_scanned_fallback``) whenever
+the trace cannot be replayed under one fixed XLA structure.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.continuum import (
+    CarbonTrace,
+    ContinuumRuntime,
+    REGION_PRESETS,
+    RuntimeConfig,
+    WhatIfPlanner,
+    WorkloadTrace,
+)
+from repro.continuum.megaloop import monte_carlo_emissions
+from repro.core.library import ConstraintLibrary
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.core.scheduler import (
+    GreenScheduler,
+    SchedulerConfig,
+    compile_cache_stats,
+)
+from repro.core.types import (
+    Application,
+    CommunicationLink,
+    Flavour,
+    FlavourRequirements,
+    Infrastructure,
+    Node,
+    NodeCapabilities,
+    Service,
+)
+
+START = 24
+
+
+def _scenario(n_services=10, nodes_per_region=2, delay_tolerance_h=None):
+    regions = ("solar-south", "wind-north", "coal-east")
+    services = tuple(
+        Service(f"svc{i}", flavours=(
+            Flavour("large", FlavourRequirements(cpu=2.0, ram_gb=4.0)),
+            Flavour("small", FlavourRequirements(cpu=1.0, ram_gb=2.0)),
+        ), delay_tolerance_h=delay_tolerance_h)
+        for i in range(n_services))
+    links = tuple(
+        CommunicationLink(f"svc{i}", f"svc{(i + 1) % n_services}")
+        for i in range(0, n_services, 2))
+    app = Application("megaloop-test", services, links)
+    nodes = tuple(
+        Node(f"{r}-{k}", region=r, cost_per_cpu_hour=0.5,
+             capabilities=NodeCapabilities(cpu=5.0, ram_gb=24.0))
+        for r in regions for k in range(nodes_per_region))
+    return app, Infrastructure("megaloop-test", nodes)
+
+
+def _runtime(app, infra, ticks, seed=0, library=None, **cfg_kw):
+    base = dict(scenarios=4, hysteresis_g=30.0)
+    base.update(cfg_kw)
+    carbon = CarbonTrace(REGION_PRESETS, hours=START + ticks + 25,
+                         seed=seed)
+    workload = WorkloadTrace(app, seed=seed)
+    pipeline = (GreenConstraintPipeline(library=library)
+                if library is not None else GreenConstraintPipeline())
+    planner = WhatIfPlanner(
+        GreenScheduler(SchedulerConfig(emission_weight=1.0)))
+    return ContinuumRuntime(app, infra, carbon, workload,
+                            config=RuntimeConfig(**base),
+                            pipeline=pipeline, planner=planner)
+
+
+def _pair(ticks, seed=0, scenario_kw=None, library=None, **cfg_kw):
+    """Two identical runtimes on identical traces: one for eager ``run``,
+    one for ``run_scanned``."""
+    app, infra = _scenario(**(scenario_kw or {}))
+    mk = lambda: _runtime(app, infra, ticks, seed=seed, library=library,
+                          **cfg_kw)
+    return mk(), mk()
+
+
+def _records(result):
+    return [(r.t, r.emissions_g, r.migration_g, r.migrations, r.replanned,
+             r.switched, r.restarts, r.warm_start_rejected,
+             r.n_constraints, r.dirty_candidates, r.lowering_path)
+            for r in result.ticks]
+
+
+def _assert_kb_equal(rt_eager, rt_scan):
+    kb_e = rt_eager.pipeline.kb.to_kb()
+    kb_s = rt_scan.pipeline.kb.to_kb()
+    assert kb_e.sk == kb_s.sk
+    assert kb_e.ik == kb_s.ik
+    assert kb_e.nk == kb_s.nk
+    assert list(kb_e.ck.keys()) == list(kb_s.ck.keys())
+    for key, sc_e in kb_e.ck.items():
+        sc_s = kb_s.ck[key]
+        assert (sc_e.em, sc_e.mu, sc_e.t) == (sc_s.em, sc_s.mu, sc_s.t), key
+        assert sc_e.constraint == sc_s.constraint, key
+
+
+def _assert_parity(rt_eager, rt_scan, ticks):
+    res_e = rt_eager.run(START, ticks)
+    res_s = rt_scan.run_scanned(START, ticks)
+    assert rt_scan.last_scanned_fallback is None
+    assert _records(res_e) == _records(res_s)
+    assert res_e.final_assignment == res_s.final_assignment
+    np.testing.assert_allclose(
+        [r.expected_saving_g for r in res_e.ticks],
+        [r.expected_saving_g for r in res_s.ticks],
+        rtol=0, atol=1e-9)
+    _assert_kb_equal(rt_eager, rt_scan)
+    return res_e, res_s
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_scanned_trace_matches_eager_bit_for_bit(seed):
+    rt_e, rt_s = _pair(ticks=36, seed=seed)
+    _assert_parity(rt_e, rt_s, 36)
+
+
+@pytest.mark.parametrize("cfg_kw", [
+    dict(oracle=True, hysteresis_g=0.0, horizon_h=1),
+    dict(use_whatif=False),
+    dict(use_kb=False),
+    dict(replan_every=3),
+    dict(warm_start=False),
+    dict(replan_every=10 ** 9),        # static: plan once, coast
+    dict(delta_replanning=False),
+    dict(telemetry_window=4),          # pooled profile estimation
+], ids=["oracle", "no_whatif", "no_kb", "replan3", "no_warm", "static",
+        "no_delta", "window4"])
+def test_config_variants_parity(cfg_kw):
+    rt_e, rt_s = _pair(ticks=16, **cfg_kw)
+    _assert_parity(rt_e, rt_s, 16)
+
+
+def test_timeshift_library_parity():
+    """TimeShift constraints (batch-extension library) are delegated
+    natively inside the scan and land in the KB as real objects."""
+    lib = ConstraintLibrary.with_batch_extension()
+    rt_e, rt_s = _pair(
+        ticks=24, seed=1, library=lib,
+        scenario_kw=dict(delay_tolerance_h=6))
+    _assert_parity(rt_e, rt_s, 24)
+    kb = rt_s.pipeline.kb.to_kb()
+    kinds = {type(sc.constraint).__name__ for sc in kb.ck.values()}
+    assert "TimeShift" in kinds
+
+
+def test_scanned_then_eager_continues_bit_identically():
+    """The commit hands the engine cache, lowering cache, KB, and current
+    assignment back so a subsequent eager tick picks up exactly where the
+    scan left off."""
+    app, infra = _scenario()
+    rt_all = _runtime(app, infra, 30)
+    rt_mix = _runtime(app, infra, 30)
+    res_all = rt_all.run(START, 30)
+    rt_mix.run_scanned(START, 24)
+    tail = [rt_mix.tick(START + 24 + i) for i in range(6)]
+    for rec_e, rec_s in zip(res_all.ticks[24:], tail):
+        assert (rec_e.t, rec_e.emissions_g, rec_e.migration_g,
+                rec_e.switched, rec_e.n_constraints) == \
+               (rec_s.t, rec_s.emissions_g, rec_s.migration_g,
+                rec_s.switched, rec_s.n_constraints)
+    assert rt_all.current == rt_mix.current
+    _assert_kb_equal(rt_all, rt_mix)
+
+
+class _DriftingWorkload:
+    """Workload whose traffic edges vanish mid-trace: the engine's
+    structural key changes, which a fixed scan cannot replay."""
+
+    def __init__(self, inner, cut):
+        self.inner, self.cut = inner, cut
+
+    def monitoring(self, t):
+        mon = self.inner.monitoring(t)
+        if t >= self.cut:
+            mon = dataclasses.replace(mon, traffic={})
+        return mon
+
+
+def test_structure_drift_mid_trace_falls_back_to_eager():
+    app, infra = _scenario()
+    rt_e = _runtime(app, infra, 8)
+    rt_s = _runtime(app, infra, 8)
+    rt_e.workload = _DriftingWorkload(rt_e.workload, START + 3)
+    rt_s.workload = _DriftingWorkload(rt_s.workload, START + 3)
+    res_e = rt_e.run(START, 8)
+    res_s = rt_s.run_scanned(START, 8)
+    assert rt_s.last_scanned_fallback == \
+        "engine structural key drifted mid-trace"
+    assert _records(res_e) == _records(res_s)
+    assert res_e.final_assignment == res_s.final_assignment
+    _assert_kb_equal(rt_e, rt_s)
+
+
+def test_steady_state_scan_compiles_once():
+    """Same shapes, second scanned trace: zero new planner-cache misses,
+    and the fused-tick timing field is populated instead of the staged
+    per-tick ones."""
+    rt1, rt2 = _pair(ticks=12)
+    before = compile_cache_stats()
+    res1 = rt1.run_scanned(START, 12)
+    mid = compile_cache_stats()
+    res2 = rt2.run_scanned(START, 12)
+    after = compile_cache_stats()
+    first = mid["misses"] - before["misses"]
+    second = after["misses"] - mid["misses"]
+    assert first >= 1                 # the cold scan pays the compile
+    assert second == 0                # steady state: zero recompiles
+    assert sum(r.compiles for r in res2.ticks) == 0
+    for res in (res1, res2):
+        assert all(r.tick_fused_s > 0 for r in res.ticks)
+
+
+def test_monte_carlo_emissions_batches_carbon_realities():
+    app, infra = _scenario()
+    rt = _runtime(app, infra, 16)
+    baseline = _runtime(app, infra, 16).run_scanned(START, 16)
+    totals, per_tick = monte_carlo_emissions(
+        rt, START, 16, ci_scales=[1.0, 0.8, 1.3])
+    assert totals.shape == (3,) and per_tick.shape == (3, 16)
+    # scale 1.0 replays the deterministic trace exactly
+    assert totals[0] == pytest.approx(
+        baseline.total_emissions_g, rel=1e-12)
+    np.testing.assert_allclose(
+        per_tick[0], [r.emissions_g for r in baseline.ticks])
+    # staging is read-only: the probed runtime is still fresh
+    assert rt.pipeline.iteration == 0 and rt.current is None
+
+
+def test_zero_ticks_is_a_no_op():
+    app, infra = _scenario()
+    rt = _runtime(app, infra, 4)
+    res = rt.run_scanned(START, 0)
+    assert res.ticks == [] and rt.current is None
+
+
+@pytest.mark.slow
+def test_bench_scenario_168_tick_parity():
+    """The acceptance trace: 7 days on the benchmark's adaptive policy."""
+    from benchmarks.continuum_loop import build_scenario
+
+    ticks = 168
+    app, infra = build_scenario()
+    mk = lambda: ContinuumRuntime(
+        app, infra,
+        CarbonTrace(REGION_PRESETS, hours=START + ticks + 25, seed=0),
+        WorkloadTrace(app, seed=0),
+        config=RuntimeConfig(scenarios=8, hysteresis_g=30.0),
+        pipeline=GreenConstraintPipeline(),
+        planner=WhatIfPlanner(
+            GreenScheduler(SchedulerConfig(emission_weight=1.0))))
+    rt_e, rt_s = mk(), mk()
+    _assert_parity(rt_e, rt_s, ticks)
