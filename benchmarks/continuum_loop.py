@@ -57,6 +57,7 @@ from repro.core.types import (
     NodeCapabilities,
     Service,
 )
+from repro.obs import metrics_scope
 
 OUT_JSON = "BENCH_continuum.json"
 REQUIRED_SPEEDUP = 5.0  # batched vs sequential what-if, acceptance floor
@@ -293,14 +294,18 @@ def time_megaloop(report, ticks, B, smoke, gate=True, seed=0):
     t_eager = _run("eager", lambda: rt_e.run(start, ticks))
     t_cold = _run("cold", lambda: rt_c.run_scanned(start, ticks))
     assert rt_c.last_scanned_fallback is None, rt_c.last_scanned_fallback
-    t_warm = _run("warm", lambda: rt_w.run_scanned(start, ticks))
+    with metrics_scope() as scope:
+        t_warm = _run("warm", lambda: rt_w.run_scanned(start, ticks))
     res_w = results["warm"]
     # same trace, same decisions, bit for bit — and the steady-state scan
-    # reuses the compiled program (zero planner-cache recompiles)
+    # reuses the compiled program (zero planner-cache recompiles, both by
+    # the per-tick records and by the scoped registry delta)
     assert _decisions(results["eager"]) == _decisions(res_w) \
         == _decisions(results["cold"])
     warm_compiles = int(sum(r.compiles for r in res_w.ticks))
     assert warm_compiles == 0, warm_compiles
+    warm_misses = int(scope.delta("planner.compile.misses"))
+    assert warm_misses == 0, warm_misses
     speedup = t_eager / max(t_warm, 1e-9)
     # split the warm run: every TickRecord carries the amortized
     # stage/scan shares (constraint_s = stage/T, replan_s = scan/T)

@@ -1,5 +1,7 @@
 """Regenerate the EXPERIMENTS.md data tables from the dry-run artifacts
-(single source of truth: dryrun_results.jsonl / opt_results.jsonl).
+(single source of truth: dryrun_results.jsonl / opt_results.jsonl), plus
+a green-audit section from a dumped continuum trace when one exists
+(``examples/monte_carlo_traces.py --dump continuum_trace.jsonl``).
 
   PYTHONPATH=src python -m benchmarks.make_tables          # print all
 """
@@ -8,6 +10,8 @@ import os
 
 BASE = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.jsonl")
 OPT = os.path.join(os.path.dirname(__file__), "..", "opt_results.jsonl")
+TRACE = os.path.join(os.path.dirname(__file__), "..",
+                     "continuum_trace.jsonl")
 
 
 def load(path, multi_pod=None):
@@ -79,6 +83,23 @@ def optimized_block(report=print, threshold=0.03):
                f"{o['memory_s']:.2f}/{o['collective_s']:.2f}) |")
 
 
+def green_audit_block(report=print, path=TRACE):
+    """Render a dumped ContinuumResult JSONL (continuum-result/v1) as the
+    run-report the observability layer produces.  Skips gracefully when
+    no trace has been dumped — the audit is an optional artifact."""
+    if not os.path.exists(path):
+        report(f"(no continuum trace at {os.path.basename(path)} — dump "
+               f"one with examples/monte_carlo_traces.py --dump)")
+        return
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.continuum import ContinuumResult
+    result = ContinuumResult.from_jsonl(path)
+    report("```")
+    report(result.render_report())
+    report("```")
+
+
 if __name__ == "__main__":
     print("== §Roofline baseline (single pod) ==")
     roofline_block()
@@ -86,3 +107,5 @@ if __name__ == "__main__":
     multipod_block()
     print("\n== §Perf optimized vs baseline ==")
     optimized_block()
+    print("\n== §Green audit (continuum trace) ==")
+    green_audit_block()

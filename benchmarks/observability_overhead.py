@@ -1,0 +1,163 @@
+"""Observability overhead gate: the unified metrics/tracing/ledger layer
+must be (nearly) free.
+
+Three checks, all self-contained ratios (no committed baseline):
+
+* **Eager tick overhead** — the same continuum trace with a full
+  ``Observability`` bundle attached vs detached, interleaved
+  best-of-rounds so host drift biases neither side.  Gate: enabled wall
+  time <= ``EAGER_OVERHEAD_CEILING`` x disabled.
+* **Fused-path compile hygiene** — the metrics-carrying ``lax.scan``
+  variant is its own XLA program (compiled once); a warm scanned run
+  with the registry attached must show ZERO planner-cache misses under
+  ``metrics_scope`` and zero per-tick compiles.  The scanned decisions
+  must be bit-identical with and without the registry.
+* **Scanned overhead** — warm scanned run enabled vs disabled.  The
+  in-scan metric accumulator is 8 extra lanes on an already-fused
+  program, so the ratio must stay under ``SCAN_OVERHEAD_CEILING``
+  (generous: at smoke scale the scan segment is milliseconds and noisy).
+
+  PYTHONPATH=src python -m benchmarks.observability_overhead [--smoke]
+      [--check]
+"""
+import argparse
+import json
+import time
+
+from benchmarks.jax_cache import enable_persistent_cache
+
+from benchmarks.continuum_loop import _carbon_planner, build_scenario
+from repro.continuum import (
+    CarbonTrace,
+    ContinuumRuntime,
+    REGION_PRESETS,
+    RuntimeConfig,
+    WorkloadTrace,
+)
+from repro.core.pipeline import GreenConstraintPipeline
+from repro.obs import Observability, metrics_scope
+
+OUT_JSON = "BENCH_observability.json"
+EAGER_OVERHEAD_CEILING = 1.05    # +5% on the eager tick loop
+SCAN_OVERHEAD_CEILING = 1.20     # scan segment is tiny and noisy at smoke
+
+
+def _decisions(result):
+    return [(r.replanned, r.switched, r.migrations, r.restarts,
+             r.emissions_g, r.migration_g) for r in result.ticks]
+
+
+def _fresh(app, infra, start, ticks, seed, obs):
+    rt = ContinuumRuntime(
+        app, infra,
+        CarbonTrace(REGION_PRESETS, hours=start + ticks + 25, seed=seed),
+        WorkloadTrace(app, seed=seed),
+        config=RuntimeConfig(scenarios=4, hysteresis_g=30.0),
+        pipeline=GreenConstraintPipeline(), planner=_carbon_planner())
+    if obs:
+        rt.obs = Observability()
+    return rt
+
+
+def _interleaved(mk_a, mk_b, run, rounds):
+    """Best-of-``rounds`` wall time for two runtime factories, alternating
+    a/b per round so slow host drift (frequency scaling, background load)
+    biases neither side."""
+    best_a = best_b = None
+    for _ in range(rounds):
+        for which, mk in (("a", mk_a), ("b", mk_b)):
+            rt = mk()
+            t0 = time.perf_counter()
+            run(rt)
+            dt = time.perf_counter() - t0
+            if which == "a":
+                best_a = dt if best_a is None else min(best_a, dt)
+            else:
+                best_b = dt if best_b is None else min(best_b, dt)
+    return best_a, best_b
+
+
+def run(report=print, smoke=False, check=None, out_json=OUT_JSON, seed=0):
+    check = (not smoke) if check is None else check
+    start = 24
+    ticks = 24 if smoke else 96
+    rounds = 3 if smoke else 5
+    app, infra = build_scenario()
+    mk_off = lambda: _fresh(app, infra, start, ticks, seed, obs=False)
+    mk_on = lambda: _fresh(app, infra, start, ticks, seed, obs=True)
+
+    report(f"# Observability overhead: {ticks} ticks, "
+           f"{len(app.services)} services, {len(infra.nodes)} nodes, "
+           f"best of {rounds} interleaved rounds")
+
+    # -- eager: full bundle attached vs detached ----------------------
+    mk_off().run(start, 2)    # compile warmup: time the loop, not XLA
+    res_off = mk_off().run(start, ticks)
+    res_on_rt = mk_on()
+    res_on = res_on_rt.run(start, ticks)
+    assert _decisions(res_off) == _decisions(res_on), \
+        "observability changed eager decisions"
+    em_led, mig_led = res_on_rt.obs.ledger.totals()
+    assert em_led == sum(r.emissions_g for r in res_on.ticks)
+    assert mig_led == sum(r.migration_g for r in res_on.ticks)
+    t_off, t_on = _interleaved(mk_off, mk_on, lambda rt: rt.run(start, ticks),
+                               rounds)
+    eager_ratio = t_on / max(t_off, 1e-9)
+    report(f"  eager: disabled {t_off*1e3:.1f}ms | enabled {t_on*1e3:.1f}ms "
+           f"-> {eager_ratio:.3f}x (ceiling {EAGER_OVERHEAD_CEILING}x)")
+
+    # -- scanned: compile hygiene + decision parity + overhead --------
+    mk_off().run_scanned(start, ticks)   # compile the plain scan variant
+    mk_on().run_scanned(start, ticks)    # compile the metrics scan variant
+    rt_w = mk_on()
+    with metrics_scope() as scope:
+        res_scan_on = rt_w.run_scanned(start, ticks)
+    assert rt_w.last_scanned_fallback is None, rt_w.last_scanned_fallback
+    warm_misses = int(scope.delta("planner.compile.misses"))
+    warm_compiles = int(sum(r.compiles for r in res_scan_on.ticks))
+    assert warm_misses == 0, (
+        f"metrics scan recompiled in steady state: {warm_misses} misses")
+    assert warm_compiles == 0, warm_compiles
+    res_scan_off = mk_off().run_scanned(start, ticks)
+    assert _decisions(res_scan_off) == _decisions(res_scan_on) \
+        == _decisions(res_off), "observability changed scanned decisions"
+    t_s_off, t_s_on = _interleaved(
+        mk_off, mk_on, lambda rt: rt.run_scanned(start, ticks), rounds)
+    scan_ratio = t_s_on / max(t_s_off, 1e-9)
+    report(f"  scanned: disabled {t_s_off*1e3:.1f}ms | enabled "
+           f"{t_s_on*1e3:.1f}ms -> {scan_ratio:.3f}x "
+           f"(ceiling {SCAN_OVERHEAD_CEILING}x); warm recompiles 0")
+
+    out = {"ticks": ticks, "rounds": rounds,
+           "eager": {"t_disabled_s": t_off, "t_enabled_s": t_on,
+                     "ratio": eager_ratio,
+                     "ceiling": EAGER_OVERHEAD_CEILING},
+           "scanned": {"t_disabled_s": t_s_off, "t_enabled_s": t_s_on,
+                       "ratio": scan_ratio,
+                       "ceiling": SCAN_OVERHEAD_CEILING,
+                       "warm_compile_misses": warm_misses}}
+    if check:
+        assert eager_ratio <= EAGER_OVERHEAD_CEILING, (t_on, t_off)
+        assert scan_ratio <= SCAN_OVERHEAD_CEILING, (t_s_on, t_s_off)
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(out, fh, indent=2, sort_keys=True)
+        report(f"# wrote {out_json}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="short trace, fewer rounds")
+    ap.add_argument("--check", action="store_true",
+                    help="enforce the overhead ceilings even under --smoke")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args()
+    enable_persistent_cache()
+    run(smoke=args.smoke, check=args.check or None,
+        out_json=None if (args.no_json or args.smoke) else OUT_JSON)
+
+
+if __name__ == "__main__":
+    main()

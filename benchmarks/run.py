@@ -14,6 +14,7 @@ def main() -> None:
         continuum_loop,
         explainability,
         fig2_scalability,
+        observability_overhead,
         roofline,
         scenarios,
         scheduler_savings,
@@ -50,6 +51,9 @@ def main() -> None:
          # BENCH json; runs AFTER continuum_loop so the merged
          # constraint_engine section lands on the fresh file
          {"smoke": True, "out_json": None} if quick else {}),
+        ("observability_overhead (metrics/tracing/ledger gate)",
+         observability_overhead.run,
+         {"smoke": True, "check": True, "out_json": None} if quick else {}),
         ("roofline single-pod (§Roofline)", roofline.run, {}),
         ("roofline multi-pod (§Dry-run)", roofline.run, {"multi_pod": True}),
     ]

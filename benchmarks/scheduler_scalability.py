@@ -50,10 +50,9 @@ from repro.core.scheduler import (
     GreenScheduler,
     ReferenceScheduler,
     SchedulerConfig,
-    compile_cache_stats,
     reference_objective,
-    reset_compile_cache_counters,
 )
+from repro.obs import metrics_scope
 from repro.core.types import (
     Affinity,
     Application,
@@ -173,28 +172,33 @@ def compile_cache_sweep(report, shapes, rounds: int, repeats: int,
     cfg.local_search_rounds = rounds
     cfg.bucket = BUCKET_GRID
     sched = GreenScheduler(cfg)
-    reset_compile_cache_counters()
     rows = []
     report("\n# Compile cache: mixed shapes, one bucket, one XLA program")
     report(f"{'S':>5} {'N':>5} {'bucket':>12} {'compiled':>9} "
            f"{'t_plan_s':>9}")
-    for S, N in shapes:
-        app, infra, comp, comm, cs = synth(S, N)
-        problem = PlacementProblem.build(app, infra, comp, comm, cs)
-        t0 = time.perf_counter()
-        result = sched.plan(problem)
-        dt = time.perf_counter() - t0
-        assert result.plan.feasible
-        st = result.stats
-        rows.append({"S": S, "N": N, "bucket": list(st.padded_shape[1:4]),
-                     "compiled": st.compiled, "t_plan_s": dt})
-        report(f"{S:>5} {N:>5} {str(st.padded_shape[1:4]):>12} "
-               f"{str(st.compiled):>9} {dt:>9.3f}")
-    stats = compile_cache_stats()
-    compiles, hits = stats["misses"], stats["hits"]
+    # metrics_scope reads DELTAS of the process-global registry — no
+    # reset needed, so this sweep no longer clobbers counters other
+    # benchmarks (or an embedding process) may be reading
+    with metrics_scope() as scope:
+        for S, N in shapes:
+            app, infra, comp, comm, cs = synth(S, N)
+            problem = PlacementProblem.build(app, infra, comp, comm, cs)
+            t0 = time.perf_counter()
+            result = sched.plan(problem)
+            dt = time.perf_counter() - t0
+            assert result.plan.feasible
+            st = result.stats
+            rows.append({"S": S, "N": N,
+                         "bucket": list(st.padded_shape[1:4]),
+                         "compiled": st.compiled, "t_plan_s": dt})
+            report(f"{S:>5} {N:>5} {str(st.padded_shape[1:4]):>12} "
+                   f"{str(st.compiled):>9} {dt:>9.3f}")
+    compiles = int(scope.delta("planner.compile.misses"))
+    hits = int(scope.delta("planner.compile.hits"))
+    compile_time_s = scope.delta("planner.compile.time_s")
     expected_hits = len(shapes) - max(1, len(shapes) // 4)
     report(f"# {len(shapes)} shapes -> {compiles} XLA compile(s), "
-           f"{hits} cache hits ({stats['compile_time_s']:.1f}s compiling)")
+           f"{hits} cache hits ({compile_time_s:.1f}s compiling)")
     assert compiles * 4 <= len(shapes), (
         f"compile-cache gate: {compiles} compiles for {len(shapes)} "
         f"shapes (need >= 4x fewer)")
@@ -204,7 +208,7 @@ def compile_cache_sweep(report, shapes, rounds: int, repeats: int,
                            "n": BUCKET_GRID.n, "b": BUCKET_GRID.b},
            "shapes": len(shapes), "compiles": compiles, "hits": hits,
            "expected_hits": expected_hits,
-           "compile_time_s": stats["compile_time_s"], "sweep": rows}
+           "compile_time_s": compile_time_s, "sweep": rows}
 
     if overhead_point is not None:
         cfg_exact = SchedulerConfig.green()

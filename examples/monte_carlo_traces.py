@@ -9,10 +9,14 @@ charges — under its own carbon world, so the spread is the real
 sensitivity of the closed-loop system, not of a frozen plan.
 
 Prints the emissions distribution of a 2-day trace under ±30% carbon
-scenarios, next to the deterministic (scale = 1.0) trace.
+scenarios, next to the deterministic (scale = 1.0) trace.  With
+``--dump PATH`` the deterministic trace is also rolled once (fused
+scan, full observability) and written as a ContinuumResult JSONL that
+``benchmarks.make_tables`` renders into a green-audit section.
 
-  PYTHONPATH=src python examples/monte_carlo_traces.py
+  PYTHONPATH=src python examples/monte_carlo_traces.py [--dump PATH]
 """
+import argparse
 import os
 import sys
 
@@ -62,6 +66,11 @@ def build():
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dump", metavar="PATH", default=None,
+                    help="write the deterministic trace as a "
+                         "ContinuumResult JSONL (continuum-result/v1)")
+    args = ap.parse_args()
     app, infra = build()
     runtime = ContinuumRuntime(
         app, infra,
@@ -92,6 +101,14 @@ def main():
     worst = per_tick.max(axis=0)
     print(f"worst-case tick     : {worst.max():10.1f} gCO2eq "
           f"(tick {int(worst.argmax())})")
+
+    if args.dump:
+        from repro.obs import Observability
+        runtime.obs = Observability()
+        result = runtime.run_scanned(START, TICKS)
+        result.to_jsonl(args.dump)
+        print(f"wrote {args.dump} ({len(result.ticks)} ticks, "
+              f"schema continuum-result/v1)")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ migration-aware discrete-time runtime (:mod:`loop`).
 from .loop import (          # noqa: F401
     ContinuumResult,
     ContinuumRuntime,
+    FallbackEvent,
     RuntimeConfig,
     TickRecord,
 )

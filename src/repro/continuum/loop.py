@@ -29,6 +29,8 @@ Each tick (= one observation window, one hour):
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -42,6 +44,7 @@ from repro.core.scheduler import (
     SchedulerConfig,
 )
 from repro.core.types import Application, Infrastructure
+from repro.obs import Observability
 
 from .traces import CarbonTrace, WorkloadTrace
 from .whatif import (
@@ -127,6 +130,22 @@ class TickRecord:
 
 
 @dataclass
+class FallbackEvent:
+    """One ``run_scanned`` -> eager fallback, with its trigger context.
+
+    ``runtime.scanned_fallbacks`` accumulates these (append-only across
+    runs); ``runtime.last_scanned_fallback`` stays the most-recent
+    reason string for backwards compatibility — it used to be silently
+    overwritten on repeated mid-trace drift, which is exactly what the
+    event list fixes.
+    """
+
+    tick: int                 # trace tick the fallback triggered at
+    reason: str               # stable reason string (tests match on it)
+    detail: str = ""          # e.g. digest of the structural key that drifted
+
+
+@dataclass
 class ContinuumResult:
     ticks: List[TickRecord]
     final_assignment: Dict[str, Tuple[str, str]]
@@ -151,6 +170,77 @@ class ContinuumResult:
             "replans": sum(r.replanned for r in self.ticks),
         }
 
+    def to_jsonl(self, path: Optional[str] = None) -> str:
+        """Serialize the full tick telemetry as JSONL: one header line
+        (schema tag + final assignment) followed by one ``TickRecord``
+        object per line.  Floats use JSON's shortest-round-trip repr, so
+        ``from_jsonl(to_jsonl())`` reproduces every record bit-for-bit.
+        Writes to ``path`` when given; always returns the text."""
+        header = {
+            "schema": "continuum-result/v1",
+            "ticks": len(self.ticks),
+            "final_assignment": {
+                sid: list(fn)
+                for sid, fn in sorted(self.final_assignment.items())},
+        }
+        lines = [json.dumps(header, sort_keys=True)]
+        lines.extend(json.dumps(dataclasses.asdict(r), sort_keys=True)
+                     for r in self.ticks)
+        text = "\n".join(lines) + "\n"
+        if path is not None:
+            with open(path, "w") as fh:
+                fh.write(text)
+        return text
+
+    @classmethod
+    def from_jsonl(cls, source: str) -> "ContinuumResult":
+        """Rebuild a result from :meth:`to_jsonl` output — ``source`` is
+        either the JSONL text itself or a path to a dumped file."""
+        if "\n" not in source and os.path.exists(source):
+            with open(source) as fh:
+                source = fh.read()
+        lines = [ln for ln in source.splitlines() if ln.strip()]
+        if not lines:
+            raise ValueError("empty continuum-result JSONL")
+        header = json.loads(lines[0])
+        if header.get("schema") != "continuum-result/v1":
+            raise ValueError(
+                f"unexpected schema {header.get('schema')!r} "
+                "(expected 'continuum-result/v1')")
+        ticks = [TickRecord(**json.loads(ln)) for ln in lines[1:]]
+        final = {sid: tuple(fn)
+                 for sid, fn in header["final_assignment"].items()}
+        return cls(ticks=ticks, final_assignment=final)
+
+    def render_report(self, ledger=None, registry=None,
+                      tracer=None) -> str:
+        """Green-audit text report (see ``repro.obs.render_report``);
+        the optional ledger/registry/tracer add attribution, fallback
+        events, and stage-latency rollups."""
+        from repro.obs import render_report as _render
+        return _render(self, ledger=ledger, registry=registry,
+                       tracer=tracer)
+
+
+def _migration_cells(old: Dict[str, Tuple[str, str]],
+                     new: Dict[str, Tuple[str, str]],
+                     mig_fee: float, restart_fee: float
+                     ) -> Tuple[Tuple[str, str, str, float], ...]:
+    """Per-service charge cells of one switch, mirroring ``_moved`` /
+    ``_flapped``: one ``migration_g`` cell per relocated or removed
+    service (charged at its new cell; removals at the old one), one
+    ``restart_g`` cell per in-place flavour flip."""
+    cells = []
+    for sid, (fl, nid) in new.items():
+        if sid not in old or old[sid][1] != nid:
+            cells.append((sid, fl, nid, mig_fee))
+        elif old[sid][0] != fl:
+            cells.append((sid, fl, nid, restart_fee))
+    for sid, (fl, nid) in old.items():
+        if sid not in new:
+            cells.append((sid, fl, nid, mig_fee))
+    return tuple(cells)
+
 
 @dataclass
 class ContinuumRuntime:
@@ -165,6 +255,11 @@ class ContinuumRuntime:
         default_factory=GreenConstraintPipeline)
     planner: WhatIfPlanner = field(default_factory=lambda: WhatIfPlanner(
         GreenScheduler(SchedulerConfig(emission_weight=1.0))))
+    # Per-run observability bundle (registry + tracer + emissions
+    # ledger).  None (the default) keeps both loops at their
+    # uninstrumented cost: the eager tick pays a few perf_counter reads,
+    # the fused scan carries zero extra arrays.
+    obs: Optional[Observability] = field(default=None, repr=False)
 
     current: Optional[Dict[str, Tuple[str, str]]] = None
     last_result: Optional[object] = field(default=None, repr=False)
@@ -181,8 +276,10 @@ class ContinuumRuntime:
         self.pipeline.delta_substitution = self.config.delta_replanning
         self.pipeline.telemetry_window = self.config.telemetry_window
         # why run_scanned last fell back to the eager loop (None = it
-        # didn't, or it hasn't run yet)
+        # didn't, or it hasn't run yet); scanned_fallbacks is the full
+        # structured history (append-only across runs)
         self.last_scanned_fallback: Optional[str] = None
+        self.scanned_fallbacks: List[FallbackEvent] = []
         if self.config.bucket is not None:
             self._apply_bucket(self.config.bucket)
         # auto-bucket warmup: observed (S, F, N, L, B) shapes per replan
@@ -204,18 +301,26 @@ class ContinuumRuntime:
         restores them afterwards (callers driving ``tick`` directly on a
         shared pipeline should do the same)."""
         cfg = self.config
+        obs = self.obs if (self.obs is not None and self.obs.enabled) \
+            else None
+        # Stage timestamps are captured unconditionally (a perf_counter
+        # read is ~50 ns); spans materialize from them only when an
+        # Observability bundle is attached.
+        t_tick0 = time.perf_counter()
         # 1. monitoring + carbon ingestion: the gatherer reads the signal
         # as of this tick (window mean -> node.carbon, persistence forecast)
         self.pipeline.gatherer.signal = self.carbon.history_signal(t)
         self.pipeline.gatherer.forecast = self.carbon.forecast_signal(
             t, cfg.horizon_h)
         mon = self.workload.monitoring(t)
+        t_ingest1 = time.perf_counter()
 
         # 2. constraints + enriched problem (KB decay happens inside); one
         # PlacementProblem per tick, lowering cached by the pipeline (the
         # delta fast path array-substitutes ci/E when only profiles moved)
         out = self.pipeline.run(self.app, self.infra, mon,
                                 use_kb=cfg.use_kb)
+        t_cons1 = time.perf_counter()
         cstats = getattr(self.pipeline, "constraint_stats", None) or {}
         constraint_s = float(cstats.get("constraint_s", 0.0))
         dirty_candidates = int(cstats.get("rescored", -1))
@@ -238,9 +343,17 @@ class ContinuumRuntime:
         switched = False
         migrations = 0
         restarts = 0
+        # charged move/restart counts: zero unless the hysteresis rule
+        # actually switched away from an existing assignment (the initial
+        # rollout relocates everything but is not charged)
+        charged_moved = 0
+        charged_flapped = 0
+        mig_cells: Tuple = ()
         migration_g = 0.0
         expected_saving = 0.0
         warm_rejected = False
+        plan_stats = None
+        t_plan0 = t_plan1 = time.perf_counter()
 
         if replanned:
             if cfg.oracle:
@@ -269,8 +382,11 @@ class ContinuumRuntime:
                     self.auto_bucket = BucketSpec.from_observed(
                         self._observed_shapes)
                     self._apply_bucket(self.auto_bucket)
+            t_plan0 = time.perf_counter()
             result = self.planner.evaluate(tick_problem)
+            t_plan1 = time.perf_counter()
             self.last_result = result
+            plan_stats = result.plan_stats
             cand_plan = result.best_plan
             warm_rejected = any(
                 "warm start rejected" in n for n in cand_plan.notes)
@@ -292,22 +408,30 @@ class ContinuumRuntime:
                     # pays — and must justify — migration/restart cost
                     hyst = 0.0 if cfg.oracle else cfg.hysteresis_g
                     if saving > cost + hyst:
+                        if obs is not None:
+                            mig_cells = _migration_cells(
+                                self.current, cand,
+                                cfg.migration_g, cfg.restart_g)
                         self.current = cand
                         switched = True
                         migrations = moved
                         restarts = flapped
+                        charged_moved = moved
+                        charged_flapped = flapped
                         migration_g = cost
         replan_s = time.perf_counter() - t_replan0
         compiles = COMPILE_CACHE.misses - misses0
 
         # 5. accounting under the TRUE instantaneous carbon intensity
+        t_acct0 = time.perf_counter()
         emissions = 0.0
+        placed = fcur = ncur = ci_now = None
         if self.current:
             placed, fcur, ncur = assignment_arrays(low, self.current)
+            ci_now = self.carbon.now(self._node_regions, t)
             emissions = lowered_emissions(
-                low, placed, fcur, ncur,
-                ci=self.carbon.now(self._node_regions, t))
-        return TickRecord(
+                low, placed, fcur, ncur, ci=ci_now)
+        rec = TickRecord(
             t=t, emissions_g=emissions, migration_g=migration_g,
             migrations=migrations, replanned=replanned, switched=switched,
             expected_saving_g=expected_saving,
@@ -316,6 +440,66 @@ class ContinuumRuntime:
             restarts=restarts, rebuild_s=rebuild_s, replan_s=replan_s,
             lowering_path=lowering_path, compiles=compiles,
             constraint_s=constraint_s, dirty_candidates=dirty_candidates)
+        if obs is not None:
+            t_end = time.perf_counter()
+            tr = obs.tracer
+            tid = tr.add("tick", t_tick0, t_end, t=t)
+            tr.add("telemetry.ingest", t_tick0, t_ingest1, parent=tid)
+            tr.add("constraints", t_ingest1, t_cons1, parent=tid,
+                   path=str(cstats.get("path", "")))
+            tr.add("lower.rebuild", t_replan0, t_replan0 + rebuild_s,
+                   parent=tid, path=lowering_path)
+            if replanned:
+                tr.add("plan.evaluate", t_plan0, t_plan1, parent=tid)
+                tr.add("switch", t_plan1, t_acct0, parent=tid,
+                       switched=switched)
+            tr.add("account", t_acct0, t_end, parent=tid)
+            self._record_tick_metrics(obs, rec, t_end - t_tick0,
+                                      plan_stats)
+            obs.ledger.record(
+                t, low, placed, fcur, ncur, ci_now,
+                zones=self._node_regions,
+                moved=charged_moved, flapped=charged_flapped,
+                migration_fee_g=cfg.migration_g,
+                restart_fee_g=cfg.restart_g,
+                mig_cells=mig_cells)
+        return rec
+
+    def _record_tick_metrics(self, obs: Observability, rec: TickRecord,
+                             tick_s: float, plan_stats) -> None:
+        """Mirror one TickRecord onto the attached registry."""
+        reg = obs.registry
+        reg.inc("runtime.ticks")
+        if rec.replanned:
+            reg.inc("runtime.replans")
+        if rec.switched:
+            reg.inc("runtime.switches")
+        if rec.migrations:
+            reg.inc("runtime.migrations", rec.migrations)
+        if rec.restarts:
+            reg.inc("runtime.restarts", rec.restarts)
+        if rec.warm_start_rejected:
+            reg.inc("runtime.warm_start_rejected")
+        if rec.compiles:
+            reg.inc("runtime.tick_compiles", rec.compiles)
+        reg.inc("lowering.path", labels={"path": rec.lowering_path})
+        if rec.dirty_candidates >= 0:
+            reg.gauge("engine.dirty_candidates", rec.dirty_candidates)
+        reg.observe("stage.constraint_s", rec.constraint_s)
+        reg.observe("stage.rebuild_s", rec.rebuild_s)
+        reg.observe("stage.replan_s", rec.replan_s)
+        reg.observe("stage.tick_s", tick_s)
+        reg.observe("tick.emissions_g", rec.emissions_g)
+        if plan_stats is not None:
+            labels = plan_stats.metric_labels()
+            m = plan_stats.to_metrics()
+            reg.observe("planner.plan_s", m["planner.plan_s"],
+                        labels=labels)
+            if m["planner.compiled"]:
+                reg.inc("planner.compiled", labels=labels)
+                reg.observe("planner.compile_s", m["planner.compile_s"],
+                            labels=labels)
+            reg.gauge("planner.batch", m["planner.batch"], labels=labels)
 
     def run(self, start: int, ticks: int) -> ContinuumResult:
         gatherer = self.pipeline.gatherer

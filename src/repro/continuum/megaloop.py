@@ -73,15 +73,39 @@ __all__ = ["run_scanned", "monte_carlo_emissions"]
 
 
 class _Fallback(Exception):
-    """Raised during staging when the trace cannot be replayed fused."""
+    """Raised during staging when the trace cannot be replayed fused.
 
-    def __init__(self, reason: str) -> None:
+    ``reason`` is the stable, test-matched string; ``tick``/``detail``
+    carry the trigger context into the structured
+    ``runtime.scanned_fallbacks`` event list.
+    """
+
+    def __init__(self, reason: str, tick: Optional[int] = None,
+                 detail: str = "") -> None:
         super().__init__(reason)
         self.reason = reason
+        self.tick = tick
+        self.detail = detail
 
 
-# kind -> jitted fused scan program (shape-polymorphic via retrace)
-_SCAN_CACHE: Dict[str, object] = {}
+def _skey_digest(skey) -> str:
+    """Short stable digest of an engine structural key (the full key is
+    O(S) tuples — too big for an event record)."""
+    import hashlib
+    return hashlib.sha1(repr(skey).encode()).hexdigest()[:12]
+
+
+# (kind, with_metrics) -> jitted fused scan program; the metrics variant
+# threads the [M] accumulator through the carry and stacks per-tick
+# metric rows into the ys, so it is a distinct XLA program
+_SCAN_CACHE: Dict[Tuple[str, bool], object] = {}
+
+# Columns of the in-scan metric rows ([T, M] in ys, cumulative [M] in
+# the carry), committed to the attached registry post-scan.
+SCAN_METRICS: Tuple[str, ...] = (
+    "planned", "warm_start_rejected", "switched", "migrations",
+    "restarts", "migration_g", "expected_saving_g", "emissions_g",
+)
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +260,10 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         else:
             if skey != scache.skey:
                 raise _Fallback(
-                    "engine structural key drifted mid-trace")
+                    "engine structural key drifted mid-trace",
+                    tick=t,
+                    detail=f"structural key {_skey_digest(scache.skey)} "
+                           f"-> {_skey_digest(skey)}")
             full = not eng.incremental
         rescored = eng._refresh_values(scache, infra_e, comp, commu, full)
 
@@ -344,19 +371,23 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         else:
             if (low.comm.kind, low.service_ids, low.node_ids,
                     low.flavour_names) != struct0:
-                raise _Fallback("lowering structure drifted mid-trace")
+                raise _Fallback("lowering structure drifted mid-trace",
+                                tick=t)
             for name, arr in stat.items():
                 if not np.array_equal(getattr(low, name), arr):
                     raise _Fallback(
-                        f"lowered tensor {name!r} drifted mid-trace")
+                        f"lowered tensor {name!r} drifted mid-trace",
+                        tick=t, detail=name)
             if kind == "dense":
                 if not np.array_equal(low.comm.has_link, has_link0):
-                    raise _Fallback("dense link mask drifted mid-trace")
+                    raise _Fallback("dense link mask drifted mid-trace",
+                                    tick=t)
             else:
                 if not (np.array_equal(low.comm.src, sp0[0])
                         and np.array_equal(low.comm.fidx, sp0[1])
                         and np.array_equal(low.comm.dst, sp0[2])):
-                    raise _Fallback("sparse edge set drifted mid-trace")
+                    raise _Fallback("sparse edge set drifted mid-trace",
+                                    tick=t)
         ek_t.append(np.asarray(
             low.comm.K[de] if kind == "dense" else low.comm.k, float))
         E_t.append(np.asarray(low.E, float))
@@ -639,12 +670,21 @@ def _classify_kb(st: _Staged, scache, low0) -> None:
 # ---------------------------------------------------------------------------
 
 
-def _scan_fn(kind: str):
-    """Build (once per comm kind) the jitted whole-trace program: one
-    ``lax.scan`` whose step is the ENTIRE decision tick — warm-start
-    validation, the vmapped branch planner, ensemble pricing, the
-    hysteresis/restart switch rule, emissions accounting."""
-    fn = _SCAN_CACHE.get(kind)
+def _scan_fn(kind: str, with_metrics: bool = False):
+    """Build (once per comm kind and metrics flag) the jitted
+    whole-trace program: one ``lax.scan`` whose step is the ENTIRE
+    decision tick — warm-start validation, the vmapped branch planner,
+    ensemble pricing, the hysteresis/restart switch rule, emissions
+    accounting.
+
+    ``with_metrics=True`` additionally threads an ``[M]`` cumulative
+    metric accumulator (columns :data:`SCAN_METRICS`) through the scan
+    carry and stacks the per-tick metric row into the ys — still one
+    fused XLA program, still zero host round-trips; the registry commit
+    happens after the scan returns.  The default program carries zero
+    extra arrays, so a disabled registry costs the fused path nothing.
+    """
+    fn = _SCAN_CACHE.get((kind, with_metrics))
     if fn is not None:
         return fn
     import jax
@@ -776,10 +816,11 @@ def _scan_fn(kind: str):
                 return (carry, (jnp.asarray(False), zi, zi, zf, zf,
                                 jnp.asarray(False)))
 
-            placed_c, fcur_c, ncur_c, has_c = carry
+            core = carry[:4] if with_metrics else carry
+            placed_c, fcur_c, ncur_c, has_c = core
             do_plan = replan | ~has_c
             carry2, (switched, migs, rsts, mgc, sav, wrj) = lax.cond(
-                do_plan, plan_branch, skip_branch, carry)
+                do_plan, plan_branch, skip_branch, core)
             placed2, f2, n2, has2 = carry2
             # per-tick operational emissions of the ACTIVE assignment
             # (mirrors lowered_emissions; the commit recomputes this on
@@ -791,12 +832,21 @@ def _scan_fn(kind: str):
                                 comp_n + commE_n * ci_now.mean(), zf)
             ys = (do_plan, wrj, switched, migs, rsts, mgc, sav,
                   placed2, f2, n2, has2, em_tick)
+            if with_metrics:
+                # [M] per-tick metric row (column order: SCAN_METRICS) —
+                # accumulated in-carry AND stacked per tick, all inside
+                # the one fused program
+                m = jnp.stack([
+                    do_plan.astype(f64), wrj.astype(f64),
+                    switched.astype(f64), migs.astype(f64),
+                    rsts.astype(f64), mgc, sav, em_tick])
+                return (carry2 + (carry[4] + m,)), ys + (m,)
             return carry2, ys
 
         return lax.scan(step, carry0, xs)
 
     fn = jax.jit(fused)
-    _SCAN_CACHE[kind] = fn
+    _SCAN_CACHE[(kind, with_metrics)] = fn
     return fn
 
 
@@ -806,17 +856,18 @@ def _scan_fn(kind: str):
 
 
 def _commit(runtime, st: _Staged, carry_out, ys, start: int,
-            stage_s: float, scan_s: float):
+            stage_s: float, scan_s: float, obs=None):
     from .loop import ContinuumResult, TickRecord
 
     pipe = runtime.pipeline
     eng = st.eng
     T = st.T
     (did_plan, warm_rej, switched, migs, rsts, mig_g, sav,
-     placed_y, f_y, n_y, has_y, _em_y) = ys
+     placed_y, f_y, n_y, has_y, _em_y) = ys[:12]
+    metrics = ys[12] if len(ys) > 12 else None
 
     sig = ("megaloop", st.kind, T, st.B, st.S, st.F, st.N,
-           st.xs[9].shape[1])
+           st.xs[9].shape[1], metrics is not None)
     compiled = COMPILE_CACHE.record(sig, scan_s)
 
     per_tick = (stage_s + scan_s) / T
@@ -882,7 +933,11 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
     if st.buf is not None:
         pipe._telemetry = st.buf
 
-    placed_T, f_T, n_T, has_T = carry_out
+    if obs is not None:
+        _commit_obs(runtime, st, carry_out, ys, start, stage_s, scan_s,
+                    obs, records)
+
+    placed_T, f_T, n_T, has_T = carry_out[:4]
     low0 = st.lows[0]
     if bool(has_T):
         runtime.current = {
@@ -899,6 +954,99 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
 
     return ContinuumResult(ticks=records,
                            final_assignment=dict(runtime.current or {}))
+
+
+def _commit_obs(runtime, st: _Staged, carry_out, ys, start: int,
+                stage_s: float, scan_s: float, obs, records) -> None:
+    """Post-scan observability commit: fold the in-scan metric tensor
+    into the run's registry and replay the trace into the emissions
+    ledger.  All reductions here mirror the eager tick's accounting
+    bit-for-bit (same mask expressions, same fee arithmetic), so the
+    ledger sums equal the TickRecord totals on the fused path too."""
+    from repro.obs.ledger import _flavour_name
+
+    reg = obs.registry
+    T = st.T
+    metrics = ys[12] if len(ys) > 12 else None
+    (did_plan, warm_rej, switched, migs, rsts, mig_g, sav,
+     placed_y, f_y, n_y, has_y, _em_y) = ys[:12]
+
+    reg.inc("runtime.ticks", T)
+    if metrics is not None:
+        col = {name: metrics[:, i] for i, name in enumerate(SCAN_METRICS)}
+        reg.inc("runtime.replans", float(col["planned"].sum()))
+        reg.inc("runtime.warm_start_rejected",
+                float(col["warm_start_rejected"].sum()))
+        reg.inc("runtime.switches", float(col["switched"].sum()))
+        reg.inc("runtime.migrations", float(col["migrations"].sum()))
+        reg.inc("runtime.restarts", float(col["restarts"].sum()))
+        cum = carry_out[4]
+        for i, name in enumerate(SCAN_METRICS):
+            reg.gauge(f"scan.cum.{name}", float(cum[i]))
+    for path, n in st.path_counts.items():
+        if n:
+            reg.inc("lowering.path", n, labels={"path": path})
+    reg.observe("stage.stage_s", stage_s)
+    reg.observe("stage.scan_s", scan_s)
+    reg.observe_many("tick.emissions_g", [r.emissions_g for r in records])
+    reg.observe_many("tick.saving_g",
+                     [r.expected_saving_g for r in records])
+
+    # ---- ledger replay: walk the committed per-tick assignments,
+    # re-deriving moved/flapped with the SAME mask expressions the jitted
+    # step uses (integer counts — exact), and charging fees with the
+    # identical mul/mul/add sequence (fee * moved + fee * flapped)
+    mig_fee = float(runtime.config.migration_g)
+    restart_fee = float(runtime.config.restart_g)
+    zones = runtime._node_regions
+    p_prev = np.asarray(st.carry0[0], bool)
+    f_prev = np.asarray(st.carry0[1], np.int64)
+    n_prev = np.asarray(st.carry0[2], np.int64)
+    has_prev = bool(st.carry0[3])
+    for k in range(T):
+        low = st.lows[k]
+        p2 = np.asarray(placed_y[k], bool)
+        fk = np.asarray(f_y[k], np.int64)
+        nk = np.asarray(n_y[k], np.int64)
+        hask = bool(has_y[k])
+        moved = 0
+        flapped = 0
+        cells: List[Tuple[str, str, str, float]] = []
+        if bool(switched[k]) and has_prev:
+            # a charged switch (adoptions are free, like the eager loop)
+            moved_mask = p2 & (~p_prev | (nk != n_prev))
+            removed_mask = p_prev & ~p2
+            flapped_mask = (p2 & p_prev & (nk == n_prev)
+                            & (fk != f_prev))
+            moved = int(moved_mask.sum() + removed_mask.sum())
+            flapped = int(flapped_mask.sum())
+            for s in np.nonzero(moved_mask)[0]:
+                cells.append((
+                    low.service_ids[s],
+                    _flavour_name(low.flavour_names, int(s), int(fk[s])),
+                    low.node_ids[int(nk[s])], mig_fee))
+            for s in np.nonzero(removed_mask)[0]:
+                cells.append((
+                    low.service_ids[s],
+                    _flavour_name(low.flavour_names, int(s),
+                                  int(f_prev[s])),
+                    low.node_ids[int(n_prev[s])], mig_fee))
+            for s in np.nonzero(flapped_mask)[0]:
+                cells.append((
+                    low.service_ids[s],
+                    _flavour_name(low.flavour_names, int(s), int(fk[s])),
+                    low.node_ids[int(nk[s])], restart_fee))
+        obs.ledger.record(
+            start + k, low,
+            p2 if hask else None,
+            fk if hask else None,
+            nk if hask else None,
+            st.ci_now[k] if hask else None,
+            zones=zones, moved=moved, flapped=flapped,
+            migration_fee_g=mig_fee, restart_fee_g=restart_fee,
+            mig_cells=tuple(cells))
+        p_prev, f_prev, n_prev = p2, fk, nk
+        has_prev = hask or has_prev
 
 
 def _reconstruct_ck(st: _Staged, eng) -> None:
@@ -1018,10 +1166,12 @@ def run_scanned(runtime, start: int, ticks: int):
     asserted by the test suite).  Falls back to the eager loop — and
     records why in ``runtime.last_scanned_fallback`` — whenever the
     trace uses a feature the fused program does not replay."""
-    from .loop import ContinuumResult
+    from .loop import ContinuumResult, FallbackEvent
 
     ticks = int(ticks)
     runtime.last_scanned_fallback = None
+    obs = runtime.obs if (getattr(runtime, "obs", None) is not None
+                          and runtime.obs.enabled) else None
     if ticks <= 0:
         return ContinuumResult(
             ticks=[], final_assignment=dict(runtime.current or {}))
@@ -1032,6 +1182,14 @@ def run_scanned(runtime, start: int, ticks: int):
         st = _stage(runtime, start, ticks)
     except _Fallback as fb:
         runtime.last_scanned_fallback = fb.reason
+        ev = FallbackEvent(
+            tick=fb.tick if fb.tick is not None else start,
+            reason=fb.reason, detail=fb.detail)
+        runtime.scanned_fallbacks.append(ev)
+        if obs is not None:
+            obs.registry.inc("runtime.scanned_fallbacks")
+            obs.registry.event("runtime.scanned_fallback", tick=ev.tick,
+                               reason=ev.reason, detail=ev.detail)
         st = None
     finally:
         # never leak the trace's closures — restored BEFORE any eager
@@ -1044,15 +1202,29 @@ def run_scanned(runtime, start: int, ticks: int):
     import jax
     from jax.experimental import enable_x64
 
-    fn = _scan_fn(st.kind)
+    with_metrics = obs is not None
+    fn = _scan_fn(st.kind, with_metrics)
+    carry0 = st.carry0
+    if with_metrics:
+        # metric accumulator rides the carry; zero host work per tick
+        carry0 = carry0 + (np.zeros(len(SCAN_METRICS)),)
     t1 = time.perf_counter()
     with enable_x64():
-        carry_out, ys = fn(st.carry0, st.xs, st.consts)
+        carry_out, ys = fn(carry0, st.xs, st.consts)
         ys = jax.block_until_ready(ys)
     scan_s = time.perf_counter() - t1
     ys = tuple(np.asarray(y) for y in ys)
     carry_out = tuple(np.asarray(c) for c in carry_out)
-    return _commit(runtime, st, carry_out, ys, start, stage_s, scan_s)
+    result = _commit(runtime, st, carry_out, ys, start, stage_s, scan_s,
+                     obs=obs)
+    if obs is not None:
+        t_end = time.perf_counter()
+        tr = obs.tracer
+        tid = tr.add("run_scanned", t0, t_end, ticks=ticks)
+        tr.add("scan.stage", t0, t0 + stage_s, parent=tid)
+        tr.add("scan.fused", t1, t1 + scan_s, parent=tid)
+        tr.add("scan.commit", t1 + scan_s, t_end, parent=tid)
+    return result
 
 
 def monte_carlo_emissions(runtime, start: int, ticks: int, ci_scales):

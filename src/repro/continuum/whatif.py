@@ -16,6 +16,7 @@ tests and the batched-vs-sequential benchmark.
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -25,6 +26,7 @@ from repro.core.lowering import LoweredProblem, ScenarioBatch
 from repro.core.problem import PlacementProblem, PlanStats
 from repro.core.scheduler import GreenScheduler, SchedulerConfig
 from repro.core.types import Constraint, DeploymentPlan
+from repro.obs.registry import REGISTRY as _REGISTRY
 
 
 def assignment_arrays(
@@ -168,10 +170,17 @@ class WhatIfPlanner:
             raise ValueError(
                 "what-if evaluation needs problem.scenarios (a "
                 "ScenarioBatch of forecast branches)")
+        t0 = time.perf_counter()
         result = self.scheduler.plan(problem)
+        t1 = time.perf_counter()
         arrays = [result.arrays(b) for b in range(result.B)]
-        return _score(problem.lowering, result.plans, problem.scenarios,
-                      arrays=arrays, plan_stats=result.stats)
+        scored = _score(problem.lowering, result.plans, problem.scenarios,
+                       arrays=arrays, plan_stats=result.stats)
+        # Stage split for the tick pipeline: the batched plan call vs the
+        # cross-ensemble re-pricing that follows it.
+        _REGISTRY.observe("stage.plan_s", t1 - t0)
+        _REGISTRY.observe("stage.price_s", time.perf_counter() - t1)
+        return scored
 
     def evaluate_sequential(
         self,

@@ -24,6 +24,7 @@ from .generator import ConstraintGenerator
 from .kb import KBEnricher, KnowledgeBase
 from .library import ConstraintLibrary
 from .lowering import LoweredProblem, lower, substitute_profiles
+from ..obs.registry import REGISTRY as _REGISTRY
 from .problem import PlacementProblem
 from .ranker import ConstraintRanker
 from .scheduler import GreenScheduler, SchedulerConfig
@@ -199,6 +200,8 @@ class GreenConstraintPipeline:
                 "path": "reference",
                 "constraint_s": time.perf_counter() - t0,
             }
+            _REGISTRY.observe("stage.constraint_s",
+                              self.constraint_stats["constraint_s"])
         elif self.engine in ("array", "parity"):
             eng = self._ensure_engine()
             if self.engine == "parity" and self._shadow_kb is None:
@@ -220,6 +223,10 @@ class GreenConstraintPipeline:
                 "reused": s.reused, "fresh": s.fresh,
                 "retrieved": s.retrieved, "constraints": s.constraints,
             }
+            _REGISTRY.observe("stage.constraint_s",
+                              self.constraint_stats["constraint_s"])
+            _REGISTRY.inc("engine.dirty_candidates", s.rescored)
+            _REGISTRY.gauge("engine.candidates", s.candidates)
             if self.engine == "parity":
                 ref = self._reference_pass(
                     app, infra, monitoring, computation, communication,
@@ -363,6 +370,7 @@ class GreenConstraintPipeline:
         if cache is not None and cache[0] == key:
             low = cache[2]
             self.lowering_stats["cache_hits"] += 1
+            _REGISTRY.inc("lowering.path", labels={"path": "cache_hit"})
         else:
             skey = (backend, _structural_key(out)) \
                 if self.delta_substitution else None
@@ -371,10 +379,12 @@ class GreenConstraintPipeline:
                     cache[2], out.app, out.infra, out.computation,
                     out.communication)
                 self.lowering_stats["delta_substitutions"] += 1
+                _REGISTRY.inc("lowering.path", labels={"path": "delta"})
             else:
                 low = lower(out.app, out.infra, out.computation,
                             out.communication, backend=backend)
                 self.lowering_stats["full_lowers"] += 1
+                _REGISTRY.inc("lowering.path", labels={"path": "full"})
             self._lowering_cache = (key, skey, low)
         # Pass the constraints through as-is: a lazy ConstraintSet stays
         # columnar all the way into lower_constraints (no per-constraint

@@ -223,6 +223,22 @@ class PlanStats:
     cache_hits: int
     cache_misses: int
 
+    def metric_labels(self) -> Dict[str, str]:
+        """Label set for registry metrics derived from this call."""
+        return {"backend": self.backend,
+                "bucketed": str(bool(self.bucketed)).lower()}
+
+    def to_metrics(self) -> Dict[str, float]:
+        """Flat ``metric name -> value`` view of this call (the numeric
+        fields under their registry names) for exporters and per-tick
+        recording."""
+        return {
+            "planner.plan_s": self.plan_time_s,
+            "planner.compile_s": self.compile_time_s,
+            "planner.compiled": float(self.compiled),
+            "planner.batch": float(self.shape[0]),
+        }
+
 
 def _freeze_initial(initial) -> Optional[FrozenAssignment]:
     if initial is None:

@@ -60,6 +60,7 @@ from .lowering import (
     pad_lowering,
 )
 from .problem import BucketSpec, PlacementProblem, PlanResult, PlanStats
+from ..obs.registry import REGISTRY as _REGISTRY
 from .types import (
     Affinity,
     Application,
@@ -419,16 +420,26 @@ class PlannerCompileCache:
         self.compile_time_s = 0.0
 
     def record(self, sig: Tuple, plan_time_s: float) -> bool:
-        """Account one planner call; returns True when it compiled."""
+        """Account one planner call; returns True when it compiled.
+
+        Every call is mirrored onto the global metrics registry
+        (``planner.compile.{calls,hits,misses,time_s}``) — read those
+        with ``repro.obs.metrics_scope`` for bleed-free deltas instead
+        of resetting these process-global counters.
+        """
         self.calls += 1
+        _REGISTRY.inc("planner.compile.calls")
         entry = self.signatures.get(sig)
         if entry is None:
             self.misses += 1
             self.compile_time_s += plan_time_s
             self.signatures[sig] = {"calls": 1,
                                     "compile_time_s": plan_time_s}
+            _REGISTRY.inc("planner.compile.misses")
+            _REGISTRY.inc("planner.compile.time_s", plan_time_s)
             return True
         self.hits += 1
+        _REGISTRY.inc("planner.compile.hits")
         entry["calls"] += 1
         return False
 

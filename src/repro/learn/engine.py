@@ -81,6 +81,8 @@ from repro.core.types import (
     TimeShift,
 )
 
+from repro.obs.registry import REGISTRY as _REGISTRY
+
 from .constraint_set import ConstraintSet
 from .kb_array import ArrayKB
 
@@ -274,6 +276,8 @@ class ConstraintEngine:
             elapsed_s=time.perf_counter() - t0,
         )
         self.last_stats = stats
+        _REGISTRY.inc("engine.passes", labels={"mode": stats.mode})
+        _REGISTRY.observe("engine.pass_s", stats.elapsed_s)
         return EngineResult(constraints=constraints, stats=stats)
 
     def run_from_monitoring(self, app, infra, monitoring, iteration,

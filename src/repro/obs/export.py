@@ -1,0 +1,180 @@
+"""Exporters: Prometheus text exposition, JSONL event/span logs, and a
+human-readable green-audit run report.
+
+All output is deterministic for a given registry state — metric and
+label rows are emitted in sorted order and floats use Python's
+shortest-round-trip repr — so the Prometheus exposition is
+golden-file-testable and the JSONL logs round-trip exactly.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Tuple
+
+from .ledger import EmissionsLedger
+from .registry import MetricsRegistry
+from .trace import Tracer
+
+__all__ = [
+    "prometheus_text",
+    "events_jsonl",
+    "events_from_jsonl",
+    "render_report",
+]
+
+_PREFIX = "repro_"
+
+
+def _mangle(name: str) -> str:
+    """``planner.compile.hits`` -> ``repro_planner_compile_hits``."""
+    return _PREFIX + name.replace(".", "_").replace("-", "_")
+
+
+def _fmt(v: float) -> str:
+    f = float(v)
+    if f.is_integer() and abs(f) < 1e15:
+        return str(int(f))
+    return repr(f)
+
+
+def _labels(key: Tuple, extra: Optional[List[Tuple[str, str]]] = None
+            ) -> str:
+    pairs = list(key) + (extra or [])
+    if not pairs:
+        return ""
+    body = ",".join(f'{k}="{v}"' for k, v in pairs)
+    return "{" + body + "}"
+
+
+def prometheus_text(registry: MetricsRegistry) -> str:
+    """Prometheus text exposition (v0.0.4) of every metric in the
+    registry.  Counters get the ``_total`` suffix; histograms expose
+    cumulative ``_bucket{le=...}`` rows plus ``_sum`` / ``_count``."""
+    lines: List[str] = []
+
+    def type_line(name: str, kind: str, mangled: str) -> None:
+        meta = registry.meta(name)
+        if meta.get("help"):
+            lines.append(f"# HELP {mangled} {meta['help']}")
+        lines.append(f"# TYPE {mangled} {kind}")
+
+    by_name: Dict[str, List[Tuple[Tuple, float]]] = {}
+    for (name, key), v in registry.counters().items():
+        by_name.setdefault(name, []).append((key, v))
+    for name in sorted(by_name):
+        mangled = _mangle(name) + "_total"
+        type_line(name, "counter", mangled)
+        for key, v in sorted(by_name[name]):
+            lines.append(f"{mangled}{_labels(key)} {_fmt(v)}")
+
+    by_name = {}
+    for (name, key), v in registry.gauges().items():
+        by_name.setdefault(name, []).append((key, v))
+    for name in sorted(by_name):
+        mangled = _mangle(name)
+        type_line(name, "gauge", mangled)
+        for key, v in sorted(by_name[name]):
+            lines.append(f"{mangled}{_labels(key)} {_fmt(v)}")
+
+    hists: Dict[str, List[Tuple[Tuple, object]]] = {}
+    for (name, key), h in registry.histograms().items():
+        hists.setdefault(name, []).append((key, h))
+    for name in sorted(hists):
+        mangled = _mangle(name)
+        type_line(name, "histogram", mangled)
+        for key, h in sorted(hists[name], key=lambda kv: kv[0]):
+            for le, count in h.cumulative():
+                lines.append(
+                    f"{mangled}_bucket{_labels(key, [('le', le)])} "
+                    f"{count}")
+            lines.append(f"{mangled}_sum{_labels(key)} {_fmt(h.sum)}")
+            lines.append(f"{mangled}_count{_labels(key)} {h.count}")
+
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def events_jsonl(registry: MetricsRegistry) -> str:
+    """Registry events as JSONL, one event object per line."""
+    return "".join(
+        json.dumps(e, sort_keys=True, default=str) + "\n"
+        for e in registry.events)
+
+
+def events_from_jsonl(text: str) -> List[Dict[str, object]]:
+    return [json.loads(line) for line in text.splitlines() if line.strip()]
+
+
+def render_report(
+    result,                                # ContinuumResult (duck-typed)
+    ledger: Optional[EmissionsLedger] = None,
+    registry: Optional[MetricsRegistry] = None,
+    tracer: Optional[Tracer] = None,
+    top: int = 5,
+) -> str:
+    """Human-readable green audit of one continuum run.
+
+    Works from the ``ContinuumResult`` alone; an attached ledger adds
+    per-service / per-zone attribution, a registry adds fallback events
+    and cache counters, a tracer adds stage-latency rollups.
+    """
+    ticks = list(result.ticks)
+    T = len(ticks)
+    lines: List[str] = []
+    lines.append(f"== Green audit: {T} ticks ==")
+    op = sum(r.emissions_g for r in ticks)
+    mig = sum(r.migration_g for r in ticks)
+    lines.append(
+        f"emissions: {result.total_emissions_g:.3f} g "
+        f"(operational {op:.3f} g + migration {mig:.3f} g)")
+    lines.append(
+        "decisions: "
+        f"{sum(1 for r in ticks if r.replanned)} replans, "
+        f"{sum(1 for r in ticks if r.switched)} switches, "
+        f"{sum(r.migrations for r in ticks)} migrations, "
+        f"{sum(r.restarts for r in ticks)} restarts, "
+        f"{sum(1 for r in ticks if r.warm_start_rejected)} "
+        "warm-start rejections")
+    paths: Dict[str, int] = {}
+    for r in ticks:
+        paths[r.lowering_path] = paths.get(r.lowering_path, 0) + 1
+    lines.append("lowering paths: " + ", ".join(
+        f"{k}={v}" for k, v in sorted(paths.items())))
+    compiles = sum(r.compiles for r in ticks)
+    lines.append(f"planner compiles during run: {compiles}")
+
+    if ledger is not None and len(ledger):
+        lines.append("")
+        lines.append("-- attribution (ledger) --")
+        svc = sorted(ledger.by_service().items(),
+                     key=lambda kv: -kv[1])[:top]
+        lines.append("top services (g): " + ", ".join(
+            f"{sid}={g:.3f}" for sid, g in svc))
+        zones = sorted(ledger.by_zone().items(), key=lambda kv: -kv[1])
+        lines.append("zones (g): " + ", ".join(
+            f"{z or '?'}={g:.3f}" for z, g in zones))
+
+    if registry is not None:
+        fb = [e for e in registry.events
+              if e.get("name") == "runtime.scanned_fallback"]
+        if fb:
+            lines.append("")
+            lines.append("-- fallback events --")
+            for e in fb:
+                lines.append(
+                    f"tick {e.get('tick')}: {e.get('reason')}"
+                    + (f" ({e.get('detail')})" if e.get("detail") else ""))
+
+    if tracer is not None and tracer.spans:
+        lines.append("")
+        lines.append("-- stage latency (span rollup) --")
+        agg: Dict[str, Tuple[int, float]] = {}
+        for s in tracer.spans:
+            n, tot = agg.get(s.name, (0, 0.0))
+            agg[s.name] = (n + 1, tot + s.duration_s)
+        for name in sorted(agg):
+            n, tot = agg[name]
+            lines.append(
+                f"{name}: n={n} total={tot * 1e3:.2f} ms "
+                f"mean={tot / n * 1e3:.3f} ms")
+
+    return "\n".join(lines) + "\n"
