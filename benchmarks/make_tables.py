@@ -100,6 +100,52 @@ def green_audit_block(report=print, path=TRACE):
     report("```")
 
 
+SCHED = os.path.join(os.path.dirname(__file__), "..",
+                     "BENCH_scheduler.json")
+
+
+def fleet_billing_block(report=print, path=SCHED):
+    """Render the per-tenant billing table and fleet-scale sweep from the
+    ``fleet`` section of ``BENCH_scheduler.json``.  Skips gracefully when
+    the section is absent (the fleet benchmark hasn't run full yet)."""
+    if not os.path.exists(path):
+        report(f"(no {os.path.basename(path)} — run "
+               f"benchmarks.fleet_scale first)")
+        return
+    with open(path) as fh:
+        blob = json.load(fh)
+    fleet = blob.get("fleet")
+    if not fleet:
+        report("(no 'fleet' section in BENCH_scheduler.json — run "
+               "benchmarks.fleet_scale without --smoke)")
+        return
+    report("```")
+    report(f"{'apps':>6}{'uncoupled_s':>13}{'waterfill_s':>13}"
+           f"{'ms/app(wf)':>12}{'wf_viol':>9}{'unc_viol':>9}"
+           f"{'feasible':>10}")
+    for row in fleet["sweep"]:
+        wf, unc = row["waterfill"], row["uncoupled"]
+        report(f"{row['apps']:>6}{unc['plan_s']:>13.3f}"
+               f"{wf['plan_s']:>13.3f}{wf['per_app_ms']:>12.2f}"
+               f"{wf['violations']:>9}{unc['violations']:>9}"
+               f"{wf['feasible']:>9}/{row['apps']}")
+    report(f"cold XLA programs: {fleet['cold_compiles']} "
+           f"(ceiling {fleet['compile_ceiling']})")
+    billing = fleet.get("billing", {})
+    rows = billing.get("rows", {})
+    if rows:
+        report(f"\n{'tenant':<12}{'comp_g':>10}{'comm_g':>10}"
+               f"{'migration_g':>12}{'total_g':>10}{'ticks':>7}")
+        for tenant, r in sorted(rows.items(),
+                                key=lambda kv: -kv[1]["total"]):
+            report(f"{tenant:<12}{r.get('comp', 0.0):>10.3f}"
+                   f"{r.get('comm', 0.0):>10.3f}"
+                   f"{r.get('migration', 0.0):>12.3f}"
+                   f"{r['total']:>10.3f}{int(r.get('ticks', 0)):>7}")
+        report(f"bit-exact decomposition: {billing.get('bit_exact')}")
+    report("```")
+
+
 if __name__ == "__main__":
     print("== §Roofline baseline (single pod) ==")
     roofline_block()
@@ -109,3 +155,5 @@ if __name__ == "__main__":
     optimized_block()
     print("\n== §Green audit (continuum trace) ==")
     green_audit_block()
+    print("\n== §Fleet planning (multi-tenant billing) ==")
+    fleet_billing_block()

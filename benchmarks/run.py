@@ -14,6 +14,7 @@ def main() -> None:
         continuum_loop,
         explainability,
         fig2_scalability,
+        fleet_scale,
         observability_overhead,
         roofline,
         scenarios,
@@ -53,6 +54,13 @@ def main() -> None:
          {"smoke": True, "out_json": None} if quick else {}),
         ("observability_overhead (metrics/tracing/ledger gate)",
          observability_overhead.run,
+         {"smoke": True, "check": True, "out_json": None} if quick else {}),
+        ("fleet_scale (multi-tenant plan_many + billing)",
+         fleet_scale.run,
+         # quick mode shrinks the fleet and must not overwrite the
+         # tracked BENCH_scheduler.json fleet section; runs AFTER
+         # scheduler_scalability so the merged section lands on the
+         # fresh file
          {"smoke": True, "check": True, "out_json": None} if quick else {}),
         ("roofline single-pod (§Roofline)", roofline.run, {}),
         ("roofline multi-pod (§Dry-run)", roofline.run, {"multi_pod": True}),

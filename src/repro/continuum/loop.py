@@ -393,32 +393,18 @@ class ContinuumRuntime:
 
             if cand_plan.feasible:
                 cand = plan_assignment(cand_plan)
-                if self.current is None:
-                    self.current, switched = cand, True
-                    migrations = len(cand)  # initial rollout, not charged
-                elif cand != self.current:
-                    moved = self._moved(self.current, cand)
-                    flapped = self._flapped(self.current, cand)
-                    cost = cfg.migration_g * moved + cfg.restart_g * flapped
+                saving = 0.0
+                if self.current is not None and cand != self.current:
                     saving = (self._expected_g(low, result, self.current)
                               - result.best_expected_g) * cfg.horizon_h
                     expected_saving = saving
-                    # 4. hysteresis switching rule; the oracle skips the
-                    # hysteresis margin (its forecast is exact) but still
-                    # pays — and must justify — migration/restart cost
-                    hyst = 0.0 if cfg.oracle else cfg.hysteresis_g
-                    if saving > cost + hyst:
-                        if obs is not None:
-                            mig_cells = _migration_cells(
-                                self.current, cand,
-                                cfg.migration_g, cfg.restart_g)
-                        self.current = cand
-                        switched = True
-                        migrations = moved
-                        restarts = flapped
-                        charged_moved = moved
-                        charged_flapped = flapped
-                        migration_g = cost
+                initial = self.current is None
+                (switched, migrations, restarts, migration_g,
+                 mig_cells) = self.hysteresis_gate(
+                    cand, saving, want_cells=obs is not None)
+                if switched and not initial:
+                    charged_moved = migrations
+                    charged_flapped = restarts
         replan_s = time.perf_counter() - t_replan0
         compiles = COMPILE_CACHE.misses - misses0
 
@@ -524,6 +510,39 @@ class ContinuumRuntime:
         ``last_scanned_fallback``)."""
         from .megaloop import run_scanned as _run_scanned
         return _run_scanned(self, start, ticks)
+
+    def hysteresis_gate(
+        self, cand: Dict[str, Tuple[str, str]], saving_g: float,
+        want_cells: bool = False,
+    ) -> Tuple[bool, int, int, float, Tuple]:
+        """Step 4 — the switch-only-when-it-pays rule, shared by the eager
+        tick and the fleet runtime's per-app gate.  Applies ``cand``
+        against ``self.current`` given the expected ``saving_g`` over the
+        horizon and returns ``(switched, migrations, restarts,
+        migration_g, mig_cells)``; mutates ``self.current`` on a switch.
+
+        The initial rollout (no incumbent) always adopts the candidate:
+        every service counts as a migration but nothing is charged.  The
+        oracle skips the hysteresis margin (its forecast is exact) but
+        still pays — and must justify — migration/restart cost.
+        """
+        cfg = self.config
+        if self.current is None:
+            self.current = cand
+            return True, len(cand), 0, 0.0, ()
+        if cand == self.current:
+            return False, 0, 0, 0.0, ()
+        moved = self._moved(self.current, cand)
+        flapped = self._flapped(self.current, cand)
+        cost = cfg.migration_g * moved + cfg.restart_g * flapped
+        hyst = 0.0 if cfg.oracle else cfg.hysteresis_g
+        if saving_g > cost + hyst:
+            cells = _migration_cells(
+                self.current, cand, cfg.migration_g, cfg.restart_g) \
+                if want_cells else ()
+            self.current = cand
+            return True, moved, flapped, cost, cells
+        return False, 0, 0, 0.0, ()
 
     @staticmethod
     def _moved(old: Dict[str, Tuple[str, str]],

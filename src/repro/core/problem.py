@@ -84,12 +84,14 @@ class BucketSpec:
     n: Tuple[int, ...] = ()     # nodes
     l: Tuple[int, ...] = ()     # COO comm edges (sparse backend only)
     b: Tuple[int, ...] = ()     # scenario branches
+    a: Tuple[int, ...] = ()     # fleet apps (plan_many batching axis)
     s_floor: int = 8
     n_floor: int = 8
     l_floor: int = 8
+    a_floor: int = 1
 
     def __post_init__(self) -> None:
-        for name in ("s", "f", "n", "l", "b"):
+        for name in ("s", "f", "n", "l", "b", "a"):
             grid = tuple(getattr(self, name))
             if any(g <= 0 for g in grid) or list(grid) != sorted(set(grid)):
                 raise ValueError(
@@ -98,10 +100,10 @@ class BucketSpec:
             object.__setattr__(self, name, grid)
 
     @classmethod
-    def grid(cls, s=(), f=(), n=(), l=(), b=()) -> "BucketSpec":
+    def grid(cls, s=(), f=(), n=(), l=(), b=(), a=()) -> "BucketSpec":
         """Explicit bucket boundaries per dimension (ascending)."""
         return cls(s=tuple(s), f=tuple(f), n=tuple(n), l=tuple(l),
-                   b=tuple(b))
+                   b=tuple(b), a=tuple(a))
 
     @classmethod
     def from_observed(cls, shapes, max_buckets: int = 3) -> "BucketSpec":
@@ -152,6 +154,13 @@ class BucketSpec:
             if L_pad > L and S_pad == S:
                 S_pad = _round_up(S + 1, self.s, self.s_floor)
         return S_pad, F_pad, N_pad, L_pad, B_pad
+
+    def pad_apps(self, A: int) -> int:
+        """Bucketed app count for the fleet planner's ``[A, ...]`` batch
+        axis (``plan_many``): the ``a`` grid, or powers of two at or
+        above ``a_floor``.  Phantom apps are inert (nothing placeable)
+        and their rows are dropped after planning."""
+        return _round_up(A, self.a, self.a_floor)
 
 
 def _waste_minimizing_boundaries(values, max_buckets: int

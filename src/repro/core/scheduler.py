@@ -470,6 +470,55 @@ def reset_compile_cache_counters() -> None:
     COMPILE_CACHE.reset_counters()
 
 
+def plans_from_arrays(
+    low: LoweredProblem,
+    notes: Sequence[str],
+    placed_b: np.ndarray,   # [B, S] bool (already sliced to real S)
+    fcur_b: np.ndarray,     # [B, S]
+    ncur_b: np.ndarray,     # [B, S]
+    skipped_b: np.ndarray,  # [B, S] bool
+    infeas_b: np.ndarray,   # [B] bool
+    fail_b: np.ndarray,     # [B] int — first mandatory failure, -1 if none
+    order_b: np.ndarray,    # [B, S] greedy construction order
+    em_b: np.ndarray,       # [B] emissions (grams)
+) -> List[DeploymentPlan]:
+    """Materialize one :class:`DeploymentPlan` per branch row from sliced
+    planner output arrays — the shared object-construction tail of
+    ``GreenScheduler.plan`` and the fleet planner's ``plan_many`` (both
+    must build byte-identical plan objects from identical arrays for the
+    fleet-vs-sequential parity guarantee to be checkable at the plan
+    level)."""
+    S = low.S
+    plans: List[DeploymentPlan] = []
+    for b in range(placed_b.shape[0]):
+        if infeas_b[b]:
+            sid = low.service_ids[int(fail_b[b])]
+            plans.append(DeploymentPlan(
+                placements=(),
+                feasible=False,
+                notes=tuple(notes) + (f"no feasible node for {sid}",),
+            ))
+            continue
+        assign = {
+            low.service_ids[s]: (
+                low.flavour_names[s][int(fcur_b[b, s])],
+                low.node_ids[int(ncur_b[b, s])])
+            for s in range(S) if placed_b[b, s]
+        }
+        plans.append(DeploymentPlan(
+            placements=tuple(
+                Placement(sid, f, n)
+                for sid, (f, n) in sorted(assign.items())),
+            skipped_services=tuple(
+                low.service_ids[int(s)] for s in order_b[b]
+                if skipped_b[b, s]),
+            total_emissions_g=float(em_b[b]),
+            feasible=True,
+            notes=tuple(notes),
+        ))
+    return plans
+
+
 def _pad1(a: np.ndarray, size: int) -> np.ndarray:
     """Pad a 1-D array with zeros (False / 0) up to ``size``."""
     if a.shape[0] == size:
@@ -686,33 +735,9 @@ class GreenScheduler:
             low, placed_b, fcur_b, ncur_b, ci=ci_b,
             E=E_b if scenarios.E is not None else None)
 
-        plans: List[DeploymentPlan] = []
-        for b in range(scenarios.B):
-            if infeas_b[b]:
-                sid = low.service_ids[int(fail_b[b])]
-                plans.append(DeploymentPlan(
-                    placements=(),
-                    feasible=False,
-                    notes=tuple(notes) + (f"no feasible node for {sid}",),
-                ))
-                continue
-            assign = {
-                low.service_ids[s]: (
-                    low.flavour_names[s][int(fcur_b[b, s])],
-                    low.node_ids[int(ncur_b[b, s])])
-                for s in range(S) if placed_b[b, s]
-            }
-            plans.append(DeploymentPlan(
-                placements=tuple(
-                    Placement(sid, f, n)
-                    for sid, (f, n) in sorted(assign.items())),
-                skipped_services=tuple(
-                    low.service_ids[int(s)] for s in order_b[b]
-                    if skipped_b[b, s]),
-                total_emissions_g=float(em_b[b]),
-                feasible=True,
-                notes=tuple(notes),
-            ))
+        plans = plans_from_arrays(
+            low, notes, placed_b, fcur_b, ncur_b, skipped_b, infeas_b,
+            fail_b, order_b, em_b)
         feas_mask = np.array([p.feasible for p in plans])
         return PlanResult(
             problem=problem, plans=plans, placed=placed_b, fcur=fcur_b,

@@ -1,0 +1,34 @@
+"""Fleet planning: multi-tenant placement over shared infrastructure.
+
+``plan_many`` plans A applications against one Infrastructure as a
+single batched jit program per padded-shape group (uncoupled /
+waterfill / price-coupled capacity); :class:`FleetRuntime` drives the
+whole fleet's adaptive continuum loop with one replan per tick and
+per-tenant billing on the emissions ledger.
+"""
+from .problem import (
+    COUPLINGS,
+    CapacityReport,
+    FleetProblem,
+    FleetResult,
+    FleetStats,
+    accumulate_loads,
+    fleet_capacity_report,
+)
+from .planner import plan_many
+from .runtime import FleetApp, FleetRunResult, FleetRuntime, FleetTickRecord
+
+__all__ = [
+    "COUPLINGS",
+    "CapacityReport",
+    "FleetApp",
+    "FleetProblem",
+    "FleetResult",
+    "FleetRunResult",
+    "FleetRuntime",
+    "FleetStats",
+    "FleetTickRecord",
+    "accumulate_loads",
+    "fleet_capacity_report",
+    "plan_many",
+]

@@ -29,10 +29,14 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from .export import (
+    MetricsServer,
+    billing_report,
     events_from_jsonl,
     events_jsonl,
     prometheus_text,
+    render_billing,
     render_report,
+    serve_metrics,
 )
 from .ledger import EmissionsLedger, LedgerEntry
 from .registry import (
@@ -50,15 +54,19 @@ __all__ = [
     "HistogramData",
     "LedgerEntry",
     "MetricsRegistry",
+    "MetricsServer",
     "Observability",
     "REGISTRY",
     "Span",
     "Tracer",
+    "billing_report",
     "events_from_jsonl",
     "events_jsonl",
     "metrics_scope",
     "prometheus_text",
+    "render_billing",
     "render_report",
+    "serve_metrics",
 ]
 
 

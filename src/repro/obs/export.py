@@ -20,6 +20,10 @@ __all__ = [
     "events_jsonl",
     "events_from_jsonl",
     "render_report",
+    "billing_report",
+    "render_billing",
+    "serve_metrics",
+    "MetricsServer",
 ]
 
 _PREFIX = "repro_"
@@ -102,6 +106,152 @@ def events_jsonl(registry: MetricsRegistry) -> str:
 
 def events_from_jsonl(text: str) -> List[Dict[str, object]]:
     return [json.loads(line) for line in text.splitlines() if line.strip()]
+
+
+def billing_report(
+    ledger: EmissionsLedger,
+    apps: Optional[Dict[str, List[str]]] = None,
+) -> Dict[str, Dict[str, float]]:
+    """Per-tenant carbon bill from a (possibly multi-tenant) ledger.
+
+    Rolls the ledger's (service, flavour, node, zone) cells up to one row
+    per tenant: gCO2 split into ``comp`` / ``comm`` / ``migration`` plus
+    the ``total`` and the number of ledger ``ticks`` that contributed.
+    Tenants are resolved from the entries' ``app`` tag (what the fleet
+    runtime records); for untagged single-app ledgers an optional
+    ``apps`` mapping ``tenant -> [service ids]`` attributes cells by
+    service ownership instead (unmatched services land on ``"?"``).
+
+    Because each fleet tick records one tagged entry per app, a fully
+    tagged tenant's ``total`` is computed as the plain float sum of its
+    own bit-exact per-tick totals (``LedgerEntry.emissions_g +
+    migration_g``, each bit-equal to the tick's accounted emissions) in
+    tick order — identical addends, identical order, so a tenant's bill
+    equals its runtime-accounted emissions bitwise.  The
+    comp/comm/migration *split* is a cell-level rollup (reporting-grade:
+    the addends regroup across services, so ``comp + comm + migration``
+    may differ from ``total`` in the last ulp).
+    """
+    svc_owner: Dict[str, str] = {}
+    if apps:
+        for tenant, sids in apps.items():
+            for sid in sids:
+                svc_owner[sid] = tenant
+    out: Dict[str, Dict[str, float]] = {}
+    seen_ticks: Dict[str, set] = {}
+    exact: Dict[str, float] = {}
+    mixed: set = set()
+    for e in ledger.entries:
+        for sid, _fl, _nid, _zone, kind, g in e.cells():
+            tenant = e.app or svc_owner.get(sid, "?")
+            row = out.setdefault(tenant, {
+                "comp": 0.0, "comm": 0.0, "migration": 0.0,
+                "total": 0.0, "ticks": 0.0})
+            row[kind] = row.get(kind, 0.0) + g
+            row["total"] += g
+            if not e.app:
+                mixed.add(tenant)
+        if e.app:
+            exact[e.app] = exact.get(e.app, 0.0) \
+                + e.emissions_g + e.migration_g
+            seen_ticks.setdefault(e.app, set()).add(e.t)
+    for tenant, total in exact.items():
+        if tenant in out and tenant not in mixed:
+            out[tenant]["total"] = total
+    for tenant, ticks in seen_ticks.items():
+        if tenant in out:
+            out[tenant]["ticks"] = float(len(ticks))
+    return out
+
+
+def render_billing(report: Dict[str, Dict[str, float]]) -> str:
+    """Fixed-width text table of a :func:`billing_report` result, tenants
+    sorted by descending total."""
+    lines = [f"{'tenant':<16}{'comp_g':>12}{'comm_g':>12}"
+             f"{'migration_g':>12}{'total_g':>12}{'ticks':>7}"]
+    for tenant, row in sorted(report.items(),
+                              key=lambda kv: -kv[1]["total"]):
+        lines.append(
+            f"{tenant:<16}{row.get('comp', 0.0):>12.3f}"
+            f"{row.get('comm', 0.0):>12.3f}"
+            f"{row.get('migration', 0.0):>12.3f}"
+            f"{row['total']:>12.3f}{int(row.get('ticks', 0)):>7}")
+    return "\n".join(lines) + "\n"
+
+
+class MetricsServer:
+    """Long-lived Prometheus scrape endpoint over a registry.
+
+    Serves the text exposition of :func:`prometheus_text` at ``/metrics``
+    (and ``/``) from a daemon thread; the registry is read live on every
+    scrape.  Stop with :meth:`close` (also a context manager)."""
+
+    def __init__(self, registry: MetricsRegistry, port: int = 0,
+                 host: str = "127.0.0.1") -> None:
+        from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+        import threading
+
+        reg = registry
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self) -> None:  # noqa: N802 — http.server API
+                if self.path.split("?")[0] not in ("/", "/metrics"):
+                    self.send_error(404)
+                    return
+                body = prometheus_text(reg).encode()
+                self.send_response(200)
+                self.send_header(
+                    "Content-Type",
+                    "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args) -> None:  # quiet by default
+                pass
+
+        self.registry = registry
+        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="metrics-server",
+            daemon=True)
+        self._thread.start()
+
+    @property
+    def port(self) -> int:
+        """The bound port (useful with ``port=0`` ephemeral binding)."""
+        return self._httpd.server_address[1]
+
+    @property
+    def url(self) -> str:
+        host = self._httpd.server_address[0]
+        return f"http://{host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def serve_metrics(registry: MetricsRegistry, port: int = 0,
+                  host: str = "127.0.0.1") -> MetricsServer:
+    """Start a Prometheus scrape endpoint for ``registry``.
+
+        server = serve_metrics(REGISTRY, port=9100)
+        ... # scrape http://127.0.0.1:9100/metrics
+        server.close()
+
+    ``port=0`` binds an ephemeral port (read it back from
+    ``server.port``).  The server runs on a daemon thread and reads the
+    registry live, so metrics written after startup appear on the next
+    scrape."""
+    return MetricsServer(registry, port=port, host=host)
 
 
 def render_report(

@@ -74,6 +74,11 @@ class LedgerEntry:
     migration_fee_g: float = 0.0
     restart_fee_g: float = 0.0
     mig_cells: Tuple[MigrationCharge, ...] = ()
+    # Multi-tenant attribution: which application/tenant this tick's
+    # entry belongs to ("" for single-app runs).  The fleet runtime
+    # records one entry per app per tick into a SHARED ledger, and
+    # ``billing_report`` groups on this tag.
+    app: str = ""
 
     # -- bit-exact tick totals ----------------------------------------------
 
@@ -165,11 +170,13 @@ class EmissionsLedger:
         migration_fee_g: float = 0.0,
         restart_fee_g: float = 0.0,
         mig_cells: Tuple[MigrationCharge, ...] = (),
+        app: str = "",
     ) -> LedgerEntry:
         """Attribute one tick.  ``placed``/``fcur``/``ncur`` are the
         assignment arrays the loop's accounting used (``None`` for a
         tick with no deployment); ``ci`` the carbon intensities the
-        emissions were charged at."""
+        emissions were charged at; ``app`` the tenant tag for
+        multi-tenant (fleet) ledgers."""
         S = low.S
         if placed is None:
             placed = np.zeros(S, dtype=bool)
@@ -211,6 +218,7 @@ class EmissionsLedger:
             migration_fee_g=float(migration_fee_g),
             restart_fee_g=float(restart_fee_g),
             mig_cells=tuple(mig_cells),
+            app=str(app),
         )
         self.entries.append(entry)
         return entry

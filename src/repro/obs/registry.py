@@ -254,9 +254,17 @@ def metrics_scope(registry: Optional[MetricsRegistry] = None):
     sections and test runs.  Nothing is reset: overlapping scopes and
     concurrent readers all see consistent numbers.
 
+    The planner compile cache mirrors every call onto the global
+    registry (``planner.compile.{calls,hits,misses,time_s}``), so a
+    warm-shape gate reads as::
+
+        from repro.fleet import plan_many
+
+        plan_many(fleet)                 # warm every bucket's program
         with metrics_scope() as scope:
-            plan_many_things()
+            result = plan_many(fleet)    # same shapes -> cached programs
         assert scope.delta("planner.compile.misses") == 0
+        assert scope.delta("planner.compile.calls") == result.stats.calls
     """
     scope = MetricsScope(registry if registry is not None else REGISTRY)
     try:
