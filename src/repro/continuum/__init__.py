@@ -9,6 +9,7 @@ from .loop import (          # noqa: F401
     ContinuumResult,
     ContinuumRuntime,
     FallbackEvent,
+    FallbackReason,
     RuntimeConfig,
     TickRecord,
 )

@@ -33,11 +33,23 @@ import json
 import os
 import time
 from dataclasses import dataclass, field
+from enum import Enum
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.lowering import ScenarioBatch, lowered_emissions
+from repro.core.lowering import (
+    ScenarioBatch,
+    lowered_emissions,
+    mask_unavailable,
+)
 from repro.core.pipeline import GreenConstraintPipeline
 from repro.core.problem import BucketSpec
+from repro.faults import (
+    DegradedCarbon,
+    DegradedWorkload,
+    FaultTrace,
+    PlacementViolation,
+    check_placement,
+)
 from repro.core.scheduler import (
     COMPILE_CACHE,
     GreenScheduler,
@@ -92,6 +104,25 @@ class RuntimeConfig:
     # windows through the TelemetryBuffer ring (smoother profiles, less
     # constraint churn).  Threaded through the pipeline per tick.
     telemetry_window: int = 1
+    # -- fault tolerance ----------------------------------------------------
+    # Seeded fault schedule (:class:`repro.faults.FaultTrace`).  None (the
+    # default) keeps every fault-handling branch off the hot path.  When
+    # set, the runtime plans through degraded views (persistence carbon
+    # for dark zones, NaN-held telemetry during dropouts), masks dead
+    # nodes out of the lowering, and evicts stranded services.
+    faults: Optional[FaultTrace] = None
+    # Services stranded on a dead node trigger a same-tick replan that
+    # bypasses the hysteresis margin — migration cost is still billed,
+    # the gate just can't veto the evacuation.
+    emergency_replan: bool = True
+    # Post-plan invariant validator (``repro.faults.validator``): every
+    # committed assignment must place services on live nodes within
+    # capacity; violations are recorded, counted and surfaced as obs
+    # events (never silently dropped).
+    validate_placements: bool = True
+    # Scenario-sigma widening per stale hour for zones whose carbon feed
+    # is dark: sigma = 0.10 * (1 + widen * staleness).
+    fault_sigma_widen: float = 0.05
 
 
 @dataclass
@@ -127,6 +158,50 @@ class TickRecord:
     # time of the whole staged+scanned trace (0.0 on the eager path —
     # there is no fused program to attribute).
     tick_fused_s: float = 0.0
+    # Fault-handling telemetry: services evicted from dead nodes this
+    # tick, whether that triggered an emergency (gate-bypassing) replan,
+    # and post-plan invariant violations found by the validator.
+    evicted: int = 0
+    emergency: bool = False
+    violations: int = 0
+
+
+class FallbackReason(str, Enum):
+    """Closed set of ``run_scanned`` -> eager fallback reasons.
+
+    The str mixin keeps every member ``==`` its stable reason string, so
+    existing matches on ``last_scanned_fallback`` keep working; context
+    that used to be interpolated into the message (engine name, tensor
+    name, the stale-assignment exception) now travels in
+    ``FallbackEvent.detail``.  ``megaloop._Fallback`` only accepts
+    members of this enum — a new fallback path MUST add its reason here,
+    which is what makes the set closed and documentable.
+    """
+
+    # configuration the fused program cannot express
+    ENGINE_NOT_ARRAY = "constraint engine is not 'array'"
+    NO_SCHEDULER_CONFIG = "planner exposes no scheduler config"
+    BUCKETED_PLANNER = "bucketed planner shapes are not replayed fused"
+    NON_NATIVE_MODULE = \
+        "non-native library module needs the per-tick delegate pass"
+    DEGENERATE_SHAPE = "degenerate problem shape (S or N is 0)"
+    STALE_ASSIGNMENT = "current assignment is stale"
+    # structural drift mid-trace (the scan stages fixed shapes/tensors)
+    ENGINE_KEY_DRIFT = "engine structural key drifted mid-trace"
+    LOWERING_STRUCTURE_DRIFT = "lowering structure drifted mid-trace"
+    LOWERED_TENSOR_DRIFT = "lowered tensor drifted mid-trace"
+    DENSE_LINK_DRIFT = "dense link mask drifted mid-trace"
+    SPARSE_EDGE_DRIFT = "sparse edge set drifted mid-trace"
+    AFFINITY_SLOT_COLLISION = "affinity penalty slots have multiple writers"
+    AVOID_SLOT_COLLISION = "avoid penalty slots have multiple writers"
+    # structural FAULT kinds: node outages / blackouts / dropouts /
+    # spikes ride the scan natively, but capacity derates rewrite the
+    # staged capacity tensors and must fall back loudly
+    FAULT_CAPACITY_DERATE = \
+        "capacity-derate faults change capacity tensors mid-trace"
+
+    def __str__(self) -> str:  # "FallbackReason.X" would leak into logs
+        return self.value
 
 
 @dataclass
@@ -141,7 +216,7 @@ class FallbackEvent:
     """
 
     tick: int                 # trace tick the fallback triggered at
-    reason: str               # stable reason string (tests match on it)
+    reason: str               # FallbackReason member (== its stable string)
     detail: str = ""          # e.g. digest of the structural key that drifted
 
 
@@ -280,11 +355,55 @@ class ContinuumRuntime:
         # structured history (append-only across runs)
         self.last_scanned_fallback: Optional[str] = None
         self.scanned_fallbacks: List[FallbackEvent] = []
+        # fault wiring: with a schedule attached, every PLANNING signal
+        # is read through the degraded views (the raw traces keep backing
+        # accounting/oracle truth inside the views); without one the
+        # views ARE the raw traces, so the fault-free path is unchanged.
+        # The views themselves are built lazily by the _carbon_view /
+        # _workload_view properties so that reassigning runtime.carbon /
+        # runtime.workload mid-life (tests do) stays supported.
+        if self.config.faults is not None:
+            self.config.faults.check_infra(self.infra)
+        self._fault_views: Dict[str, object] = {}
+        # post-plan invariant violations (repro.faults.validator),
+        # append-only across ticks — the fault benchmark gates on this
+        # staying empty
+        self.placement_violations: List[PlacementViolation] = []
         if self.config.bucket is not None:
             self._apply_bucket(self.config.bucket)
         # auto-bucket warmup: observed (S, F, N, L, B) shapes per replan
         self._observed_shapes: List[Tuple] = []
         self.auto_bucket: Optional[BucketSpec] = None
+
+    @property
+    def _carbon_view(self):
+        """The carbon trace the PLANNER reads: the raw trace without a
+        fault schedule, else a cached :class:`DegradedCarbon` rebuilt
+        whenever ``self.carbon``/``config.faults`` are repointed."""
+        faults = self.config.faults
+        if faults is None:
+            return self.carbon
+        view = self._fault_views.get("carbon")
+        if (view is None or view.base is not self.carbon
+                or view.faults is not faults):
+            view = DegradedCarbon(
+                self.carbon, faults,
+                widen_per_stale_h=self.config.fault_sigma_widen)
+            self._fault_views["carbon"] = view
+        return view
+
+    @property
+    def _workload_view(self):
+        """Workload twin of :attr:`_carbon_view`."""
+        faults = self.config.faults
+        if faults is None:
+            return self.workload
+        view = self._fault_views.get("workload")
+        if (view is None or view.base is not self.workload
+                or view.faults is not faults):
+            view = DegradedWorkload(self.workload, faults)
+            self._fault_views["workload"] = view
+        return view
 
     def _apply_bucket(self, spec: BucketSpec) -> None:
         """Swap a bucketed scheduler into the (possibly shared/injected)
@@ -308,11 +427,14 @@ class ContinuumRuntime:
         # Observability bundle is attached.
         t_tick0 = time.perf_counter()
         # 1. monitoring + carbon ingestion: the gatherer reads the signal
-        # as of this tick (window mean -> node.carbon, persistence forecast)
-        self.pipeline.gatherer.signal = self.carbon.history_signal(t)
-        self.pipeline.gatherer.forecast = self.carbon.forecast_signal(
+        # as of this tick (window mean -> node.carbon, persistence
+        # forecast).  With a fault schedule these views are the DEGRADED
+        # world: dark zones report persistence, dropout ticks deliver
+        # NaN-valued samples with stable identities.
+        self.pipeline.gatherer.signal = self._carbon_view.history_signal(t)
+        self.pipeline.gatherer.forecast = self._carbon_view.forecast_signal(
             t, cfg.horizon_h)
-        mon = self.workload.monitoring(t)
+        mon = self._workload_view.monitoring(t)
         t_ingest1 = time.perf_counter()
 
         # 2. constraints + enriched problem (KB decay happens inside); one
@@ -320,6 +442,14 @@ class ContinuumRuntime:
         # delta fast path array-substitutes ci/E when only profiles moved)
         out = self.pipeline.run(self.app, self.infra, mon,
                                 use_kb=cfg.use_kb)
+        faults = cfg.faults
+        if faults is not None \
+                and self._workload_view.stale(t, cfg.telemetry_window):
+            # telemetry dropout: the engine above already saw the NaN
+            # samples (fresh constraints come up empty, KB mu-decays),
+            # but the LOWERING must not price NaN profiles — hold the
+            # last clean window's profiles instead
+            out = self._held_output(out, t)
         t_cons1 = time.perf_counter()
         cstats = getattr(self.pipeline, "constraint_stats", None) or {}
         constraint_s = float(cstats.get("constraint_s", 0.0))
@@ -338,8 +468,41 @@ class ContinuumRuntime:
         else:
             lowering_path = "full"
 
+        # fault-handling stage: mask dead/derated nodes out of the
+        # lowering via the availability path, evict stranded services,
+        # and decide whether this tick is an emergency
+        alive = None
+        evicted = 0
+        emergency = False
+        if faults is not None:
+            alive = faults.alive_at(t)
+            derate = faults.derate_at(t)
+            if not alive.all() or derate is not None:
+                low = mask_unavailable(low, alive, derate=derate)
+                problem = problem.with_lowering(low)
+            if self.current:
+                nidx = low.node_index()
+                stranded = [
+                    sid for sid, (_fl, nid) in self.current.items()
+                    if not alive[nidx[nid]]]
+                if stranded:
+                    # a dead node takes its services down with it: the
+                    # incumbent shrinks NOW (accounting must not bill a
+                    # dead node), and re-placement is an emergency
+                    evicted = len(stranded)
+                    for sid in stranded:
+                        del self.current[sid]
+                    emergency = cfg.emergency_replan
+            if (cfg.emergency_replan and not emergency
+                    and derate is not None and self.current):
+                # brownout: the incumbent survived but may no longer fit
+                # the derated capacities — that too forces a replan
+                pl, fc, nc = assignment_arrays(low, self.current)
+                if check_placement(low, pl, fc, nc, alive=alive, t=t):
+                    emergency = True
+
         replanned = (t % max(cfg.replan_every, 1) == 0) \
-            or self.current is None
+            or self.current is None or emergency
         switched = False
         migrations = 0
         restarts = 0
@@ -357,10 +520,12 @@ class ContinuumRuntime:
 
         if replanned:
             if cfg.oracle:
-                ci_b = self.carbon.future_matrix(
+                # the oracle stays a TRUE oracle: the degraded view
+                # delegates future_matrix to the raw trace
+                ci_b = self._carbon_view.future_matrix(
                     self._node_regions, t, cfg.horizon_h)
             else:
-                ci_b = self.carbon.scenario_matrix(
+                ci_b = self._carbon_view.scenario_matrix(
                     self._node_regions, t, cfg.horizon_h,
                     cfg.scenarios if cfg.use_whatif else 1)
             tick_problem = problem.with_scenarios(ScenarioBatch(ci=ci_b))
@@ -401,7 +566,8 @@ class ContinuumRuntime:
                 initial = self.current is None
                 (switched, migrations, restarts, migration_g,
                  mig_cells) = self.hysteresis_gate(
-                    cand, saving, want_cells=obs is not None)
+                    cand, saving, want_cells=obs is not None,
+                    force=emergency)
                 if switched and not initial:
                     charged_moved = migrations
                     charged_flapped = restarts
@@ -417,6 +583,13 @@ class ContinuumRuntime:
             ci_now = self.carbon.now(self._node_regions, t)
             emissions = lowered_emissions(
                 low, placed, fcur, ncur, ci=ci_now)
+        # post-plan invariants: the committed assignment must sit on live
+        # nodes within (possibly derated) capacity
+        violations: List[PlacementViolation] = []
+        if cfg.validate_placements and self.current:
+            violations = check_placement(
+                low, placed, fcur, ncur, alive=alive, t=t)
+            self.placement_violations.extend(violations)
         rec = TickRecord(
             t=t, emissions_g=emissions, migration_g=migration_g,
             migrations=migrations, replanned=replanned, switched=switched,
@@ -425,7 +598,9 @@ class ContinuumRuntime:
             warm_start_rejected=warm_rejected,
             restarts=restarts, rebuild_s=rebuild_s, replan_s=replan_s,
             lowering_path=lowering_path, compiles=compiles,
-            constraint_s=constraint_s, dirty_candidates=dirty_candidates)
+            constraint_s=constraint_s, dirty_candidates=dirty_candidates,
+            evicted=evicted, emergency=emergency,
+            violations=len(violations))
         if obs is not None:
             t_end = time.perf_counter()
             tr = obs.tracer
@@ -442,6 +617,9 @@ class ContinuumRuntime:
             tr.add("account", t_acct0, t_end, parent=tid)
             self._record_tick_metrics(obs, rec, t_end - t_tick0,
                                       plan_stats)
+            if faults is not None:
+                self._record_fault_events(obs, t, evicted, emergency,
+                                          violations)
             obs.ledger.record(
                 t, low, placed, fcur, ncur, ci_now,
                 zones=self._node_regions,
@@ -450,6 +628,44 @@ class ContinuumRuntime:
                 restart_fee_g=cfg.restart_g,
                 mig_cells=mig_cells)
         return rec
+
+    def _held_output(self, out, t: int):
+        """Telemetry-dropout hold: rebuild the LOWERING inputs (enriched
+        app + Eq. 1/2 profiles) from the newest monitoring whose whole
+        telemetry window is clean, via the estimator's direct path.  The
+        constraint engine keeps the NaN view (fresh constraints empty,
+        KB held under mu-decay); only the priced tensors are held.  The
+        staged scan applies this exact function, so the two paths price
+        identical problems."""
+        monf = self._workload_view.lowering_monitoring(
+            t, self.config.telemetry_window)
+        est = self.pipeline.estimator
+        return dataclasses.replace(
+            out,
+            app=est.enrich(self.app, monf),
+            computation=est.computation_profiles(monf),
+            communication=est.communication_profiles(monf))
+
+    def _record_fault_events(self, obs: Observability, t: int,
+                             evicted: int, emergency: bool,
+                             violations: List[PlacementViolation]) -> None:
+        """Exactly one structured registry event per fault occurrence
+        (at its start tick), per emergency replan, and per invariant
+        violation — the scanned commit replays the same calls."""
+        reg = obs.registry
+        for ev in self.config.faults.starting(t):
+            reg.event("fault." + ev.kind, tick=t, target=ev.target,
+                      hours=ev.hours, magnitude=ev.magnitude)
+            reg.inc("fault.injected", labels={"kind": ev.kind})
+        if evicted:
+            reg.inc("runtime.evictions", evicted)
+        if emergency:
+            reg.event("fault.emergency_replan", tick=t, stranded=evicted)
+            reg.inc("runtime.emergency_replans")
+        for v in violations:
+            reg.event("fault.invariant_violation", tick=t, kind=v.kind,
+                      service=v.service, node=v.node, detail=v.detail)
+            reg.inc("fault.invariant_violations")
 
     def _record_tick_metrics(self, obs: Observability, rec: TickRecord,
                              tick_s: float, plan_stats) -> None:
@@ -513,7 +729,7 @@ class ContinuumRuntime:
 
     def hysteresis_gate(
         self, cand: Dict[str, Tuple[str, str]], saving_g: float,
-        want_cells: bool = False,
+        want_cells: bool = False, force: bool = False,
     ) -> Tuple[bool, int, int, float, Tuple]:
         """Step 4 — the switch-only-when-it-pays rule, shared by the eager
         tick and the fleet runtime's per-app gate.  Applies ``cand``
@@ -525,6 +741,11 @@ class ContinuumRuntime:
         every service counts as a migration but nothing is charged.  The
         oracle skips the hysteresis margin (its forecast is exact) but
         still pays — and must justify — migration/restart cost.
+
+        ``force`` is the emergency-replan override: the candidate is
+        adopted regardless of the saving-vs-cost comparison (evacuating
+        a dead node must never lose to flap damping), but migration and
+        restart costs are still counted and billed in full.
         """
         cfg = self.config
         if self.current is None:
@@ -536,7 +757,7 @@ class ContinuumRuntime:
         flapped = self._flapped(self.current, cand)
         cost = cfg.migration_g * moved + cfg.restart_g * flapped
         hyst = 0.0 if cfg.oracle else cfg.hysteresis_g
-        if saving_g > cost + hyst:
+        if force or saving_g > cost + hyst:
             cells = _migration_cells(
                 self.current, cand, cfg.migration_g, cfg.restart_g) \
                 if want_cells else ()

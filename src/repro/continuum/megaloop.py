@@ -66,7 +66,9 @@ from repro.core.scheduler import (
     planner_single,
 )
 from repro.core.types import Affinity, AvoidNode
+from repro.faults import check_placement
 
+from .loop import FallbackReason
 from .whatif import assignment_arrays
 
 __all__ = ["run_scanned", "monte_carlo_emissions"]
@@ -75,14 +77,20 @@ __all__ = ["run_scanned", "monte_carlo_emissions"]
 class _Fallback(Exception):
     """Raised during staging when the trace cannot be replayed fused.
 
-    ``reason`` is the stable, test-matched string; ``tick``/``detail``
+    ``reason`` MUST be a :class:`~repro.continuum.loop.FallbackReason`
+    member (the closed enum of documented reasons — a str subclass, so
+    it still compares equal to its stable string); ``tick``/``detail``
     carry the trigger context into the structured
     ``runtime.scanned_fallbacks`` event list.
     """
 
-    def __init__(self, reason: str, tick: Optional[int] = None,
+    def __init__(self, reason: FallbackReason, tick: Optional[int] = None,
                  detail: str = "") -> None:
-        super().__init__(reason)
+        if not isinstance(reason, FallbackReason):
+            raise TypeError(
+                "fallback reason must be a FallbackReason member, "
+                f"got {reason!r}")
+        super().__init__(str(reason))
         self.reason = reason
         self.tick = tick
         self.detail = detail
@@ -159,24 +167,34 @@ def _stage(runtime, start: int, T: int) -> _Staged:
     cfg = runtime.config
     pipe = runtime.pipeline
     if pipe.engine != "array":
-        raise _Fallback(f"constraint engine {pipe.engine!r} is not 'array'")
+        raise _Fallback(FallbackReason.ENGINE_NOT_ARRAY,
+                        detail=f"engine {pipe.engine!r}")
     sched = getattr(runtime.planner, "scheduler", None)
     scfg = getattr(sched, "config", None)
     if scfg is None:
-        raise _Fallback("planner exposes no scheduler config")
+        raise _Fallback(FallbackReason.NO_SCHEDULER_CONFIG)
     if scfg.bucket is not None or cfg.bucket is not None \
             or cfg.auto_bucket_after:
-        raise _Fallback("bucketed planner shapes are not replayed fused")
+        raise _Fallback(FallbackReason.BUCKETED_PLANNER)
     eng = pipe._ensure_engine()
     for module in eng.library:
         if type(module) not in (AvoidNodeModule, AffinityModule,
                                 TimeShiftModule):
-            raise _Fallback(
-                f"non-native library module {module.name!r} needs the "
-                "per-tick delegate pass")
+            raise _Fallback(FallbackReason.NON_NATIVE_MODULE,
+                            detail=f"module {module.name!r}")
+    faults = cfg.faults
+    if faults is not None and faults.has_derates(start, T):
+        # capacity derates rewrite the cpu/ram capacity tensors mid-trace
+        # — genuinely structural for the fused program (every other fault
+        # kind stays array-native); fall back loudly
+        raise _Fallback(FallbackReason.FAULT_CAPACITY_DERATE, tick=start)
 
     app, infra = runtime.app, runtime.infra
-    carbon, workload = runtime.carbon, runtime.workload
+    # with a fault schedule these are the DEGRADED views (dark zones →
+    # persistence + widened scenarios, dropout ticks → NaN samples);
+    # without one they alias the raw traces.  ``now``/``future_matrix``
+    # delegate to the raw trace either way (truthful accounting).
+    carbon, workload = runtime._carbon_view, runtime._workload_view
     node_regions = runtime._node_regions
     gatherer, estimator = pipe.gatherer, pipe.estimator
     iter0 = pipe.iteration
@@ -220,6 +238,7 @@ def _stage(runtime, start: int, T: int) -> _Staged:
     ci_mean_t: List[np.ndarray] = []
     ci_now_t: List[np.ndarray] = []
     replan_t: List[bool] = []
+    alive_t: List[np.ndarray] = []
     comps: List[dict] = []
     commus: List[dict] = []
     infras: List[object] = []
@@ -244,6 +263,17 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         commus.append(commu)
         infras.append(infra_e)
 
+        # telemetry-dropout hold: the engine below keeps the NaN view
+        # (fresh constraints come up empty, KB mu-decays), but the
+        # LOWERING prices the last clean window's profiles — the same
+        # estimator direct path the eager tick's _held_output applies
+        app_low, comp_low, commu_low = app_e, comp, commu
+        if faults is not None and workload.stale(t, window):
+            monf = workload.lowering_monitoring(t, window)
+            app_low = estimator.enrich(app, monf)
+            comp_low = estimator.computation_profiles(monf)
+            commu_low = estimator.communication_profiles(monf)
+
         # -- constraint engine: refresh + survivors on the staged cache --
         skey = eng._structural_key(app_e, infra_e, commu)
         if k == 0:
@@ -260,7 +290,7 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         else:
             if skey != scache.skey:
                 raise _Fallback(
-                    "engine structural key drifted mid-trace",
+                    FallbackReason.ENGINE_KEY_DRIFT,
                     tick=t,
                     detail=f"structural key {_skey_digest(scache.skey)} "
                            f"-> {_skey_digest(skey)}")
@@ -311,8 +341,8 @@ def _stage(runtime, start: int, T: int) -> _Staged:
                       scache.cmax, scache.mean_ci, scache.evals))
 
         # -- lowering tiers against a LOCAL cache mirror -----------------
-        out = GeneratorOutput(constraints=(), app=app_e, infra=infra_e,
-                              computation=comp, communication=commu)
+        out = GeneratorOutput(constraints=(), app=app_low, infra=infra_e,
+                              computation=comp_low, communication=commu_low)
         key = ("auto", PlacementProblem.cache_key(out))
         if lcache is not None and lcache[0] == key:
             low = lcache[2]
@@ -323,10 +353,11 @@ def _stage(runtime, start: int, T: int) -> _Staged:
             if lcache is not None and skey_l is not None \
                     and lcache[1] == skey_l:
                 low = substitute_profiles(
-                    lcache[2], app_e, infra_e, comp, commu)
+                    lcache[2], app_low, infra_e, comp_low, commu_low)
                 path = "delta"
             else:
-                low = lower(app_e, infra_e, comp, commu, backend="auto")
+                low = lower(app_low, infra_e, comp_low, commu_low,
+                            backend="auto")
                 path = "full"
             lcache = (key, skey_l, low)
         paths.append(path)
@@ -336,7 +367,7 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         if k == 0:
             S, F, N = low.S, low.F, low.N
             if S == 0 or N == 0:
-                raise _Fallback("degenerate problem shape (S or N is 0)")
+                raise _Fallback(FallbackReason.DEGENERATE_SHAPE)
             kind = low.comm.kind
             st.kind, st.S, st.F, st.N = kind, S, F, N
             struct0 = (kind, low.service_ids, low.node_ids,
@@ -358,8 +389,8 @@ def _stage(runtime, start: int, T: int) -> _Staged:
                 try:
                     p0, f0, n0 = assignment_arrays(low, runtime.current)
                 except (KeyError, ValueError) as exc:
-                    raise _Fallback(
-                        f"current assignment is stale ({exc})")
+                    raise _Fallback(FallbackReason.STALE_ASSIGNMENT,
+                                    detail=str(exc))
                 has0 = True
             else:
                 p0 = np.zeros(S, bool)
@@ -371,22 +402,21 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         else:
             if (low.comm.kind, low.service_ids, low.node_ids,
                     low.flavour_names) != struct0:
-                raise _Fallback("lowering structure drifted mid-trace",
+                raise _Fallback(FallbackReason.LOWERING_STRUCTURE_DRIFT,
                                 tick=t)
             for name, arr in stat.items():
                 if not np.array_equal(getattr(low, name), arr):
-                    raise _Fallback(
-                        f"lowered tensor {name!r} drifted mid-trace",
-                        tick=t, detail=name)
+                    raise _Fallback(FallbackReason.LOWERED_TENSOR_DRIFT,
+                                    tick=t, detail=name)
             if kind == "dense":
                 if not np.array_equal(low.comm.has_link, has_link0):
-                    raise _Fallback("dense link mask drifted mid-trace",
+                    raise _Fallback(FallbackReason.DENSE_LINK_DRIFT,
                                     tick=t)
             else:
                 if not (np.array_equal(low.comm.src, sp0[0])
                         and np.array_equal(low.comm.fidx, sp0[1])
                         and np.array_equal(low.comm.dst, sp0[2])):
-                    raise _Fallback("sparse edge set drifted mid-trace",
+                    raise _Fallback(FallbackReason.SPARSE_EDGE_DRIFT,
                                     tick=t)
         ek_t.append(np.asarray(
             low.comm.K[de] if kind == "dense" else low.comm.k, float))
@@ -467,12 +497,19 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         ci_now_t.append(np.asarray(
             carbon.now(node_regions, t), float))
         replan_t.append(t % max(cfg.replan_every, 1) == 0)
+        # node liveness rides the scan as a [T, N] mask (all-ones without
+        # a schedule — the program shape is fault-agnostic); dead nodes
+        # are masked from static feasibility in-step, exactly what the
+        # eager tick's mask_unavailable(avail_cap := -1) achieves
+        alive_t.append(np.asarray(faults.alive_at(t), bool)
+                       if faults is not None else np.ones(low.N, bool))
 
     st.scache, st.snaps, st.ts_store = scache, snaps, ts_store
     st.lows, st.lcache = lows, lcache
     st.paths, st.path_counts = paths, path_counts
     st.dirty, st.ncons = dirty, ncons
     st.ci_now = np.stack(ci_now_t)
+    st.alive = np.stack(alive_t)
     st.comps, st.commus, st.infras = comps, commus, infras
     st.B = ci_b_t[0].shape[0]
 
@@ -490,6 +527,7 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         np.stack(ci_mean_t),
         np.stack(ek_t),
         st.ci_now,
+        st.alive,
     )
     low0 = lows[0]
     comm_static = ((de[0].astype(np.int64), de[1].astype(np.int64),
@@ -510,6 +548,7 @@ def _stage(runtime, start: int, T: int) -> _Staged:
         np.float64(cfg.migration_g), np.float64(cfg.restart_g),
         np.int64(scfg.local_search_rounds * max(1, st.S)),
         np.asarray(bool(cfg.warm_start)),
+        np.asarray(bool(cfg.emergency_replan)),
     )
     return st
 
@@ -702,7 +741,8 @@ def _scan_fn(kind: str, with_metrics: bool = False):
     def fused(carry0, xs, consts):
         (stat_feas, cpu_req, ram_req, cpu_cap, ram_cap, must, cost,
          comm_static, money_w, pref_w, emission_w, green_pen, hyst_eff,
-         horizon_h, migration_g, restart_g, max_steps, warm_en) = consts
+         horizon_h, migration_g, restart_g, max_steps, warm_en,
+         emerg_en) = consts
         S, F, N = stat_feas.shape
         s_ix = jnp.arange(S)
         zi = jnp.asarray(0, i64)
@@ -710,7 +750,11 @@ def _scan_fn(kind: str, with_metrics: bool = False):
 
         def step(carry, x):
             (replan, p_idx, p_val, a_idx, a_val, E, order,
-             ci_b, ci_mean_b, ek, ci_now) = x
+             ci_b, ci_mean_b, ek, ci_now, alive) = x
+            # dead nodes leave static feasibility exactly as the eager
+            # mask_unavailable does (avail_cap = -1 kills every (s, f)
+            # column on a down node, nothing else changes)
+            stat_feas_t = stat_feas & alive[None, None, :]
             if kind == "dense":
                 de_s, de_f, de_d, has_link = comm_static
                 K = jnp.zeros((S, F, S), f64).at[de_s, de_f, de_d].set(ek)
@@ -749,7 +793,7 @@ def _scan_fn(kind: str, with_metrics: bool = False):
                 # tick's masks/capacities (all-or-nothing, like
                 # _warm_start_state's reject-and-rebuild)
                 feas_w = jnp.where(
-                    placed_c, stat_feas[s_ix, fcur_c, ncur_c], True).all()
+                    placed_c, stat_feas_t[s_ix, fcur_c, ncur_c], True).all()
                 cpu_l = jnp.zeros(N, f64).at[ncur_c].add(
                     jnp.where(placed_c, cpu_req[s_ix, fcur_c], 0.0))
                 ram_l = jnp.zeros(N, f64).at[ncur_c].add(
@@ -769,7 +813,7 @@ def _scan_fn(kind: str, with_metrics: bool = False):
                     a_val).reshape(S, S)
                 placed_b, fcur_b, ncur_b, _, infeas_b, _ = vplan(
                     ci_b, ci_mean_b, E, order, w_placed, w_f, w_n,
-                    w_cpu, w_ram, *comm_args, P, A, stat_feas, cpu_req,
+                    w_cpu, w_ram, *comm_args, P, A, stat_feas_t, cpu_req,
                     ram_req, cpu_cap, ram_cap, must, cost, money_w,
                     pref_w, emission_w, green_pen, max_steps)
                 em = expected_of(placed_b, fcur_b, ncur_b)     # [B, B]
@@ -796,7 +840,11 @@ def _scan_fn(kind: str, with_metrics: bool = False):
                 saving = (cur_expected - expected[best]) * horizon_h
                 adopt = feasible & ~has_c
                 consider = feasible & has_c & ~same
-                do_switch = consider & (saving > cost_sw + hyst_eff)
+                # emergency = the eager gate's force flag: evacuating a
+                # dead node must never lose to flap damping, but the
+                # migration/restart fees are still counted and billed
+                do_switch = consider & ((saving > cost_sw + hyst_eff)
+                                        | emergency)
                 take = adopt | do_switch
                 new_p = jnp.where(take, cand_p, placed_c)
                 new_f = jnp.where(take, jnp.where(cand_p, cand_f, zi),
@@ -818,7 +866,16 @@ def _scan_fn(kind: str, with_metrics: bool = False):
 
             core = carry[:4] if with_metrics else carry
             placed_c, fcur_c, ncur_c, has_c = core
-            do_plan = replan | ~has_c
+            # fault eviction BEFORE planning: a dead node takes its
+            # services down with it — the incumbent shrinks now (so no
+            # branch bills a dead node) and, when enabled, re-placement
+            # is an emergency that bypasses the hysteresis gate
+            node_up = alive[ncur_c]
+            n_evicted = (placed_c & ~node_up).sum(dtype=i64)
+            placed_c = placed_c & node_up
+            emergency = emerg_en & has_c & (n_evicted > 0)
+            core = (placed_c, fcur_c, ncur_c, has_c)
+            do_plan = replan | ~has_c | emergency
             carry2, (switched, migs, rsts, mgc, sav, wrj) = lax.cond(
                 do_plan, plan_branch, skip_branch, core)
             placed2, f2, n2, has2 = carry2
@@ -831,7 +888,7 @@ def _scan_fn(kind: str, with_metrics: bool = False):
             em_tick = jnp.where(has2 & placed2.any(),
                                 comp_n + commE_n * ci_now.mean(), zf)
             ys = (do_plan, wrj, switched, migs, rsts, mgc, sav,
-                  placed2, f2, n2, has2, em_tick)
+                  placed2, f2, n2, has2, em_tick, n_evicted, emergency)
             if with_metrics:
                 # [M] per-tick metric row (column order: SCAN_METRICS) —
                 # accumulated in-carry AND stacked per tick, all inside
@@ -861,10 +918,11 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
 
     pipe = runtime.pipeline
     eng = st.eng
+    cfg = runtime.config
     T = st.T
     (did_plan, warm_rej, switched, migs, rsts, mig_g, sav,
-     placed_y, f_y, n_y, has_y, _em_y) = ys[:12]
-    metrics = ys[12] if len(ys) > 12 else None
+     placed_y, f_y, n_y, has_y, _em_y, evicted_y, emerg_y) = ys[:14]
+    metrics = ys[14] if len(ys) > 14 else None
 
     sig = ("megaloop", st.kind, T, st.B, st.S, st.F, st.N,
            st.xs[9].shape[1], metrics is not None)
@@ -872,6 +930,7 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
 
     per_tick = (stage_s + scan_s) / T
     records: List = []
+    viols_t: List[list] = []
     for k in range(T):
         if bool(has_y[k]):
             em = lowered_emissions(
@@ -879,6 +938,18 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
                 n_y[k].astype(np.int64), ci=st.ci_now[k])
         else:
             em = 0.0
+        # post-plan invariants, same gate as the eager tick: every
+        # committed assignment sits on live nodes within capacity
+        viols: list = []
+        if cfg.validate_placements and bool(has_y[k]) \
+                and bool(np.any(placed_y[k])):
+            viols = check_placement(
+                st.lows[k], placed_y[k], f_y[k].astype(np.int64),
+                n_y[k].astype(np.int64),
+                alive=st.alive[k] if cfg.faults is not None else None,
+                t=start + k)
+            runtime.placement_violations.extend(viols)
+        viols_t.append(viols)
         records.append(TickRecord(
             t=start + k,
             emissions_g=float(em),
@@ -897,6 +968,9 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
             constraint_s=stage_s / T,
             dirty_candidates=int(st.dirty[k]),
             tick_fused_s=per_tick,
+            evicted=int(evicted_y[k]),
+            emergency=bool(emerg_y[k]),
+            violations=len(viols),
         ))
 
     # KB: replay the profile sections tick-by-tick, then rebuild the
@@ -935,7 +1009,7 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
 
     if obs is not None:
         _commit_obs(runtime, st, carry_out, ys, start, stage_s, scan_s,
-                    obs, records)
+                    obs, records, viols_t)
 
     placed_T, f_T, n_T, has_T = carry_out[:4]
     low0 = st.lows[0]
@@ -957,7 +1031,8 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
 
 
 def _commit_obs(runtime, st: _Staged, carry_out, ys, start: int,
-                stage_s: float, scan_s: float, obs, records) -> None:
+                stage_s: float, scan_s: float, obs, records,
+                viols_t) -> None:
     """Post-scan observability commit: fold the in-scan metric tensor
     into the run's registry and replay the trace into the emissions
     ledger.  All reductions here mirror the eager tick's accounting
@@ -967,9 +1042,9 @@ def _commit_obs(runtime, st: _Staged, carry_out, ys, start: int,
 
     reg = obs.registry
     T = st.T
-    metrics = ys[12] if len(ys) > 12 else None
+    metrics = ys[14] if len(ys) > 14 else None
     (did_plan, warm_rej, switched, migs, rsts, mig_g, sav,
-     placed_y, f_y, n_y, has_y, _em_y) = ys[:12]
+     placed_y, f_y, n_y, has_y, _em_y, evicted_y, emerg_y) = ys[:14]
 
     reg.inc("runtime.ticks", T)
     if metrics is not None:
@@ -1003,8 +1078,15 @@ def _commit_obs(runtime, st: _Staged, carry_out, ys, start: int,
     f_prev = np.asarray(st.carry0[1], np.int64)
     n_prev = np.asarray(st.carry0[2], np.int64)
     has_prev = bool(st.carry0[3])
+    faults = runtime.config.faults
     for k in range(T):
         low = st.lows[k]
+        if faults is not None:
+            # eviction happened before the gate: diff against the SHRUNK
+            # incumbent (leaving a dead node is not a billed move),
+            # exactly like the eager tick whose `current` lost the
+            # stranded services before hysteresis_gate ran
+            p_prev = p_prev & st.alive[k][n_prev]
         p2 = np.asarray(placed_y[k], bool)
         fk = np.asarray(f_y[k], np.int64)
         nk = np.asarray(n_y[k], np.int64)
@@ -1045,6 +1127,10 @@ def _commit_obs(runtime, st: _Staged, carry_out, ys, start: int,
             zones=zones, moved=moved, flapped=flapped,
             migration_fee_g=mig_fee, restart_fee_g=restart_fee,
             mig_cells=tuple(cells))
+        if faults is not None:
+            runtime._record_fault_events(
+                obs, start + k, int(evicted_y[k]), bool(emerg_y[k]),
+                viols_t[k])
         p_prev, f_prev, n_prev = p2, fk, nk
         has_prev = hask or has_prev
 
@@ -1260,13 +1346,15 @@ def monte_carlo_emissions(runtime, start: int, ticks: int, ci_scales):
     scales = np.asarray(ci_scales, float).reshape(-1)
     M = scales.size
     (replan, p_i, p_v, a_i, a_v, E, order,
-     ci_b, ci_mean, ek, ci_now) = st.xs
+     ci_b, ci_mean, ek, ci_now, alive) = st.xs
     xs_m = (replan, p_i, p_v, a_i, a_v, E, order,
             ci_b[None] * scales[:, None, None, None],
             ci_mean[None] * scales[:, None, None],
             ek,
-            ci_now[None] * scales[:, None, None])
-    axes = (None, None, None, None, None, None, None, 0, 0, None, 0)
+            ci_now[None] * scales[:, None, None],
+            alive)
+    axes = (None, None, None, None, None, None, None, 0, 0, None, 0,
+            None)
     fn = _scan_fn(st.kind)
     vfn = jax.vmap(fn, in_axes=(None, axes, None))
     with enable_x64():

@@ -321,16 +321,32 @@ class CarbonTrace:
         jitter, modelling forecast uncertainty.  Deterministic given
         ``(seed, t)`` so adaptive-loop runs are reproducible.
         """
-        rng = np.random.default_rng((self.seed, 7919, t))
         fc = self.forecast_signal(t, horizon)
         # one forecast per REGION, broadcast to nodes (many nodes share a
         # region; this sits on the per-tick replanning hot path)
         per_region = {r: float(np.mean(fc(r))) for r in set(node_regions)}
         base = np.array([per_region[r] for r in node_regions])
-        out = np.empty((B, len(node_regions)))
+        return self.perturb_scenarios(base, t, B)
+
+    def perturb_scenarios(
+        self,
+        base: np.ndarray,
+        t: int,
+        B: int = 8,
+        sigma=0.10,
+    ) -> np.ndarray:
+        """``[B, N]`` ensemble around an arbitrary ``[N]`` base forecast:
+        branch 0 is the base itself, branches 1.. apply multiplicative
+        lognormal noise with the given ``sigma`` — a scalar, or a per-node
+        array (degraded-mode planning widens the sigma of nodes whose
+        carbon feed has gone stale).  Same ``(seed, 7919, t)`` substream
+        as :meth:`scenario_matrix`, which delegates here."""
+        base = np.asarray(base, dtype=float)
+        rng = np.random.default_rng((self.seed, 7919, t))
+        out = np.empty((B, len(base)))
         out[0] = base
         for b in range(1, B):
-            scale = rng.lognormal(mean=0.0, sigma=0.10, size=len(base))
+            scale = rng.lognormal(mean=0.0, sigma=sigma, size=len(base))
             out[b] = np.maximum(base * scale, _CI_FLOOR)
         return out
 

@@ -521,6 +521,36 @@ def pad_lowering(
     )
 
 
+def mask_unavailable(
+    low: LoweredProblem,
+    alive: np.ndarray,
+    derate: Optional[np.ndarray] = None,
+) -> LoweredProblem:
+    """Fault-mask a lowering: dead nodes are removed from the feasible
+    set via the EXISTING availability path — ``avail_cap`` is forced
+    below any requirement (requirements are non-negative, so ``-1.0``
+    fails ``avail_cap >= avail_req`` for every flavour slot) and the
+    static feasibility mask zeroes every (s, f, dead-node) cell.
+    Optional ``derate`` scales per-node cpu/ram capacity (brownouts).
+    Returns ``low`` unchanged when nothing is masked."""
+    alive = np.asarray(alive, dtype=bool)
+    if alive.shape != (low.N,):
+        raise ValueError(
+            f"alive mask must be [{low.N}], got {alive.shape}")
+    repl = {}
+    if not alive.all():
+        repl["avail_cap"] = np.where(
+            alive, np.asarray(low.avail_cap, dtype=float), -1.0)
+    if derate is not None:
+        d = np.asarray(derate, dtype=float)
+        if d.shape != (low.N,):
+            raise ValueError(
+                f"derate must be [{low.N}], got {d.shape}")
+        repl["cpu_cap"] = np.asarray(low.cpu_cap, dtype=float) * d
+        repl["ram_cap"] = np.asarray(low.ram_cap, dtype=float) * d
+    return replace(low, **repl) if repl else low
+
+
 @dataclass
 class ScenarioBatch:
     """B what-if branches over one :class:`LoweredProblem`.

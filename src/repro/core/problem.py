@@ -362,6 +362,12 @@ class PlacementProblem:
     ) -> "PlacementProblem":
         return dataclasses.replace(self, constraints=tuple(constraints))
 
+    def with_lowering(self, lowering: LoweredProblem) -> "PlacementProblem":
+        """This problem over a substituted lowering — e.g. a fault-masked
+        availability vector (``repro.core.lowering.mask_unavailable``).
+        Constraints/scenarios/warm-start carry over untouched."""
+        return dataclasses.replace(self, lowering=lowering)
+
     # -- identity -----------------------------------------------------------
 
     @property

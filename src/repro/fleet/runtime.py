@@ -34,7 +34,8 @@ from repro.continuum.loop import (
 )
 from repro.continuum.traces import CarbonTrace, WorkloadTrace
 from repro.continuum.whatif import assignment_arrays, plan_assignment
-from repro.core.lowering import lowered_emissions
+from repro.core.lowering import lowered_emissions, mask_unavailable
+from repro.faults import PlacementViolation, check_placement
 from repro.core.problem import BucketSpec
 from repro.core.scheduler import (
     COMPILE_CACHE,
@@ -152,12 +153,17 @@ class FleetRuntime:
         # its pipeline owns the profiles/KB/lowering caches, its
         # ``current`` the incumbent assignment, and its hysteresis_gate
         # the switch rule — the fleet runtime only replaces the REPLAN
-        # step with the batched plan_many call.
+        # step with the batched plan_many call.  With a fault schedule
+        # each per-app runtime also carries the degraded carbon/workload
+        # views, which the fleet tick reads through.
         self._runtimes: Dict[str, ContinuumRuntime] = {
             fa.name: ContinuumRuntime(
                 app=fa.app, infra=self.infra, carbon=self.carbon,
                 workload=fa.workload, config=self.config)
             for fa in self.apps}
+        # post-plan invariant violations across all tenants (the
+        # capacity check runs on the SUMMED multi-tenant loads)
+        self.placement_violations: List[PlacementViolation] = []
 
     def runtime(self, name: str) -> ContinuumRuntime:
         return self._runtimes[name]
@@ -169,18 +175,53 @@ class FleetRuntime:
         misses0 = COMPILE_CACHE.misses
 
         # 1+2. per-tenant ingestion + constraint pipeline -> one problem
-        # per app, warm-started from its incumbent
+        # per app, warm-started from its incumbent.  With a fault
+        # schedule the ingestion goes through each runtime's degraded
+        # views, dead/derated nodes are masked out of every tenant's
+        # lowering, and stranded services are evicted (re-placement is
+        # an emergency that bypasses the per-app hysteresis gate).
+        faults = cfg.faults
+        alive = faults.alive_at(t) if faults is not None else None
+        derate = faults.derate_at(t) if faults is not None else None
         problems = []
         outs = []
+        evicted: Dict[str, int] = {}
+        emergency: Dict[str, bool] = {}
         for fa in self.apps:
             rt = self._runtimes[fa.name]
-            rt.pipeline.gatherer.signal = self.carbon.history_signal(t)
-            rt.pipeline.gatherer.forecast = self.carbon.forecast_signal(
+            rt.pipeline.gatherer.signal = \
+                rt._carbon_view.history_signal(t)
+            rt.pipeline.gatherer.forecast = rt._carbon_view.forecast_signal(
                 t, cfg.horizon_h)
-            mon = fa.workload.monitoring(t)
+            mon = rt._workload_view.monitoring(t)
             out = rt.pipeline.run(fa.app, self.infra, mon,
                                   use_kb=cfg.use_kb)
+            if faults is not None \
+                    and rt._workload_view.stale(t, cfg.telemetry_window):
+                out = rt._held_output(out, t)
             problem = rt.pipeline.problem_for(out)
+            evicted[fa.name] = 0
+            emergency[fa.name] = False
+            if faults is not None:
+                low = problem.lowering
+                if not alive.all() or derate is not None:
+                    low = mask_unavailable(low, alive, derate=derate)
+                    problem = problem.with_lowering(low)
+                if rt.current:
+                    nidx = low.node_index()
+                    stranded = [
+                        sid for sid, (_fl, nid) in rt.current.items()
+                        if not alive[nidx[nid]]]
+                    for sid in stranded:
+                        del rt.current[sid]
+                    if stranded:
+                        evicted[fa.name] = len(stranded)
+                        emergency[fa.name] = cfg.emergency_replan
+                if (cfg.emergency_replan and not emergency[fa.name]
+                        and derate is not None and rt.current):
+                    pl, fc, nc = assignment_arrays(low, rt.current)
+                    if check_placement(low, pl, fc, nc, alive=alive, t=t):
+                        emergency[fa.name] = True
             if cfg.warm_start and rt.current is not None:
                 problem = problem.with_warm_start(rt.current)
             problems.append(problem)
@@ -198,10 +239,21 @@ class FleetRuntime:
         replan_s = time.perf_counter() - t_plan0
         ci_now = self.carbon.now(self._node_regions, t)
 
-        # 4+5. per-tenant hysteresis gate + accounting under the true CI
+        # 4+5. per-tenant hysteresis gate + accounting under the true CI.
+        # An emergency anywhere forces the WHOLE fleet's coupled plan:
+        # plan_many's candidates are only jointly capacity-feasible as a
+        # set, so letting one tenant's flap damping hold its incumbent
+        # while another evacuates onto the coupled plan could overcommit
+        # a node.  Atomic adoption keeps the invariant; every forced
+        # move is still billed in full.
+        fleet_force = any(emergency.values())
+        if fleet_force:
+            for fa in self.apps:
+                emergency[fa.name] = True
         records: Dict[str, TickRecord] = {}
         cpu_load = np.zeros(len(self._node_regions))
         ram_load = np.zeros(len(self._node_regions))
+        viols_before = len(self.placement_violations)
         for i, fa in enumerate(self.apps):
             rt = self._runtimes[fa.name]
             low = problems[i].lowering
@@ -231,25 +283,37 @@ class FleetRuntime:
                 initial = rt.current is None
                 (switched, migrations, restarts, migration_g,
                  mig_cells) = rt.hysteresis_gate(
-                    cand, saving, want_cells=obs is not None)
+                    cand, saving, want_cells=obs is not None,
+                    force=emergency[fa.name])
                 if switched and not initial:
                     charged_moved = migrations
                     charged_flapped = restarts
             emissions = 0.0
             placed = fcur = ncur = None
+            viols: List[PlacementViolation] = []
             if rt.current:
                 placed, fcur, ncur = assignment_arrays(low, rt.current)
                 emissions = lowered_emissions(
                     low, placed, fcur, ncur, ci=ci_now)
                 accumulate_loads(low, placed, fcur, ncur,
                                  cpu_load, ram_load)
+                if cfg.validate_placements:
+                    # liveness per tenant here; capacity runs once on
+                    # the SUMMED loads after every tenant is accounted
+                    viols = check_placement(
+                        low, placed, fcur, ncur,
+                        alive=alive if faults is not None else None,
+                        t=t, cpu_load=np.zeros(low.N),
+                        ram_load=np.zeros(low.N))
+                    self.placement_violations.extend(viols)
             records[fa.name] = TickRecord(
                 t=t, emissions_g=emissions, migration_g=migration_g,
                 migrations=migrations, replanned=True, switched=switched,
                 expected_saving_g=expected_saving,
                 n_constraints=len(outs[i].constraints),
                 warm_start_rejected=warm_rejected, restarts=restarts,
-                replan_s=replan_s)
+                replan_s=replan_s, evicted=evicted[fa.name],
+                emergency=emergency[fa.name], violations=len(viols))
             if obs is not None:
                 obs.ledger.record(
                     t, low, placed, fcur, ncur, ci_now,
@@ -261,6 +325,13 @@ class FleetRuntime:
 
         if problems:
             ref = problems[0].lowering
+            if cfg.validate_placements:
+                # shared-capacity invariant on the SUMMED tenant loads,
+                # against the (possibly derated) capacity tensors
+                zs = np.zeros(ref.S, np.int64)
+                self.placement_violations.extend(check_placement(
+                    ref, np.zeros(ref.S, bool), zs, zs, t=t,
+                    cpu_load=cpu_load, ram_load=ram_load))
             capacity = CapacityReport(
                 node_ids=tuple(n.node_id for n in self.infra.nodes),
                 cpu_load=cpu_load, ram_load=ram_load,
@@ -268,6 +339,11 @@ class FleetRuntime:
                 ram_cap=np.asarray(ref.ram_cap, dtype=float))
         else:
             capacity = empty_capacity_report()
+        if obs is not None and faults is not None and self.apps:
+            # one fault-event record per tick for the whole fleet
+            self._runtimes[self.apps[0].name]._record_fault_events(
+                obs, t, sum(evicted.values()), any(emergency.values()),
+                self.placement_violations[viols_before:])
         return FleetTickRecord(
             t=t, records=records, capacity=capacity,
             planned_capacity=fresult.capacity,

@@ -33,7 +33,13 @@ class RestartManager:
     max_failures: int = 3
     keep: int = 3
 
+    # ``failures`` counts CONSECUTIVE failures since the last successful
+    # checkpoint and is what ``max_failures`` bounds: a long healthy run
+    # peppered with occasional transient faults must not accumulate
+    # toward the cap the way a systematically-crashing step does.
+    # ``total_failures`` keeps the lifetime count for reporting.
     failures: int = 0
+    total_failures: int = 0
 
     def resume_or_init(self, init_fn: Callable[[], Any]) -> Tuple[Any, int]:
         """Returns (state, start_step): restores the latest complete
@@ -64,8 +70,12 @@ class RestartManager:
                     on_step(step, state)
                 if step % self.checkpoint_every == 0:
                     store.save(self.directory, step, state, keep=self.keep)
+                    # a successful checkpointed step proves the loop is
+                    # healthy again: the transient-failure budget resets
+                    self.failures = 0
             except Exception:
                 self.failures += 1
+                self.total_failures += 1
                 if self.failures > self.max_failures:
                     raise
                 ck = store.latest_step(self.directory)

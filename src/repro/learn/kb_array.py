@@ -31,6 +31,7 @@ planner-side ``PlacementProblem`` registration.
 """
 from __future__ import annotations
 
+import math
 from collections.abc import Mapping as _MappingABC
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
@@ -287,11 +288,23 @@ class ArrayKB:
     def update_profiles(self, computation, communication, nodes,
                         iteration: int) -> None:
         """Eq. 7-9: ingest this tick's energy/communication profiles and
-        node carbon intensities (vectorized ``Stats`` updates)."""
-        self.sk.update(computation.items(), iteration)
-        self.ik.update(communication.items(), iteration)
+        node carbon intensities (vectorized ``Stats`` updates).
+
+        Non-finite values are skipped: a telemetry dropout delivers
+        NaN-valued samples with real identities (so structural keys stay
+        stable), and those must hold the stored Stats rather than poison
+        their means — both the eager engine and the scanned KB replay
+        ingest through here, so the filter keeps the two paths in
+        lockstep."""
+        self.sk.update(
+            ((k, v) for k, v in computation.items() if math.isfinite(v)),
+            iteration)
+        self.ik.update(
+            ((k, v) for k, v in communication.items() if math.isfinite(v)),
+            iteration)
         self.nk.update(
-            ((n.node_id, n.carbon) for n in nodes if n.carbon is not None),
+            ((n.node_id, n.carbon) for n in nodes
+             if n.carbon is not None and math.isfinite(n.carbon)),
             iteration)
 
     def enrich(self, fresh_keys: Sequence[Tuple],

@@ -184,10 +184,21 @@ class MetricsServer:
 
     Serves the text exposition of :func:`prometheus_text` at ``/metrics``
     (and ``/``) from a daemon thread; the registry is read live on every
-    scrape.  Stop with :meth:`close` (also a context manager)."""
+    scrape.  Stop with :meth:`close` (idempotent, also a context
+    manager).
+
+    Binding a FIXED port retries with exponential backoff while the
+    address is in use (``retries`` attempts, starting at ``backoff_s``
+    and doubling) — a restarting scraper endpoint routinely races the
+    previous process's socket through TIME_WAIT/shutdown.  Any other
+    bind error, or exhausting the budget, raises immediately.
+    Ephemeral binding (``port=0``) never collides and never retries."""
 
     def __init__(self, registry: MetricsRegistry, port: int = 0,
-                 host: str = "127.0.0.1") -> None:
+                 host: str = "127.0.0.1", retries: int = 5,
+                 backoff_s: float = 0.05) -> None:
+        import errno
+        import time as _time
         from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
         import threading
 
@@ -211,7 +222,18 @@ class MetricsServer:
                 pass
 
         self.registry = registry
-        self._httpd = ThreadingHTTPServer((host, port), Handler)
+        self._closed = False
+        attempt = 0
+        while True:
+            try:
+                self._httpd = ThreadingHTTPServer((host, port), Handler)
+                break
+            except OSError as exc:
+                if (exc.errno != errno.EADDRINUSE or port == 0
+                        or attempt >= retries):
+                    raise
+                _time.sleep(backoff_s * (2 ** attempt))
+                attempt += 1
         self._thread = threading.Thread(
             target=self._httpd.serve_forever, name="metrics-server",
             daemon=True)
@@ -228,6 +250,12 @@ class MetricsServer:
         return f"http://{host}:{self.port}/metrics"
 
     def close(self) -> None:
+        """Graceful shutdown: stop serving, release the socket, join the
+        thread.  Safe to call more than once (context-manager exit after
+        an explicit close is a no-op)."""
+        if self._closed:
+            return
+        self._closed = True
         self._httpd.shutdown()
         self._httpd.server_close()
         self._thread.join(timeout=5)
@@ -240,7 +268,8 @@ class MetricsServer:
 
 
 def serve_metrics(registry: MetricsRegistry, port: int = 0,
-                  host: str = "127.0.0.1") -> MetricsServer:
+                  host: str = "127.0.0.1", retries: int = 5,
+                  backoff_s: float = 0.05) -> MetricsServer:
     """Start a Prometheus scrape endpoint for ``registry``.
 
         server = serve_metrics(REGISTRY, port=9100)
@@ -248,10 +277,13 @@ def serve_metrics(registry: MetricsRegistry, port: int = 0,
         server.close()
 
     ``port=0`` binds an ephemeral port (read it back from
-    ``server.port``).  The server runs on a daemon thread and reads the
-    registry live, so metrics written after startup appear on the next
-    scrape."""
-    return MetricsServer(registry, port=port, host=host)
+    ``server.port``).  A fixed port retries an in-use bind ``retries``
+    times with exponential backoff starting at ``backoff_s`` (see
+    :class:`MetricsServer`).  The server runs on a daemon thread and
+    reads the registry live, so metrics written after startup appear on
+    the next scrape."""
+    return MetricsServer(registry, port=port, host=host, retries=retries,
+                         backoff_s=backoff_s)
 
 
 def render_report(

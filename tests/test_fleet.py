@@ -21,6 +21,8 @@ import json
 import os
 import subprocess
 import sys
+import threading
+import time
 import urllib.request
 
 import numpy as np
@@ -349,6 +351,50 @@ def test_serve_metrics_scrapes_live_registry():
         assert "repro_fleet_test_counter_total 4\n" in body
     with pytest.raises(OSError):
         urllib.request.urlopen(url, timeout=1)
+
+
+def test_serve_metrics_fixed_port_retries_until_free():
+    """A fixed-port bind that collides with a live server must retry
+    with backoff and succeed once the incumbent releases the port —
+    restart-under-supervisor semantics, not a crash."""
+    reg = MetricsRegistry()
+    reg.inc("fleet.test.counter", 7.0)
+    first = serve_metrics(reg, port=0)
+    port = first.port
+
+    closer = threading.Timer(0.15, first.close)
+    closer.start()
+    try:
+        # starts while `first` still holds the port: the first attempts
+        # hit EADDRINUSE, a later one lands after the timer fires
+        second = serve_metrics(reg, port=port, retries=10, backoff_s=0.02)
+    finally:
+        closer.join()
+    try:
+        assert second.port == port
+        url = f"http://127.0.0.1:{port}/metrics"
+        body = urllib.request.urlopen(url, timeout=5).read().decode()
+        assert "repro_fleet_test_counter_total 7\n" in body
+    finally:
+        second.close()
+
+
+def test_serve_metrics_fixed_port_exhausts_retries():
+    reg = MetricsRegistry()
+    with serve_metrics(reg, port=0) as first:
+        t0 = time.perf_counter()
+        with pytest.raises(OSError):
+            serve_metrics(reg, port=first.port, retries=2,
+                          backoff_s=0.01)
+        # it actually backed off (0.01 + 0.02) before giving up
+        assert time.perf_counter() - t0 >= 0.03
+
+
+def test_metrics_server_close_is_idempotent():
+    reg = MetricsRegistry()
+    server = serve_metrics(reg, port=0)
+    server.close()
+    server.close()  # second close is a no-op, not an error
 
 
 # ---------------------------------------------------------------------------

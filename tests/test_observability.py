@@ -241,7 +241,8 @@ def test_scanned_ledger_bit_parity_matches_eager():
 
 def test_scanned_disabled_obs_adds_zero_carry_arrays(monkeypatch):
     """Without a registry the fused program must carry exactly the four
-    decision arrays and 12 ys — observability must cost the scanned path
+    decision arrays and 14 ys (12 decision/accounting columns plus the
+    fault-eviction pair) — observability must cost the scanned path
     literally nothing when off."""
     seen = {}
     orig = megaloop._commit
@@ -255,10 +256,10 @@ def test_scanned_disabled_obs_adds_zero_carry_arrays(monkeypatch):
     app, infra = _scenario(n_services=8)
     rt_off = _runtime(app, infra, 8)
     rt_off.run_scanned(START, 8)
-    assert (seen["carry"], seen["ys"]) == (4, 12)
+    assert (seen["carry"], seen["ys"]) == (4, 14)
     rt_on = _obs_runtime(app, infra, 8)
     rt_on.run_scanned(START, 8)
-    assert (seen["carry"], seen["ys"]) == (5, 13)
+    assert (seen["carry"], seen["ys"]) == (5, 15)
 
 
 def test_drift_fallback_records_event_and_keeps_parity():
