@@ -27,8 +27,21 @@ def load(path=DEFAULT_PATH):
     return list(out.values())
 
 
-def run(report=print, path=DEFAULT_PATH, multi_pod=False):
-    recs = [r for r in load(path) if r["multi_pod"] == multi_pod]
+def run(report=print, path=DEFAULT_PATH, multi_pod=False, tracer=None):
+    """Render the roofline table.  Pass a ``repro.obs.Tracer`` to wrap
+    the load + render in a ``roofline.table`` span (load time appears as
+    a ``roofline.load`` child), joinable with ``dryrun.cell`` spans from
+    the same tracer into one planner + launch-layer timeline."""
+    if tracer is None:
+        from repro.obs import Tracer
+        tracer = Tracer(enabled=False)
+    with tracer.span("roofline.table", multi_pod=multi_pod):
+        with tracer.span("roofline.load", path=str(path)):
+            recs = [r for r in load(path) if r["multi_pod"] == multi_pod]
+        return _render(recs, report, path, multi_pod)
+
+
+def _render(recs, report, path, multi_pod):
     if not recs:
         report(f"# no dry-run records at {path}; run repro.launch.dryrun first")
         return {"cells": 0}

@@ -56,7 +56,7 @@ from repro.core.scheduler import (
     SchedulerConfig,
 )
 from repro.core.types import Application, Infrastructure
-from repro.obs import Observability
+from repro.obs import Observability, Watchtower
 
 from .traces import CarbonTrace, WorkloadTrace
 from .whatif import (
@@ -199,6 +199,10 @@ class FallbackReason(str, Enum):
     # staged capacity tensors and must fall back loudly
     FAULT_CAPACITY_DERATE = \
         "capacity-derate faults change capacity tensors mid-trace"
+    # an ARMED watchtower feeds alerts back into planning (zone
+    # evacuations) — a data-dependent control flow the staged scan
+    # cannot express; observe-mode watchers ride the scan natively
+    WATCH_ARMED = "armed watchtower feedback needs the eager tick loop"
 
     def __str__(self) -> str:  # "FallbackReason.X" would leak into logs
         return self.value
@@ -335,6 +339,12 @@ class ContinuumRuntime:
     # uninstrumented cost: the eager tick pays a few perf_counter reads,
     # the fused scan carries zero extra arrays.
     obs: Optional[Observability] = field(default=None, repr=False)
+    # Green watchtower (repro.obs.watch): streaming anomaly detectors +
+    # SLO burn-rate evaluation over each committed tick.  None keeps the
+    # loop watch-free; in "observe" mode decisions are bit-identical
+    # with or without it (pure tap); in "arm" mode alerts can evacuate
+    # carbon zones through the fault/emergency machinery.
+    watch: Optional[Watchtower] = field(default=None, repr=False)
 
     current: Optional[Dict[str, Tuple[str, str]]] = None
     last_result: Optional[object] = field(default=None, repr=False)
@@ -474,9 +484,21 @@ class ContinuumRuntime:
         alive = None
         evicted = 0
         emergency = False
+        derate = None
+        fault_alive = None          # raw fault mask (pre watch feedback)
+        watch = self.watch
         if faults is not None:
-            alive = faults.alive_at(t)
+            fault_alive = faults.alive_at(t)
             derate = faults.derate_at(t)
+            alive = fault_alive
+        if watch is not None and watch.armed:
+            # armed watchtower feedback: zones flagged for evacuation are
+            # masked out exactly like dead fault nodes — stranded services
+            # are evicted and replaced through the emergency machinery
+            keep = watch.evacuation_mask(t, self._node_regions)
+            if keep is not None:
+                alive = keep if alive is None else (alive & keep)
+        if alive is not None:
             if not alive.all() or derate is not None:
                 low = mask_unavailable(low, alive, derate=derate)
                 problem = problem.with_lowering(low)
@@ -627,6 +649,22 @@ class ContinuumRuntime:
                 migration_fee_g=cfg.migration_g,
                 restart_fee_g=cfg.restart_g,
                 mig_cells=mig_cells)
+        if watch is not None:
+            if ci_now is None:
+                ci_now = self.carbon.now(self._node_regions, t)
+            dark: Tuple[str, ...] = ()
+            stale = False
+            if faults is not None:
+                dmask = faults.dark_at(t)
+                dark = tuple(
+                    z for z, d in zip(faults.zones, dmask) if d)
+                stale = bool(self._workload_view.stale(
+                    t, cfg.telemetry_window))
+            watch.observe_tick(
+                t, rec, low, placed, fcur, ci_now,
+                alive=fault_alive, dark_zones=dark,
+                telemetry_stale=stale, node_zones=self._node_regions,
+                registry=obs.registry if obs is not None else None)
         return rec
 
     def _held_output(self, out, t: int):

@@ -103,10 +103,12 @@ def _skey_digest(skey) -> str:
     return hashlib.sha1(repr(skey).encode()).hexdigest()[:12]
 
 
-# (kind, with_metrics) -> jitted fused scan program; the metrics variant
-# threads the [M] accumulator through the carry and stacks per-tick
-# metric rows into the ys, so it is a distinct XLA program
-_SCAN_CACHE: Dict[Tuple[str, bool], object] = {}
+# (kind, with_metrics, with_watch) -> jitted fused scan program; the
+# metrics variant threads the [M] accumulator through the carry and
+# stacks per-tick metric rows into the ys, the watch variant threads
+# the detector-state tuple and stacks per-tick anomaly statistics —
+# each combination is a distinct XLA program
+_SCAN_CACHE: Dict[Tuple[str, bool, bool], object] = {}
 
 # Columns of the in-scan metric rows ([T, M] in ys, cumulative [M] in
 # the carry), committed to the attached registry post-scan.
@@ -695,13 +697,11 @@ def _classify_kb(st: _Staged, scache, low0) -> None:
         ])
         cand_a = cand_a[cand_a >= 0]
         if np.unique(cand_a).size != cand_a.size:
-            raise _Fallback(
-                "affinity penalty slots have multiple writers")
+            raise _Fallback(FallbackReason.AFFINITY_SLOT_COLLISION)
         cand_p = np.concatenate([univ_p, st.ex_p])
         cand_p = cand_p[cand_p >= 0]
         if np.unique(cand_p).size != cand_p.size:
-            raise _Fallback(
-                "avoid penalty slots have multiple writers")
+            raise _Fallback(FallbackReason.AVOID_SLOT_COLLISION)
 
 
 # ---------------------------------------------------------------------------
@@ -709,8 +709,9 @@ def _classify_kb(st: _Staged, scache, low0) -> None:
 # ---------------------------------------------------------------------------
 
 
-def _scan_fn(kind: str, with_metrics: bool = False):
-    """Build (once per comm kind and metrics flag) the jitted
+def _scan_fn(kind: str, with_metrics: bool = False,
+             with_watch: bool = False):
+    """Build (once per comm kind and metrics/watch flags) the jitted
     whole-trace program: one ``lax.scan`` whose step is the ENTIRE
     decision tick — warm-start validation, the vmapped branch planner,
     ensemble pricing, the hysteresis/restart switch rule, emissions
@@ -722,8 +723,20 @@ def _scan_fn(kind: str, with_metrics: bool = False):
     fused XLA program, still zero host round-trips; the registry commit
     happens after the scan returns.  The default program carries zero
     extra arrays, so a disabled registry costs the fused path nothing.
+
+    ``with_watch=True`` threads the watchtower's detector state (EWMA
+    mean/var for ci and per-service energy, the CUSUM accumulators, the
+    tick count and budget counter — one nested tuple, lane order fixed
+    by :meth:`repro.obs.Watchtower.scan_carry`) as the LAST carry
+    element, and stacks the per-tick pre-threshold row
+    ``(z_ci[N], z_e[S], u, cpos_pre, cneg_pre, n_before, budget)`` as
+    the LAST ys element.  The detector lanes read the decision outputs
+    but never feed back, so decisions stay bit-identical to the
+    detached program; thresholding/alerting happens post-scan in
+    ``Watchtower.commit_scan``.  The detector constants travel in the
+    ``wconsts`` argument (``()`` when unused).
     """
-    fn = _SCAN_CACHE.get((kind, with_metrics))
+    fn = _SCAN_CACHE.get((kind, with_metrics, with_watch))
     if fn is not None:
         return fn
     import jax
@@ -738,7 +751,7 @@ def _scan_fn(kind: str, with_metrics: bool = False):
         single, in_axes=(0, 0, None, None) + (None,) * (5 + comm_argc + 14))
     i64, f64 = jnp.int64, jnp.float64
 
-    def fused(carry0, xs, consts):
+    def fused(carry0, xs, consts, wconsts):
         (stat_feas, cpu_req, ram_req, cpu_cap, ram_cap, must, cost,
          comm_static, money_w, pref_w, emission_w, green_pen, hyst_eff,
          horizon_h, migration_g, restart_g, max_steps, warm_en,
@@ -864,7 +877,7 @@ def _scan_fn(kind: str, with_metrics: bool = False):
                 return (carry, (jnp.asarray(False), zi, zi, zf, zf,
                                 jnp.asarray(False)))
 
-            core = carry[:4] if with_metrics else carry
+            core = carry[:4] if (with_metrics or with_watch) else carry
             placed_c, fcur_c, ncur_c, has_c = core
             # fault eviction BEFORE planning: a dead node takes its
             # services down with it — the incumbent shrinks now (so no
@@ -889,6 +902,7 @@ def _scan_fn(kind: str, with_metrics: bool = False):
                                 comp_n + commE_n * ci_now.mean(), zf)
             ys = (do_plan, wrj, switched, migs, rsts, mgc, sav,
                   placed2, f2, n2, has2, em_tick, n_evicted, emergency)
+            out_carry = carry2
             if with_metrics:
                 # [M] per-tick metric row (column order: SCAN_METRICS) —
                 # accumulated in-carry AND stacked per tick, all inside
@@ -897,13 +911,51 @@ def _scan_fn(kind: str, with_metrics: bool = False):
                     do_plan.astype(f64), wrj.astype(f64),
                     switched.astype(f64), migs.astype(f64),
                     rsts.astype(f64), mgc, sav, em_tick])
-                return (carry2 + (carry[4] + m,)), ys + (m,)
-            return carry2, ys
+                out_carry = out_carry + (carry[4] + m,)
+                ys = ys + (m,)
+            if with_watch:
+                # watchtower detector lanes: pure readers of the decision
+                # outputs (expression order is the contract with the
+                # numpy mirror in repro.obs.watch._ewma_update /
+                # Watchtower.observe_tick — keep them in lockstep)
+                (ci_m, ci_v, e_m, e_v, g_m, g_v,
+                 cpos, cneg, n_w, budget) = carry[-1]
+                alpha, eps, ck, ch = wconsts
+                # EWMA z on the truth carbon-intensity vector
+                d_ci = ci_now - ci_m
+                z_ci = d_ci / jnp.sqrt(ci_v + eps)
+                ci_m2 = ci_m + alpha * d_ci
+                ci_v2 = (1.0 - alpha) * (ci_v + alpha * d_ci * d_ci)
+                # EWMA z on per-service selected energy
+                e_sel = placed2 * E[s_ix, f2]
+                d_e = e_sel - e_m
+                z_e = d_e / jnp.sqrt(e_v + eps)
+                e_m2 = e_m + alpha * d_e
+                e_v2 = (1.0 - alpha) * (e_v + alpha * d_e * d_e)
+                # CUSUM on the standardized per-tick emissions total —
+                # pre-reset accumulators are stacked (so the post-scan
+                # threshold pass sees the peak), reset applies in-carry
+                d_g = em_tick - g_m
+                u = d_g / jnp.sqrt(g_v + eps)
+                g_m2 = g_m + alpha * d_g
+                g_v2 = (1.0 - alpha) * (g_v + alpha * d_g * d_g)
+                cpos_pre = jnp.maximum(0.0, cpos + u - ck)
+                cneg_pre = jnp.maximum(0.0, cneg - u - ck)
+                fired = (cpos_pre > ch) | (cneg_pre > ch)
+                cpos2 = jnp.where(fired, 0.0, cpos_pre)
+                cneg2 = jnp.where(fired, 0.0, cneg_pre)
+                budget2 = budget + (em_tick + mgc)
+                out_carry = out_carry + ((
+                    ci_m2, ci_v2, e_m2, e_v2, g_m2, g_v2,
+                    cpos2, cneg2, n_w + 1.0, budget2),)
+                ys = ys + ((z_ci, z_e, u, cpos_pre, cneg_pre,
+                            n_w, budget2),)
+            return out_carry, ys
 
         return lax.scan(step, carry0, xs)
 
     fn = jax.jit(fused)
-    _SCAN_CACHE[(kind, with_metrics)] = fn
+    _SCAN_CACHE[(kind, with_metrics, with_watch)] = fn
     return fn
 
 
@@ -922,7 +974,11 @@ def _commit(runtime, st: _Staged, carry_out, ys, start: int,
     T = st.T
     (did_plan, warm_rej, switched, migs, rsts, mig_g, sav,
      placed_y, f_y, n_y, has_y, _em_y, evicted_y, emerg_y) = ys[:14]
-    metrics = ys[14] if len(ys) > 14 else None
+    # the metric rows ride at ys[14] exactly when a registry is attached
+    # (with_metrics == obs is not None); a watch-only scan also has a
+    # 15th ys element — the detector row tuple — so length alone cannot
+    # distinguish the variants
+    metrics = ys[14] if obs is not None else None
 
     sig = ("megaloop", st.kind, T, st.B, st.S, st.F, st.N,
            st.xs[9].shape[1], metrics is not None)
@@ -1042,7 +1098,9 @@ def _commit_obs(runtime, st: _Staged, carry_out, ys, start: int,
 
     reg = obs.registry
     T = st.T
-    metrics = ys[14] if len(ys) > 14 else None
+    # obs is always attached here, so the metric rows always ride at
+    # ys[14] (a trailing watch row tuple may follow — never metrics)
+    metrics = ys[14]
     (did_plan, warm_rej, switched, migs, rsts, mig_g, sav,
      placed_y, f_y, n_y, has_y, _em_y, evicted_y, emerg_y) = ys[:14]
 
@@ -1261,10 +1319,16 @@ def run_scanned(runtime, start: int, ticks: int):
     if ticks <= 0:
         return ContinuumResult(
             ticks=[], final_assignment=dict(runtime.current or {}))
+    watch = getattr(runtime, "watch", None)
     gatherer = runtime.pipeline.gatherer
     saved = (gatherer.signal, gatherer.forecast)
     t0 = time.perf_counter()
     try:
+        if watch is not None and watch.armed:
+            # armed feedback (alert -> zone evacuation -> replan) is
+            # data-dependent control flow the staged scan cannot
+            # express; observe-mode watchers ride the scan natively
+            raise _Fallback(FallbackReason.WATCH_ARMED, tick=start)
         st = _stage(runtime, start, ticks)
     except _Fallback as fb:
         runtime.last_scanned_fallback = fb.reason
@@ -1289,20 +1353,37 @@ def run_scanned(runtime, start: int, ticks: int):
     from jax.experimental import enable_x64
 
     with_metrics = obs is not None
-    fn = _scan_fn(st.kind, with_metrics)
+    with_watch = watch is not None
+    fn = _scan_fn(st.kind, with_metrics, with_watch)
     carry0 = st.carry0
     if with_metrics:
         # metric accumulator rides the carry; zero host work per tick
         carry0 = carry0 + (np.zeros(len(SCAN_METRICS)),)
+    if with_watch:
+        # detector state rides LAST in the carry; the per-tick anomaly
+        # row is stacked as the last ys element
+        carry0 = carry0 + (watch.scan_carry(st.N, st.S),)
+    wconsts = watch.scan_consts() if with_watch else ()
     t1 = time.perf_counter()
     with enable_x64():
-        carry_out, ys = fn(carry0, st.xs, st.consts)
+        carry_out, ys = fn(carry0, st.xs, st.consts, wconsts)
         ys = jax.block_until_ready(ys)
     scan_s = time.perf_counter() - t1
-    ys = tuple(np.asarray(y) for y in ys)
-    carry_out = tuple(np.asarray(c) for c in carry_out)
+    wys = tuple(np.asarray(w) for w in ys[-1]) if with_watch else None
+    ys = tuple(np.asarray(y) for y in ys[:15 if with_metrics else 14])
+    wcarry = (tuple(np.asarray(c) for c in carry_out[-1])
+              if with_watch else None)
+    carry_out = tuple(
+        np.asarray(c) for c in
+        carry_out[:5 if with_metrics else 4])
     result = _commit(runtime, st, carry_out, ys, start, stage_s, scan_s,
                      obs=obs)
+    if with_watch:
+        # threshold the stacked detector statistics and replay
+        # liveness/freshness/SLO evaluation — same host code, same
+        # per-tick order as the eager observe_tick
+        watch.commit_scan(runtime, st, result.ticks, wys, wcarry,
+                          start, obs=obs)
     if obs is not None:
         t_end = time.perf_counter()
         tr = obs.tracer
@@ -1356,9 +1437,9 @@ def monte_carlo_emissions(runtime, start: int, ticks: int, ci_scales):
     axes = (None, None, None, None, None, None, None, 0, 0, None, 0,
             None)
     fn = _scan_fn(st.kind)
-    vfn = jax.vmap(fn, in_axes=(None, axes, None))
+    vfn = jax.vmap(fn, in_axes=(None, axes, None, None))
     with enable_x64():
-        _, ys = vfn(st.carry0, xs_m, st.consts)
+        _, ys = vfn(st.carry0, xs_m, st.consts, ())
         ys = jax.block_until_ready(ys)
     em = np.asarray(ys[11])          # [M, T] operational
     mig = np.asarray(ys[5])          # [M, T] migration/restart charges

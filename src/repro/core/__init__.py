@@ -1,5 +1,5 @@
 """Paper core: Green-aware Constraint Generator (public API re-exports)."""
-from .adapter import to_dicts, to_json, to_prolog
+from .adapter import KubernetesAdapter, to_dicts, to_json, to_kubernetes, to_prolog
 from .energy import (
     EnergyEstimator,
     EnergyMixGatherer,

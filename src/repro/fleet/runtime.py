@@ -139,6 +139,11 @@ class FleetRuntime:
     coupling: str = "waterfill"
     scheduler: Optional[GreenScheduler] = None
     obs: Optional[Observability] = field(default=None, repr=False)
+    # Green watchtower: per-tenant SLOs (slo.tenant == the FleetApp
+    # name) are priced off each tenant's accounted per-tick totals —
+    # the same values the shared ledger bills, so SLO budget spend is
+    # bit-equal to billing_report's per-tenant sums.
+    watch: Optional[object] = field(default=None, repr=False)
     max_batch: int = 256
 
     def __post_init__(self) -> None:
@@ -344,6 +349,10 @@ class FleetRuntime:
             self._runtimes[self.apps[0].name]._record_fault_events(
                 obs, t, sum(evicted.values()), any(emergency.values()),
                 self.placement_violations[viols_before:])
+        if self.watch is not None and self.apps:
+            self.watch.observe_fleet_tick(
+                t, records, ci_now,
+                registry=obs.registry if obs is not None else None)
         return FleetTickRecord(
             t=t, records=records, capacity=capacity,
             planned_capacity=fresult.capacity,

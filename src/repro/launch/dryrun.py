@@ -26,14 +26,23 @@ from repro.launch import hlo_analysis, hlo_cost
 from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.launch.plan import build_plan
 from repro.models.config import SHAPES, cell_is_supported
+from repro.obs import Tracer
 
 
 def run_cell(
     arch: str, shape: str, *, multi_pod: bool,
     tuning_overrides: Optional[Dict] = None,
     optimized: bool = False,
+    tracer: Optional[Tracer] = None,
 ) -> Dict:
-    """Lower + compile one cell; returns the dry-run record."""
+    """Lower + compile one cell; returns the dry-run record.
+
+    Pass an ``repro.obs.Tracer`` to get one ``dryrun.cell`` span per
+    cell with plan/lower/compile/analyze child spans — the same trace a
+    ``ContinuumRuntime`` run emits for the planner, so one timeline can
+    cover planner and model launch layer together."""
+    if tracer is None:
+        tracer = Tracer(enabled=False)
     cfg = ARCHS[arch]
     ok, why = cell_is_supported(cfg, SHAPES[shape])
     if not ok:
@@ -42,21 +51,27 @@ def run_cell(
             "status": "skipped", "reason": why,
         }
     t0 = time.time()
-    mesh = make_production_mesh(multi_pod=multi_pod)
-    plan = build_plan(arch, shape, multi_pod=multi_pod,
-                      tuning_overrides=tuning_overrides,
-                      optimized=optimized)
-    with mesh_context(mesh):
-        lowered = plan.lower()
-        compiled = lowered.compile()
-        mem = compiled.memory_analysis()
-        xla_cost = compiled.cost_analysis() or {}
-        if isinstance(xla_cost, (list, tuple)):  # jax 0.4.x: one dict per
-            xla_cost = xla_cost[0] if xla_cost else {}  # executable
-        # XLA's cost_analysis counts while bodies ONCE (scanned layers /
-        # microbatches would be undercounted ~100x); use the loop-aware
-        # HLO cost model instead.
-        totals = hlo_cost.analyze(compiled.as_text())
+    with tracer.span("dryrun.cell", arch=arch, shape=shape,
+                     multi_pod=multi_pod):
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with tracer.span("dryrun.plan"):
+            plan = build_plan(arch, shape, multi_pod=multi_pod,
+                              tuning_overrides=tuning_overrides,
+                              optimized=optimized)
+        with mesh_context(mesh):
+            with tracer.span("dryrun.lower"):
+                lowered = plan.lower()
+            with tracer.span("dryrun.compile"):
+                compiled = lowered.compile()
+            with tracer.span("dryrun.analyze"):
+                mem = compiled.memory_analysis()
+                xla_cost = compiled.cost_analysis() or {}
+                if isinstance(xla_cost, (list, tuple)):  # jax 0.4.x: one
+                    xla_cost = xla_cost[0] if xla_cost else {}  # dict per exe
+                # XLA's cost_analysis counts while bodies ONCE (scanned
+                # layers / microbatches would be undercounted ~100x); use
+                # the loop-aware HLO cost model instead.
+                totals = hlo_cost.analyze(compiled.as_text())
 
     roof = hlo_analysis.Roofline(
         flops=totals.flops,
@@ -104,7 +119,10 @@ def main() -> None:
     ap.add_argument("--optimized", action="store_true",
                     help="apply the §Perf OPTIMIZED_OVERRIDES per arch")
     ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write dryrun.* spans as JSONL here")
     args = ap.parse_args()
+    tracer = Tracer() if args.trace_out else None
 
     cells = []
     if args.all:
@@ -122,7 +140,7 @@ def main() -> None:
             label = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
             try:
                 rec = run_cell(arch, shape, multi_pod=mp,
-                               optimized=args.optimized)
+                               optimized=args.optimized, tracer=tracer)
             except Exception as e:  # a failure here is a bug in the system
                 failures += 1
                 rec = {
@@ -149,6 +167,9 @@ def main() -> None:
             if args.out:
                 with open(args.out, "a") as fh:
                     fh.write(json.dumps(rec) + "\n")
+    if tracer is not None:
+        with open(args.trace_out, "w") as fh:
+            fh.write(tracer.to_jsonl())
     if failures:
         raise SystemExit(f"{failures} cell(s) failed")
 

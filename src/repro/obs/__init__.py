@@ -46,10 +46,15 @@ from .registry import (
     REGISTRY,
     metrics_scope,
 )
+from .slo import SLO, AlertEvent, SLOEngine
 from .trace import Span, Tracer
+from .tsdb import SeriesRing, TimeSeriesStore
+from .watch import DetectorState, WatchConfig, Watchtower
 
 __all__ = [
+    "AlertEvent",
     "DEFAULT_BUCKETS",
+    "DetectorState",
     "EmissionsLedger",
     "HistogramData",
     "LedgerEntry",
@@ -57,8 +62,14 @@ __all__ = [
     "MetricsServer",
     "Observability",
     "REGISTRY",
+    "SLO",
+    "SLOEngine",
+    "SeriesRing",
     "Span",
+    "TimeSeriesStore",
     "Tracer",
+    "WatchConfig",
+    "Watchtower",
     "billing_report",
     "events_from_jsonl",
     "events_jsonl",

@@ -41,12 +41,24 @@ def _fmt(v: float) -> str:
     return repr(f)
 
 
+def _escape_label(v: str) -> str:
+    """Label-value escaping per the exposition format: backslash first,
+    then double-quote and newline."""
+    return str(v).replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _escape_help(text: str) -> str:
+    """HELP-line escaping: backslash and newline only (quotes are legal
+    in HELP text)."""
+    return str(text).replace("\\", "\\\\").replace("\n", "\\n")
+
+
 def _labels(key: Tuple, extra: Optional[List[Tuple[str, str]]] = None
             ) -> str:
     pairs = list(key) + (extra or [])
     if not pairs:
         return ""
-    body = ",".join(f'{k}="{v}"' for k, v in pairs)
+    body = ",".join(f'{k}="{_escape_label(v)}"' for k, v in pairs)
     return "{" + body + "}"
 
 
@@ -59,7 +71,7 @@ def prometheus_text(registry: MetricsRegistry) -> str:
     def type_line(name: str, kind: str, mangled: str) -> None:
         meta = registry.meta(name)
         if meta.get("help"):
-            lines.append(f"# HELP {mangled} {meta['help']}")
+            lines.append(f"# HELP {mangled} {_escape_help(meta['help'])}")
         lines.append(f"# TYPE {mangled} {kind}")
 
     by_name: Dict[str, List[Tuple[Tuple, float]]] = {}

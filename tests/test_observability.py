@@ -127,6 +127,9 @@ def _golden_registry() -> MetricsRegistry:
     reg.inc("planner.compile.misses", 2)
     reg.inc("lowering.path", 3, labels={"path": "delta"})
     reg.inc("lowering.path", 1, labels={"path": "full"})
+    # Label values that need exposition-format escaping.
+    reg.inc("watch.alerts", 1,
+            labels={"name": 'zone "wind\\north"\nline2'})
     reg.gauge("engine.candidates", 120)
     reg.describe("stage.plan_s", "histogram", help="plan stage seconds",
                  buckets=(0.01, 0.1, 1.0))
@@ -260,6 +263,36 @@ def test_scanned_disabled_obs_adds_zero_carry_arrays(monkeypatch):
     rt_on = _obs_runtime(app, infra, 8)
     rt_on.run_scanned(START, 8)
     assert (seen["carry"], seen["ys"]) == (5, 15)
+    # a watchtower appends ONE nested detector-state lane (and one
+    # stacked watch row) to the fused program, with or without the
+    # metrics accumulator — but commit still sees the core tuples only
+    # (the watch lanes are split off for watch.commit_scan)
+    from repro.obs import Watchtower
+    fused = {}
+    orig_fn = megaloop._scan_fn
+
+    def spy_fn(kind, with_metrics=False, with_watch=False):
+        fn = orig_fn(kind, with_metrics=with_metrics, with_watch=with_watch)
+
+        def wrapped(carry0, xs, consts, wconsts):
+            carry_out, ys = fn(carry0, xs, consts, wconsts)
+            fused["carry"] = len(carry_out)
+            fused["ys"] = len(ys)
+            return carry_out, ys
+        return wrapped
+
+    monkeypatch.setattr(megaloop, "_scan_fn", spy_fn)
+    rt_w = _runtime(app, infra, 8)
+    rt_w.watch = Watchtower()
+    rt_w.run_scanned(START, 8)
+    assert rt_w.last_scanned_fallback is None
+    assert (fused["carry"], fused["ys"]) == (5, 15)
+    assert (seen["carry"], seen["ys"]) == (4, 14)
+    rt_both = _obs_runtime(app, infra, 8)
+    rt_both.watch = Watchtower()
+    rt_both.run_scanned(START, 8)
+    assert (fused["carry"], fused["ys"]) == (6, 16)
+    assert (seen["carry"], seen["ys"]) == (5, 15)
 
 
 def test_drift_fallback_records_event_and_keeps_parity():
@@ -330,3 +363,104 @@ def test_ledger_cells_decompose_entries():
             total, r.emissions_g + r.migration_g, rtol=1e-12, atol=1e-9)
         kinds = {kind for _s, _f, _n, _z, kind, _g in cells}
         assert kinds <= {"comp", "comm", "migration"}
+
+
+# ---------------------------------------------------------------------------
+# Exposition hardening: label/HELP escaping
+# ---------------------------------------------------------------------------
+
+
+def test_prometheus_label_and_help_escaping():
+    from repro.obs.export import _escape_help, _escape_label
+    assert _escape_label('a\\b"c\nd') == 'a\\\\b\\"c\\nd'
+    # backslash escaped first: an already-escaped-looking value doubles
+    assert _escape_label("\\n") == "\\\\n"
+    assert _escape_help("line1\nline2 \\x") == "line1\\nline2 \\\\x"
+    reg = MetricsRegistry()
+    reg.describe("weird", "counter", help="multi\nline help")
+    reg.inc("weird", 2, labels={"zone": 'wind "north"\nplus\\more'})
+    text = prometheus_text(reg)
+    assert '# HELP repro_weird_total multi\\nline help' in text
+    assert 'zone="wind \\"north\\"\\nplus\\\\more"' in text
+    # every emitted line is a single exposition line (no raw newlines
+    # smuggled through label values or help text)
+    assert all(ln.startswith(("#", "repro_")) for ln in text.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# ContinuumResult JSONL round-trip under faults (fallbacks + emergency
+# migrations in the ledger)
+# ---------------------------------------------------------------------------
+
+
+def test_jsonl_round_trip_carries_fault_events_and_emergency_ledger():
+    """A faulty scanned run that (a) takes the structured capacity-derate
+    fallback and (b) emergency-migrates stranded services must round-trip
+    through to_jsonl/from_jsonl bit-exactly, with the eviction fields and
+    the emergency migration charges intact."""
+    from repro.continuum.loop import FallbackReason
+    from repro.faults import FaultEvent, FaultTrace
+
+    app, infra = _scenario(n_services=6)
+    ticks = 16
+    node_ids = [n.node_id for n in infra.nodes]
+    regions = ("solar-south", "wind-north", "coal-east")
+    ft = FaultTrace.from_events(node_ids, regions, START + ticks, [
+        FaultEvent("node_outage", "wind-north-0", START + 6, 4),
+        FaultEvent("capacity_derate", "wind-north-1", START + 8, 3, 0.5),
+    ])
+    rt = _obs_runtime(app, infra, ticks, faults=ft)
+    res = rt.run_scanned(START, ticks)
+
+    # the run really exercised both machineries
+    [ev] = rt.scanned_fallbacks
+    assert isinstance(ev, FallbackEvent)
+    assert ev.reason is FallbackReason.FAULT_CAPACITY_DERATE
+    assert any(r.evicted > 0 for r in res.ticks)
+    assert any(r.emergency for r in res.ticks)
+    emergency_ticks = {r.t for r in res.ticks if r.emergency}
+    mig_entries = [e for e in rt.obs.ledger.entries
+                   if e.t in emergency_ticks and e.moved > 0]
+    assert mig_entries, "emergency migrations must be billed in the ledger"
+    for e in mig_entries:
+        assert any(kind == "migration" for *_k, kind, _g in e.cells())
+
+    back = ContinuumResult.from_jsonl(res.to_jsonl())
+    assert back.final_assignment == res.final_assignment
+    assert len(back.ticks) == len(res.ticks)
+    for orig, rt_rec in zip(res.ticks, back.ticks):
+        assert dataclasses.asdict(orig) == dataclasses.asdict(rt_rec)
+    # eviction/emergency telemetry survived the trip
+    assert [r.evicted for r in back.ticks] == [r.evicted for r in res.ticks]
+    assert any(r.emergency for r in back.ticks)
+
+
+# ---------------------------------------------------------------------------
+# Launch-layer tracing: dryrun + roofline spans
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_run_emits_spans_and_dryrun_takes_a_tracer(tmp_path):
+    import inspect
+
+    import benchmarks.roofline as roofline
+    from repro.launch.dryrun import run_cell
+
+    # one planner + launch-layer timeline: dryrun.run_cell accepts the
+    # same Tracer roofline.run does (compiling a cell is too heavy for
+    # unit tests, so the dryrun side is a signature/span-name contract)
+    assert "tracer" in inspect.signature(run_cell).parameters
+
+    path = tmp_path / "dryrun.jsonl"
+    path.write_text(json.dumps({
+        "arch": "a", "shape": "s", "multi_pod": False, "status": "skipped",
+        "reason": "x"}) + "\n")
+    tr = Tracer()
+    out = roofline.run(report=lambda *_: None, path=str(path), tracer=tr)
+    assert out["cells"] == 0 and out["skipped"] == 1
+    [table] = tr.by_name("roofline.table")
+    [load] = tr.by_name("roofline.load")
+    assert load.parent == table.span_id
+    assert load.attrs["path"] == str(path)
+    # a disabled tracer records nothing (the default no-tracer path)
+    assert roofline.run(report=lambda *_: None, path=str(path))["skipped"] == 1

@@ -1,0 +1,449 @@
+"""Green watchtower: tsdb rings, SLO burn rates, streaming detectors.
+
+The load-bearing claims, in test form:
+
+* **observe mode is a pure tap** — decisions, budgets, and detector
+  state are bit-identical between a watched and a detached run, on both
+  the eager loop and the fused scan, and the scanned alert stream
+  matches the eager one tick for tick;
+* **seeded faults alert on time** — liveness/freshness edges fire at
+  exactly the fault's start tick, once per event;
+* **per-tenant SLO budgets price off the ledger** — a tenant-scoped
+  ``carbon_budget`` SLO's ``spent`` equals that tenant's
+  ``billing_report`` bill bitwise;
+* **armed mode closes the loop** — a flagged zone is evacuated through
+  the same emergency machinery a fault outage uses, and ``run_scanned``
+  falls back loudly (``FallbackReason.WATCH_ARMED``) rather than
+  silently dropping the feedback.
+"""
+import types
+
+import numpy as np
+import pytest
+
+from test_megaloop import START, _runtime, _scenario
+
+from repro.continuum import (
+    CarbonTrace,
+    FallbackReason,
+    REGION_PRESETS,
+    RuntimeConfig,
+    WorkloadTrace,
+)
+from repro.faults import FaultEvent, FaultTrace
+from repro.fleet import FleetApp, FleetRuntime
+from repro.obs import (
+    Observability,
+    SLO,
+    SLOEngine,
+    Watchtower,
+    WatchConfig,
+    billing_report,
+)
+from repro.obs.registry import MetricsRegistry
+from repro.obs.tsdb import SeriesRing, TimeSeriesStore
+
+REGIONS = ("solar-south", "wind-north", "coal-east")
+
+
+# ---------------------------------------------------------------------------
+# tsdb: rings and the store
+# ---------------------------------------------------------------------------
+
+
+def test_series_ring_wraps_oldest_first():
+    r = SeriesRing(capacity=4)
+    for t in range(10):
+        r.append(t, float(t) * 2.0)
+    assert len(r) == 4
+    assert r.ts.tolist() == [6, 7, 8, 9]
+    assert r.values.tolist() == [12.0, 14.0, 16.0, 18.0]
+    assert r.last(2).tolist() == [16.0, 18.0]
+    # asking for more than stored returns everything, oldest..newest
+    assert r.last(99).tolist() == [12.0, 14.0, 16.0, 18.0]
+
+
+def test_series_ring_pins_vector_shape():
+    r = SeriesRing(capacity=8)
+    r.append(0, np.arange(3, dtype=np.float64))
+    r.append(1, np.ones(3))
+    assert r.values.shape == (2, 3)
+    with pytest.raises(ValueError, match="pinned"):
+        r.append(2, np.ones(4))
+    with pytest.raises(ValueError, match="capacity"):
+        SeriesRing(capacity=0)
+
+
+def test_store_labels_and_registry_capture():
+    s = TimeSeriesStore(capacity=16)
+    # label dict ordering must not split the series
+    a = s.series("burn", labels={"slo": "x", "tenant": "t0"})
+    b = s.series("burn", labels={"tenant": "t0", "slo": "x"})
+    assert a is b
+    s.record("burn", 5, 1.5, labels={"tenant": "t0", "slo": "x"})
+    assert a.values.tolist() == [1.5]
+    # unknown series reads as an empty window, not a KeyError
+    assert s.window("nope", 4).size == 0
+    assert s.window("burn", 4, labels={"slo": "x", "tenant": "t0"}
+                    ).tolist() == [1.5]
+
+    reg = MetricsRegistry()
+    reg.inc("ticks", 3)
+    reg.gauge("emissions_g", 41.5)
+    s.capture_registry(7, reg)
+    assert "counter.ticks" in s.names()
+    assert s.window("counter.ticks", 1).tolist() == [3.0]
+    assert s.window("gauge.emissions_g", 1).tolist() == [41.5]
+
+
+# ---------------------------------------------------------------------------
+# SLO engine: validation + burn-rate semantics
+# ---------------------------------------------------------------------------
+
+
+def test_slo_validation():
+    with pytest.raises(ValueError, match="unknown SLO kind"):
+        SLO("x", "latency", 1.0)
+    with pytest.raises(ValueError, match="target"):
+        SLO("x", "carbon_budget", 0.0)
+    with pytest.raises(ValueError, match="fast_window_h"):
+        SLO("x", "carbon_budget", 1.0, fast_window_h=4, slow_window_h=2)
+    with pytest.raises(ValueError, match="window_h"):
+        SLO("x", "carbon_budget", 1.0, window_h=0)
+    with pytest.raises(ValueError, match="unique"):
+        SLOEngine([SLO("x", "carbon_budget", 1.0),
+                   SLO("x", "churn_limit", 2.0)])
+    with pytest.raises(ValueError, match="mode"):
+        WatchConfig(mode="panic")
+    with pytest.raises(ValueError, match="ewma_alpha"):
+        WatchConfig(ewma_alpha=1.0)
+
+
+def test_slo_burn_rate_suppresses_blips_fires_edges_and_rearms():
+    # rate_target = 24 g / 24 h = 1 g/tick; both windows must burn >= 2.5x
+    eng = SLOEngine([SLO("budget", "carbon_budget", target=24.0,
+                         window_h=24, fast_window_h=1, slow_window_h=3,
+                         burn_threshold=2.5)])
+    fired = []
+    for t, g in enumerate([0.5, 0.5, 0.5, 5.0, 5.0, 5.0, 0.1, 5.0]):
+        fired += eng.observe(t, consumption_g=g)
+    # t=3 is a single-tick blip: fast=5.0 but slow=(0.5+0.5+5)/3=2.0 —
+    # suppressed.  t=4 confirms (slow=3.5): ONE edge alert, not one per
+    # firing tick.  t=6 drops the burn and re-arms; t=7 fires again.
+    assert [a.t for a in fired] == [4, 7]
+    assert all(a.name == "slo_burn" and a.source == "slo" for a in fired)
+    assert fired[0].target == "budget"
+    assert fired[0].value == pytest.approx(3.5)  # min(fast, slow)
+    # spent is the plain ordered sum of consumption
+    assert eng.spent("budget") == 0.5 + 0.5 + 0.5 + 5.0 + 5.0 + 5.0 + 0.1 + 5.0
+    fast, slow = eng.burn_rates("budget")
+    assert fast == pytest.approx(5.0)
+    assert slow == pytest.approx((5.0 + 0.1 + 5.0) / 3)
+
+
+def test_slo_kinds_price_the_right_sample():
+    eng = SLOEngine([
+        SLO("churn", "churn_limit", target=24.0, window_h=24,
+            slow_window_h=1),
+        SLO("ci", "intensity_ceiling", target=300.0, slow_window_h=1),
+    ])
+    eng.observe(0, consumption_g=999.0, ci_mean=450.0, migrations=2)
+    assert eng.burn_rates("churn")[0] == pytest.approx(2.0)   # 2 / (24/24)
+    assert eng.burn_rates("ci")[0] == pytest.approx(1.5)      # 450 / 300
+    # tenant-scoped SLOs only see their tenant's samples
+    scoped = SLOEngine([SLO("t1-budget", "carbon_budget", target=10.0,
+                            tenant="t1")])
+    scoped.observe(0, consumption_g=5.0, tenant="")
+    scoped.observe(0, consumption_g=3.0, tenant="t1")
+    assert scoped.spent("t1-budget") == 3.0
+    assert scoped.for_tenant("t1") == (scoped.slos[0],)
+
+
+# ---------------------------------------------------------------------------
+# CUSUM: sustained level shifts that single-tick z-scores miss
+# ---------------------------------------------------------------------------
+
+
+def test_cusum_flags_sustained_emissions_shift():
+    w = Watchtower()
+    low = types.SimpleNamespace(
+        E=np.full((3, 2), 0.5), node_ids=("n0", "n1"),
+        service_ids=("s0", "s1", "s2"))
+    ci = np.array([100.0, 100.0])
+
+    def rec(g):
+        return types.SimpleNamespace(emissions_g=g, migration_g=0.0,
+                                     migrations=0)
+
+    # 30 ticks at a dead-flat level: variance decays, detectors quiet
+    for t in range(30):
+        assert w.observe_tick(t, rec(100.0), low, None, None, ci) == []
+    # ...then the ledger steps up and STAYS up: CUSUM fires on the shift
+    alerts = w.observe_tick(30, rec(200.0), low, None, None, ci)
+    assert [a.name for a in alerts] == ["emissions_drift"]
+    assert alerts[0].source == "cusum"
+    assert alerts[0].value > w.config.cusum_h
+    # the accumulator reset with the alert — the same level does not
+    # re-fire on the very next tick
+    assert w.observe_tick(31, rec(200.0), low, None, None, ci) == []
+    assert w.budget_spent_g == pytest.approx(100.0 * 30 + 200.0 * 2)
+    assert w.report()["by_name"] == {"emissions_drift": 1}
+
+
+# ---------------------------------------------------------------------------
+# observe mode: bit-parity across eager / scanned / detached
+# ---------------------------------------------------------------------------
+
+
+def _decisions(res):
+    return [(r.t, r.emissions_g, r.migration_g, r.migrations, r.switched)
+            for r in res.ticks]
+
+
+def _alert_sig(watch):
+    return [(a.t, a.name, a.source, a.target, a.zone) for a in watch.alerts]
+
+
+def test_watched_runs_are_bit_identical_to_detached_on_both_paths():
+    app, infra = _scenario(n_services=6)
+    ticks = 18
+
+    rt_plain = _runtime(app, infra, ticks)
+    base = _decisions(rt_plain.run(START, ticks))
+
+    rt_e = _runtime(app, infra, ticks)
+    rt_e.watch = Watchtower(slos=[SLO("run-budget", "carbon_budget",
+                                      target=1e9, window_h=24)])
+    res_e = rt_e.run(START, ticks)
+    assert _decisions(res_e) == base
+
+    rt_s = _runtime(app, infra, ticks)
+    rt_s.watch = Watchtower(slos=[SLO("run-budget", "carbon_budget",
+                                      target=1e9, window_h=24)])
+    res_s = rt_s.run_scanned(START, ticks)
+    assert rt_s.last_scanned_fallback is None
+    assert _decisions(res_s) == base
+
+    # alert streams match tick for tick
+    assert _alert_sig(rt_s.watch) == _alert_sig(rt_e.watch)
+
+    # the budget lane is the plain ordered sum the eager loop computes
+    acc = 0.0
+    for r in res_e.ticks:
+        acc = acc + (r.emissions_g + r.migration_g)
+    assert rt_e.watch.budget_spent_g == acc
+    assert rt_s.watch.budget_spent_g == acc
+    assert rt_e.watch.slo.spent("run-budget") == acc
+
+    # the final in-scan detector carry matches the eager host state —
+    # tick count and budget exactly; the EWMA/CUSUM floats to ulp
+    # precision (XLA may contract the mul-add chains differently from
+    # numpy, which never moves an alert threshold)
+    se, ss = rt_e.watch._state, rt_s.watch._state
+    assert (se.n, se.budget) == (ss.n, ss.budget)
+    for lane in ("ci_mean", "ci_var", "e_mean", "e_var",
+                 "g_mean", "g_var", "cpos", "cneg"):
+        np.testing.assert_allclose(
+            getattr(se, lane), getattr(ss, lane), rtol=1e-12, atol=1e-12,
+            err_msg=lane)
+
+    # the store kept per-tick history for every core series
+    for name in ("tick.emissions_g", "ci.mean", "ci.now", "watch.budget_g",
+                 "slo.burn_fast"):
+        assert name in rt_e.watch.store.names()
+    assert rt_e.watch.store.window("tick.emissions_g", ticks).tolist() == [
+        r.emissions_g for r in res_e.ticks]
+
+
+# ---------------------------------------------------------------------------
+# seeded faults -> alerts at the fault's start tick
+# ---------------------------------------------------------------------------
+
+
+def test_fault_edges_alert_at_their_start_tick_exactly_once():
+    app, infra = _scenario(n_services=6)
+    ticks = 28
+    node_ids = [n.node_id for n in infra.nodes]
+    events = [
+        FaultEvent("node_outage", "wind-north-0", START + 8, 6),
+        FaultEvent("zone_blackout", "wind-north", START + 12, 5),
+        FaultEvent("telemetry_dropout", "", START + 20, 2),
+    ]
+    ft = FaultTrace.from_events(node_ids, REGIONS, START + ticks, events)
+    rt = _runtime(app, infra, ticks, faults=ft)
+    rt.watch = Watchtower()
+    rt.run(START, ticks)
+
+    by = {}
+    for a in rt.watch.alerts:
+        by.setdefault((a.name, a.target), []).append(a.t)
+    # liveness/freshness edges: exactly one alert, at the start tick
+    assert by[("node_down", "wind-north-0")] == [START + 8]
+    assert by[("feed_stale", "wind-north")] == [START + 12]
+    assert by[("telemetry_stale", "")] == [START + 20]
+    # a blackout darkens the FEED, not the nodes: no spurious node_down
+    assert ("node_down", "wind-north-1") not in by
+
+    # the scanned replay reconstructs the same edges from the carry
+    rt_s = _runtime(app, infra, ticks, faults=ft)
+    rt_s.watch = Watchtower()
+    rt_s.run_scanned(START, ticks)
+    assert rt_s.last_scanned_fallback is None
+    assert _alert_sig(rt_s.watch) == _alert_sig(rt.watch)
+
+
+# ---------------------------------------------------------------------------
+# fleet: tenant-scoped SLO budgets == billing_report, bitwise
+# ---------------------------------------------------------------------------
+
+
+def _tenant_app(tag, n_services):
+    from repro.core.types import (
+        Application, CommunicationLink, Flavour, FlavourRequirements,
+        Service)
+    services = tuple(
+        Service(f"{tag}-svc{i}", flavours=(
+            Flavour("large", FlavourRequirements(cpu=2.0, ram_gb=4.0)),
+            Flavour("small", FlavourRequirements(cpu=1.0, ram_gb=2.0)),
+        )) for i in range(n_services))
+    links = (CommunicationLink(f"{tag}-svc0", f"{tag}-svc1"),)
+    return Application(tag, services, links)
+
+
+def test_fleet_tenant_slo_budgets_bill_bitwise():
+    from repro.core.types import Infrastructure, Node, NodeCapabilities
+    nodes = tuple(
+        Node(f"{r}-{k}", region=r, cost_per_cpu_hour=0.5,
+             capabilities=NodeCapabilities(cpu=8.0, ram_gb=32.0))
+        for r in REGIONS for k in range(2))
+    infra = Infrastructure("shared", nodes)
+    carbon = CarbonTrace(REGION_PRESETS, hours=24, seed=3)
+    obs = Observability()
+    fas = [
+        FleetApp(f"tenant{i}", _tenant_app(f"t{i}", 3 + i),
+                 WorkloadTrace(_tenant_app(f"t{i}", 3 + i),
+                               seed=i, noise=0.0),
+                 priority=float(3 - i))
+        for i in range(3)]
+    watch = Watchtower(slos=(
+        [SLO(f"tenant{i}-budget", "carbon_budget", target=1e9,
+             window_h=24, tenant=f"tenant{i}") for i in range(3)]
+        + [SLO("fleet-budget", "carbon_budget", target=1e9, window_h=24)]))
+    frt = FleetRuntime(fas, infra, carbon,
+                       config=RuntimeConfig(horizon_h=4),
+                       coupling="waterfill", obs=obs, watch=watch)
+    res = frt.run(0, 3)
+
+    rep = billing_report(obs.ledger)
+    for fa in fas:
+        # SLO spend == the tenant's ledger bill == the tenant's accounted
+        # per-tick totals — all three the same ordered float sum
+        acct = sum(t.emissions_g + t.migration_g
+                   for t in res.results[fa.name].ticks)
+        assert watch.slo.spent(f"{fa.name}-budget") == rep[fa.name]["total"]
+        assert watch.slo.spent(f"{fa.name}-budget") == acct
+    # ...and the fleet-wide SLO saw every tenant's consumption
+    assert watch.slo.spent("fleet-budget") == pytest.approx(
+        sum(rep[fa.name]["total"] for fa in fas))
+    assert "fleet.consumption_g" in watch.store.names()
+
+
+# ---------------------------------------------------------------------------
+# armed mode: alerts feed back into planning
+# ---------------------------------------------------------------------------
+
+
+class _SpikedCarbon:
+    """Delegate to a real CarbonTrace but spike one zone's truth CI for
+    a single tick — enough to trip the EWMA detector, gone by the time
+    the evacuation window opens (so any behaviour change is the
+    watchtower's doing, not the planner reacting to the spike)."""
+
+    def __init__(self, base, zone, at_t, factor=20.0):
+        self._base = base
+        self._zone = zone
+        self._at = at_t
+        self._factor = factor
+
+    def __getattr__(self, name):
+        return getattr(self._base, name)
+
+    def now(self, node_regions, t):
+        ci = np.asarray(self._base.now(node_regions, t), dtype=float).copy()
+        if t == self._at:
+            mask = np.array([z == self._zone for z in node_regions])
+            ci[mask] *= self._factor
+        return ci
+
+
+def _armed_runtime(app, infra, ticks, spike_t):
+    rt = _runtime(app, infra, ticks)
+    rt.carbon = _SpikedCarbon(rt.carbon, "wind-north", spike_t)
+    return rt
+
+
+def test_armed_watchtower_evacuates_the_flagged_zone():
+    app, infra = _scenario(n_services=6)
+    ticks = 24
+    # past the detector warmup AND a tick where the incumbent sits on
+    # wind-north (planning prices forecasts, not ``now``, so the spike
+    # itself never chases the planner off the zone)
+    spike_t = START + 18
+
+    # observe-mode twin: sees the same spike, changes nothing
+    rt_obs = _armed_runtime(app, infra, ticks, spike_t)
+    rt_obs.watch = Watchtower(WatchConfig(mode="observe"))
+    res_obs = rt_obs.run(START, ticks)
+
+    rt = _armed_runtime(app, infra, ticks, spike_t)
+    rt.watch = Watchtower(WatchConfig(mode="arm"))
+    res = rt.run(START, ticks)
+
+    spikes = [a for a in rt.watch.alerts if a.name == "ci_anomaly"]
+    assert spikes and all(a.t == spike_t for a in spikes)
+    assert all(a.zone == "wind-north" for a in spikes)
+    # observe-mode twin saw the identical anomaly but kept hands off
+    assert [a.t for a in rt_obs.watch.alerts if a.name == "ci_anomaly"] \
+        == [a.t for a in spikes]
+
+    # evacuation window opens the NEXT tick and holds
+    hold = rt.watch.config.evacuate_hold_h
+    assert rt.watch.evacuated_zones(spike_t) == set()
+    for dt in range(1, hold + 1):
+        assert rt.watch.evacuated_zones(spike_t + dt) == {"wind-north"}
+    assert rt.watch.evacuated_zones(spike_t + hold + 1) == set()
+
+    # the planner parks on wind-north (lowest CI), so evacuation must
+    # strand services -> same-tick eviction + emergency replan
+    evac_tick = next(r for r in res.ticks if r.t == spike_t + 1)
+    assert evac_tick.evicted > 0 and evac_tick.emergency
+    assert evac_tick.switched
+    assert rt.placement_violations == []
+    # feedback changed real decisions vs the observe twin
+    assert _decisions(res) != _decisions(res_obs)
+    # ...while the observe twin never evicted anything
+    assert all(r.evicted == 0 for r in res_obs.ticks)
+
+
+def test_scanned_armed_falls_back_loudly_and_matches_eager():
+    app, infra = _scenario(n_services=6)
+    ticks = 24
+    spike_t = START + 18
+
+    rt_e = _armed_runtime(app, infra, ticks, spike_t)
+    rt_e.watch = Watchtower(WatchConfig(mode="arm"))
+    res_e = rt_e.run(START, ticks)
+
+    rt_s = _armed_runtime(app, infra, ticks, spike_t)
+    rt_s.watch = Watchtower(WatchConfig(mode="arm"))
+    rt_s.obs = Observability()
+    res_s = rt_s.run_scanned(START, ticks)
+
+    assert len(rt_s.scanned_fallbacks) == 1
+    ev = rt_s.scanned_fallbacks[0]
+    assert ev.reason is FallbackReason.WATCH_ARMED
+    assert rt_s.last_scanned_fallback == FallbackReason.WATCH_ARMED
+    # the eager replay is the real thing: identical decisions + alerts
+    assert _decisions(res_s) == _decisions(res_e)
+    assert _alert_sig(rt_s.watch) == _alert_sig(rt_e.watch)
+    assert any(r.evicted > 0 for r in res_s.ticks)
